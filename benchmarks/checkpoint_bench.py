@@ -1,0 +1,79 @@
+"""Checkpoint-engine benchmark: the paper's recommendations as a
+checkpoint planner, measured end-to-end on the device model.
+
+Compares policy variants on a synthetic multi-host checkpoint:
+  * paper-faithful  — R1..R5 as written (1 MiB appends, QD4, 1 zone,
+    bin-packed, GC concurrent)
+  * naive-small-io  — 4 KiB appends at QD1 (violates R2)
+  * finish-happy    — finishes every zone after writing (violates R3)
+  * write-qd1       — sequential writes instead of appends (host-side
+    ordering; limits concurrency per zone to 1)
+plus the beyond-paper tuned variant used by the framework.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KiB, MiB, LatencyModel, OpType, ThroughputModel
+from repro.runtime.zns_store import ZnsHostDevice
+
+from .common import timed
+
+CKPT_BYTES_PER_HOST = 8 * 1024 * MiB   # 8 GiB/host shard (405B-class / 512)
+
+
+def _policy_time(stripe, qd, zones, *, finish_every_zone=False,
+                 use_write=False):
+    dev = ZnsHostDevice(0, stripe_bytes=stripe, append_qd=qd,
+                        concurrent_zones=zones)
+    lm = dev.lat
+    tm = dev.tm
+    if use_write:
+        bw = tm.steady_state(OpType.WRITE, stripe, zones=max(zones, 1)
+                             ).bandwidth_bytes
+        t = CKPT_BYTES_PER_HOST / bw
+        n_req = CKPT_BYTES_PER_HOST // stripe
+    else:
+        t, n_req = dev.simulate_payload_write(CKPT_BYTES_PER_HOST)
+    if finish_every_zone:
+        nz = int(np.ceil(CKPT_BYTES_PER_HOST / dev.spec.zone_cap_bytes))
+        # the final zone is partially full; paper Fig 5b cost
+        frac = (CKPT_BYTES_PER_HOST % dev.spec.zone_cap_bytes) \
+            / dev.spec.zone_cap_bytes
+        t += float(lm.finish_us(frac)) / 1e6
+        t += (nz - 1) * float(lm.finish_us(0.999)) / 1e6
+    t += dev.manifest_write_us() / 1e6
+    return t, n_req
+
+
+def run():
+    rows = []
+    policies = {
+        "paper_faithful_R1-R5": dict(stripe=1 * MiB, qd=4, zones=1),
+        "naive_small_io": dict(stripe=4 * KiB, qd=1, zones=1),
+        "finish_happy": dict(stripe=1 * MiB, qd=4, zones=1,
+                             finish_every_zone=True),
+        "write_qd1_per_zone": dict(stripe=1 * MiB, qd=1, zones=1,
+                                   use_write=True),
+        "beyond_paper_tuned": dict(stripe=4 * MiB, qd=4, zones=2),
+    }
+    for name, kw in policies.items():
+        (t, n_req), us = timed(lambda kw=kw: _policy_time(**kw), repeats=1)
+        rows.append((
+            f"ckpt/{name}", us,
+            f"wall_s={t:.2f};bw_mibs={CKPT_BYTES_PER_HOST / t / MiB:.0f};"
+            f"requests={n_req}"))
+    # reclaim cost: resetting one expired checkpoint's zones under I/O
+    dev = ZnsHostDevice(0)
+    entries = dev.plan(CKPT_BYTES_PER_HOST)
+    dev.apply_writes(entries)
+    full = [e.zone for e in entries
+            if dev.zm.state(e.zone).name == "FULL"]
+    dev.schedule_reset(full)
+    import time
+    t0 = time.perf_counter()
+    gc_s = dev.run_gc(concurrent_io=True)       # stateful: no warmup call
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("ckpt/gc_reclaim", us,
+                 f"reset_s={gc_s:.3f};zones={len(full)}"))
+    return rows

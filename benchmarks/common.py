@@ -1,0 +1,29 @@
+"""Benchmark harness helpers.
+
+Every benchmark module exposes ``run() -> list[Row]``; a Row is
+(name, us_per_call, derived) where ``derived`` is a short string of the
+figure-relevant derived quantity (IOPS, MiB/s, percentile, ...).
+run.py prints them all as CSV.
+"""
+from __future__ import annotations
+
+import time
+
+Row = tuple  # (name: str, us_per_call: float, derived: str)
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Wall-time a callable; returns (result, us_per_call)."""
+    fn(*args, **kwargs)  # warmup (jit etc.)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def fmt_rows(rows) -> str:
+    lines = ["name,us_per_call,derived"]
+    for name, us, derived in rows:
+        lines.append(f"{name},{us:.3f},{derived}")
+    return "\n".join(lines)

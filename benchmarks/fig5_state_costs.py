@@ -1,0 +1,53 @@
+"""Fig. 5: reset/finish latency vs zone occupancy (Obs#9/#10).
+
+Paper anchors: reset 11.60 ms @50%, 16.19 ms @100%; finished-zone reset
+26.58% cheaper @50%; finish 907.51 ms @<0.1% -> 3.07 ms @100%; open
+9.56 us / close 11.01 us; implicit-open penalties 2.02/2.83 us.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LatencyModel, OpType, simulate
+from repro.core.workloads import finish_sweep, reset_sweep
+
+from .common import timed
+
+
+OCCS = (0.0, 0.0005, 0.0625, 0.125, 0.25, 0.5, 1.0)
+
+
+def run():
+    lm = LatencyModel()
+    rows = []
+    rows.append(("fig5/open", 0.0, f"latency_us={lm.open_us():.2f}"))
+    rows.append(("fig5/close", 0.0, f"latency_us={lm.close_us():.2f}"))
+    rows.append(("fig5/implicit_write_penalty", 0.0,
+                 f"us={lm.implicit_open_penalty_us(OpType.WRITE):.2f}"))
+    rows.append(("fig5/implicit_append_penalty", 0.0,
+                 f"us={lm.implicit_open_penalty_us(OpType.APPEND):.2f}"))
+    # Fig 5a: reset latency sweep via the event engine
+    tr = reset_sweep(OCCS, finished_first=False, n_per_level=40)
+    (res,), us = timed(lambda: (simulate(tr, seed=1),), repeats=1)
+    lat = (res.complete - res.start) / 1e3
+    for occ in OCCS:
+        sel = np.isclose(tr.occupancy, occ) & (tr.op == OpType.RESET)
+        rows.append((f"fig5a/reset/occ{occ:g}", us / len(tr),
+                     f"ms={float(np.mean(lat[sel])):.2f}"))
+    # finished-then-reset variant
+    tr2 = reset_sweep(OCCS, finished_first=True, n_per_level=40)
+    res2 = simulate(tr2, seed=2)
+    lat2 = (res2.complete - res2.start) / 1e3
+    sel = (tr2.op == OpType.RESET) & np.isclose(tr2.occupancy, 0.5)
+    rows.append(("fig5a/reset_finished/occ0.5", 0.0,
+                 f"ms={float(np.mean(lat2[sel])):.2f} (26.58% below plain)"))
+    # Fig 5b: finish latency sweep
+    tr3 = finish_sweep((0.001, 0.0625, 0.125, 0.25, 0.5, 0.999),
+                       n_per_level=40)
+    res3 = simulate(tr3, seed=3)
+    lat3 = (res3.complete - res3.start) / 1e3
+    for occ in (0.001, 0.0625, 0.125, 0.25, 0.5, 0.999):
+        sel = np.isclose(tr3.occupancy, occ) & (tr3.op == OpType.FINISH)
+        rows.append((f"fig5b/finish/occ{occ:g}", 0.0,
+                     f"ms={float(np.mean(lat3[sel])):.2f}"))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 8 (appendix): throughput/latency trade-off vs queue depth for
+append (SPDK, intra-zone) and write (io_uring + mq-deadline, intra-zone).
+
+Paper claims: append latency grows slower than write latency until a
+threshold (~QD4); past it the trends match; appends should be issued at
+low QD for latency.
+"""
+from __future__ import annotations
+
+from repro.core import KiB, OpType, Stack, ThroughputModel
+
+from .common import timed
+
+
+def run():
+    tm = ThroughputModel()
+    rows = []
+    for size_k in (4, 16, 32):
+        for qd in (1, 2, 4, 8, 16):
+            a = tm.steady_state(OpType.APPEND, size_k * KiB, qd=qd)
+            w = tm.steady_state(OpType.WRITE, size_k * KiB, qd=qd,
+                                stack=Stack.KERNEL_MQ_DEADLINE)
+            rows.append((
+                f"fig8/{size_k}KiB/qd{qd}", 0.0,
+                f"append_kiops={a.iops/1e3:.0f};append_lat_us={a.mean_latency_us:.1f};"
+                f"write_kiops={w.iops/1e3:.0f};write_lat_us={w.mean_latency_us:.1f}"))
+    return rows

@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT a TPU number;
+the derived column reports the shape + allclose-vs-oracle check so the
+harness doubles as a correctness gate)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # zns_event_scan: the device-model hot loop
+    n = 16384
+    issue = jnp.array(np.sort(rng.uniform(0, 1e6, n)), jnp.float32)
+    svc = jnp.array(rng.uniform(10, 120, n), jnp.float32)
+    seg = jnp.array(rng.uniform(size=n) < 0.01)
+    (out,), us = timed(lambda: (ops.zns_event_scan(issue, svc, seg,
+                                                   impl="interpret"),))
+    oref = ref.zns_event_scan_ref(issue, svc, seg)
+    ok = bool(jnp.max(jnp.abs(out - oref)) < 1e-2 * float(jnp.max(jnp.abs(oref))))
+    rows.append((f"kernel/zns_event_scan/n{n}", us, f"allclose={ok}"))
+    # flash attention
+    q = jnp.array(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.array(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    (out,), us = timed(lambda: (ops.attention(q, k, v, impl="interpret"),),
+                       repeats=1)
+    ok = bool(jnp.max(jnp.abs(out - ref.attention_ref(q, k, v))) < 2e-4)
+    rows.append(("kernel/flash_attention/b1h8s512", us, f"allclose={ok}"))
+    # rmsnorm
+    x = jnp.array(rng.standard_normal((4096, 1024)), jnp.float32)
+    w = jnp.array(rng.standard_normal(1024), jnp.float32)
+    (out,), us = timed(lambda: (ops.rmsnorm(x, w, impl="interpret"),))
+    ok = bool(jnp.max(jnp.abs(out - ref.rmsnorm_ref(x, w))) < 1e-4)
+    rows.append(("kernel/rmsnorm/4096x1024", us, f"allclose={ok}"))
+    # linear recurrence
+    a = jnp.array(rng.uniform(0.8, 0.999, (2, 1024, 256)), jnp.float32)
+    b = jnp.array(rng.standard_normal((2, 1024, 256)), jnp.float32)
+    (out,), us = timed(lambda: (ops.linear_recurrence(a, b, impl="interpret"),),
+                       repeats=1)
+    ok = bool(jnp.max(jnp.abs(out - ref.linear_recurrence_ref(a, b))) < 1e-2)
+    rows.append(("kernel/linear_recurrence/2x1024x256", us, f"allclose={ok}"))
+    # ssd chunk scan
+    x = jnp.array(rng.standard_normal((1, 256, 4, 64)) * 0.4, jnp.float32)
+    dt = jnp.array(rng.uniform(0.001, 0.1, (1, 256, 4)), jnp.float32)
+    A = jnp.array(-rng.uniform(0.5, 2.0, 4), jnp.float32)
+    B = jnp.array(rng.standard_normal((1, 256, 1, 64)) * 0.3, jnp.float32)
+    C = jnp.array(rng.standard_normal((1, 256, 1, 64)) * 0.3, jnp.float32)
+    (y, s), us = timed(lambda: ops.ssd_scan(x, dt, A, B, C, chunk=128,
+                                            impl="interpret"), repeats=1)
+    yr, sr = ref.ssd_ref(x, dt, A, B, C)
+    ok = bool(jnp.max(jnp.abs(y - yr)) < 1e-3)
+    rows.append(("kernel/ssd_chunk_scan/1x256x4x64", us, f"allclose={ok}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig5]``
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = (
+    "fig2_latency", "fig3_reqsize", "fig4_scalability", "fig5_state_costs",
+    "fig6_gc_interference", "fig7_reset_interference", "fig8_qd",
+    "table1_insights", "checkpoint_bench", "kernel_bench",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on module")
+    args = ap.parse_args()
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run()
+            for row in rows:
+                n, us, derived = row
+                print(f"{n},{us:.3f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Table I: the five key insights, validated quantitatively against the
+model (each row states the paper's claim and the model's number).
+Also emits the §IV emulator-fidelity matrix.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    KiB, MiB, LatencyModel, OpType, Stack, ThroughputModel, simulate,
+)
+from repro.core.emulator_models import ALL_MODELS, FIDELITY_MATRIX
+from repro.core.workloads import reset_interference
+
+
+def run():
+    lm = LatencyModel()
+    tm = ThroughputModel()
+    rows = []
+    # Insight 1: write up to 23% lower latency than append
+    w = float(lm.io_service_us(OpType.WRITE, 4 * KiB))
+    a = float(lm.io_service_us(OpType.APPEND, 8 * KiB))
+    rows.append(("table1/append_vs_write", 0.0,
+                 f"gap_pct={(a - w) / a * 100:.2f} (paper<=23.42)"))
+    # Insight 2: prefer intra-zone scalability
+    intra = tm.steady_state(OpType.WRITE, 4 * KiB, qd=32,
+                            stack=Stack.KERNEL_MQ_DEADLINE).iops
+    inter = tm.steady_state(OpType.WRITE, 4 * KiB, zones=14).iops
+    rows.append(("table1/intra_vs_inter_write", 0.0,
+                 f"intra_kiops={intra/1e3:.0f};inter_kiops={inter/1e3:.0f}"))
+    # Insight 3: finish most expensive (hundreds of ms)
+    f0 = float(lm.finish_us(0.001)) / 1e3
+    rows.append(("table1/finish_cost", 0.0,
+                 f"finish_ms_at_0pct={f0:.1f} (paper 907.51)"))
+    # Insight 4: ZNS ~3x higher read throughput under concurrent I/O
+    #   (from the Obs#11 p95 anchors: 299.89 / 98.04 = 3.06x)
+    from repro.core.calibration import (
+        CONV_READ_P95_UNDER_WRITES_MS, ZNS_READ_P95_UNDER_WRITES_MS)
+    rows.append(("table1/zns_read_advantage", 0.0,
+                 f"x={CONV_READ_P95_UNDER_WRITES_MS / ZNS_READ_P95_UNDER_WRITES_MS:.2f}"))
+    # Insight 5: reset latency +<=78% under I/O; resets don't hurt I/O
+    tr = reset_interference(OpType.WRITE, n_resets=200)
+    res = simulate(tr, seed=11)
+    rmask = tr.op == OpType.RESET
+    p95_w = float(np.percentile((res.complete - res.start)[rmask], 95)) / 1e3
+    tr0 = reset_interference(None, n_resets=200)
+    res0 = simulate(tr0, seed=11)
+    p95_0 = float(np.percentile((res0.complete - res0.start), 95)) / 1e3
+    rows.append(("table1/reset_inflation", 0.0,
+                 f"pct={(p95_w / p95_0 - 1) * 100:.1f} (paper 78.42)"))
+    # §IV emulator fidelity matrix
+    for name, obs in FIDELITY_MATRIX.items():
+        ok = sum(obs.values())
+        rows.append((f"sec4/emulator/{name}", 0.0,
+                     f"observations_reproduced={ok}/10"))
+    # concrete emulator deltas: append==write in NVMeVirt, ~0 in FEMU
+    for name, m in ALL_MODELS.items():
+        wl = float(np.asarray(m.io_service_us(OpType.WRITE, 4 * KiB)))
+        al = float(np.asarray(m.io_service_us(OpType.APPEND, 8 * KiB)))
+        rst = float(np.mean(np.asarray(m.reset_us(0.5))))
+        fin = float(np.mean(np.asarray(m.finish_us(0.01))))
+        rows.append((f"sec4/{name}/latencies", 0.0,
+                     f"write_us={wl:.2f};append_us={al:.2f};"
+                     f"reset50_us={rst:.0f};finish1pct_us={fin:.0f}"))
+    return rows

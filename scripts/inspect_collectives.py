@@ -1,0 +1,76 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Print the largest collective instructions for one dry-run cell
+(small unrolled depth), sorted by result bytes — the perf-loop's
+'profiler'.
+
+  PYTHONPATH=src python scripts/inspect_collectives.py --arch llama3-405b \
+      --shape train_4k [--depth 2] [--top 25] [...dryrun flags]
+"""
+import argparse
+import dataclasses
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.launch.dryrun import lower_cell, _rules_for
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES_BY_NAME
+from repro.utils.hlo import _INSTR_RE, _shape_bytes
+from repro.distributed.ctx import axis_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--moe-impl", default="", dest="moe_impl")
+    ap.add_argument("--moe-pad", type=int, default=0, dest="moe_pad")
+    ap.add_argument("--remat-block", type=int, default=0, dest="remat_block")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seqshard", action="store_true")
+    ap.add_argument("--no-ep", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {"kernel_impl": "xla", "scan_layers": False}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    if args.moe_pad:
+        overrides["moe_expert_pad"] = args.moe_pad
+    cfg = get_config(args.arch, **overrides)
+    cfg = dataclasses.replace(cfg, num_layers=args.depth)
+    shape = SHAPES_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = _rules_for(mesh, args)
+    with mesh, axis_rules(mesh, rules):
+        compiled, _ = lower_cell(cfg, shape, mesh, args)
+    rows = []
+    for line in compiled.as_text().splitlines():
+        if "-done" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_text, kind, _ = m.groups()
+        rows.append((_shape_bytes(result_text), kind,
+                     line.strip()[:170]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"# {len(rows)} collectives, total result bytes/chip "
+          f"{total/2**30:.3f} GiB (depth={args.depth})")
+    for nbytes, kind, line in rows[:args.top]:
+        print(f"{nbytes/2**20:10.1f} MiB  {kind:18s} {line}")
+
+
+if __name__ == "__main__":
+    main()

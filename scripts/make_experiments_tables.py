@@ -1,0 +1,82 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+reports/ JSONs.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py > reports/tables.md
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import glob
+import json
+
+from repro.launch.roofline import load_cells, roofline_row
+
+ARCH_ORDER = [
+    "tinyllama-1.1b", "qwen3-4b", "qwen3-8b", "llama3-405b", "arctic-480b",
+    "qwen2-moe-a2.7b", "mamba2-370m", "internvl2-26b", "musicgen-large",
+    "recurrentgemma-9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    cells = load_cells(["reports/dryrun", "reports/dryrun_fitfix"])
+
+    print("### §Dry-run — all (arch x shape x mesh) cells\n")
+    print("| arch | shape | single-pod 16x16 | multi-pod 2x16x16 | "
+          "GiB/dev (single/multi) | collectives (single, per-chip wire GB) |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            s = cells.get((arch, shape, "single"))
+            m = cells.get((arch, shape, "multi"))
+            if s is None:
+                continue
+            if s.get("status") == "skipped":
+                print(f"| {arch} | {shape} | skip (full attention) | skip | — | — |")
+                continue
+            def memgib(r):
+                mm = r["full"]["memory"]
+                return (mm["argument_bytes"] + mm["temp_bytes"]) / 2**30
+            cw = s["full"]["collectives"]["total_wire_bytes"] / 1e9
+            counts = s["full"]["collectives"]["count"]
+            cstr = "+".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                            for k, v in counts.items() if v)
+            print(f"| {arch} | {shape} | {s['status']} | "
+                  f"{m['status'] if m else '—'} | "
+                  f"{memgib(s):.1f} / {memgib(m):.1f} | {cw:.1f} ({cstr}) |")
+
+    print("\n### §Roofline — single-pod (256 chips), per-chip terms\n")
+    print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant |"
+          " useful-FLOP ratio | roofline frac | note |")
+    print("|---|---|---|---|---|---|---|---|---|" .replace("|---|---|---|---|---|---|---|---|---|", "|---|---|---|---|---|---|---|---|"))
+    notes = {
+        ("arctic-480b", "prefill_32k"): "MoE dispatch gathers; fix=EP a2a (§Perf C)",
+        ("arctic-480b", "train_4k"): "same; EP a2a (§Perf C)",
+        ("qwen2-moe-a2.7b", "train_4k"): "worst coll/comp ratio; fix=EP a2a (§Perf A)",
+        ("qwen2-moe-a2.7b", "prefill_32k"): "EP a2a applies",
+        ("llama3-405b", "train_4k"): "TP activation ARs dominate wire (§Perf B)",
+        ("llama3-405b", "prefill_32k"): "TP ARs at 32k seq; ring-attention would cut",
+        ("llama3-405b", "decode_32k"): "KV-cache streaming bound",
+        ("mamba2-370m", "train_4k"): "small model: HBM-bound; grow per-chip batch",
+        ("mamba2-370m", "long_500k"): "O(1) state; chip underutilized at B=1",
+        ("recurrentgemma-9b", "long_500k"): "window cache tiny; B=1 underutilizes",
+        ("musicgen-large", "decode_32k"): "MHA kv=32: cache reads dominate; GQA or wider batch",
+        ("internvl2-26b", "train_4k"): "TP ARs; SP-via-shard_map next",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, "single"))
+            if not r or r.get("status") != "ok":
+                continue
+            row = roofline_row(r)
+            if row is None:
+                continue
+            nt = notes.get((arch, shape), "")
+            print(f"| {arch} | {shape} | {row['t_compute_s']:.3g} | "
+                  f"{row['t_memory_s']:.3g} | {row['t_collective_s']:.3g} | "
+                  f"{row['dominant']} | {row['useful_flop_ratio']:.2f} | "
+                  f"{row['roofline_fraction']:.3f} | {nt} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .registry import ARCH_IDS, all_configs, get_config, get_smoke_config  # noqa: F401
+from .presets import get_optimized_config, step_settings  # noqa: F401

@@ -1,0 +1,34 @@
+"""Best-known-config presets from the EXPERIMENTS.md §Perf hillclimbs.
+
+``get_optimized_config(arch)`` layers the winning settings from the perf
+loop onto the published architecture config: expert-parallel all_to_all
+dispatch for the MoE archs (36.6x / 14x collective-wire reduction),
+expert padding where E doesn't divide the TP degree, and the microbatch
+setting that fits llama3-405b's activation carries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .registry import get_config
+
+#: per-arch overrides validated in EXPERIMENTS.md §Perf
+OPTIMIZED_OVERRIDES = {
+    "arctic-480b": dict(moe_impl="ep"),                    # §Perf C
+    "qwen2-moe-a2.7b": dict(moe_impl="ep", moe_expert_pad=4),  # §Perf A
+}
+
+#: step-level settings (consumed by launch drivers, not ModelConfig)
+OPTIMIZED_STEP_SETTINGS = {
+    "llama3-405b": dict(microbatches=16),                  # §Perf B.6
+}
+
+
+def get_optimized_config(arch: str, **extra):
+    over = dict(OPTIMIZED_OVERRIDES.get(arch, {}))
+    over.update(extra)
+    return get_config(arch, **over)
+
+
+def step_settings(arch: str) -> dict:
+    return dict(OPTIMIZED_STEP_SETTINGS.get(arch, {}))

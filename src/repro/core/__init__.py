@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — a calibrated ZNS device performance
+model (zone state machine + latency model + event engine) and the
+conventional-SSD GC baseline it is compared against."""
+from .spec import (  # noqa: F401
+    KiB, MiB, GiB,
+    ConvDeviceSpec, LBAFormat, OpType, Stack, ZNSDeviceSpec, ZoneState,
+    SN640, ZN540,
+)
+from .state_machine import ZoneError, ZoneManager, transition_array  # noqa: F401
+from .latency import DEFAULT_LATENCY_MODEL, LatencyModel  # noqa: F401
+from .engine import (  # noqa: F401
+    SimResult, SteadyStateResult, ThroughputModel, Trace, simulate,
+    zone_sequential_completions,
+)
+from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
+from .metrics import LatencyStats, bandwidth_bytes, iops, throughput_timeseries  # noqa: F401
+from . import calibration, emulator_models, workloads  # noqa: F401

@@ -1,0 +1,123 @@
+"""Executable form of the paper's emulator-fidelity analysis (§IV).
+
+The paper examines FEMU and NVMeVirt and identifies which of the 13
+observations each can reproduce, given its latency-model design.  This
+module encodes each emulator's *model* (not the emulators themselves) so
+the benchmark harness can compare them against ours on identical
+workloads, and so tests can assert the fidelity matrix from §IV.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .latency import LatencyModel
+from .spec import KiB, LBAFormat, OpType, Stack
+
+#: Which paper observations each emulator reproduces (paper §IV text).
+#: Observations 1, 2, 11 are excluded by the paper as not-ZNS-essential.
+FIDELITY_MATRIX = {
+    # obs:      3      4      5      6      7      8      9      10     12     13
+    "femu":     dict.fromkeys([3, 4, 5, 6, 7, 8, 9, 10, 12, 13], False),
+    "nvmevirt": {3: True, 4: False, 5: False, 6: False, 7: True, 8: True,
+                 9: False, 10: False, 12: False, 13: False},
+    "ours":     dict.fromkeys([3, 4, 5, 6, 7, 8, 9, 10, 12, 13], True),
+}
+
+
+class EmulatorModel:
+    """Common interface: per-op service latency in microseconds."""
+
+    name = "abstract"
+
+    def io_service_us(self, op, size_bytes, stack=Stack.SPDK,
+                      fmt=LBAFormat.LBA_4K):
+        raise NotImplementedError
+
+    def reset_us(self, occupancy, was_finished=False):
+        raise NotImplementedError
+
+    def finish_us(self, occupancy):
+        raise NotImplementedError
+
+
+class FEMUModel(EmulatorModel):
+    """FEMU 'makes no attempt at emulating ZNS SSD request latency';
+    requests complete as fast as host DRAM permits (§IV)."""
+
+    name = "femu"
+    DRAM_LAT_US = 1.5          # DRAM-backed completion
+    DRAM_BW = 12e9             # bytes/s host memcpy
+
+    def io_service_us(self, op, size_bytes, stack=Stack.SPDK,
+                      fmt=LBAFormat.LBA_4K):
+        size = np.asarray(size_bytes, dtype=np.float64)
+        return self.DRAM_LAT_US + size / self.DRAM_BW * 1e6
+
+    def reset_us(self, occupancy, was_finished=False):
+        return np.zeros_like(np.asarray(occupancy, dtype=np.float64)) + self.DRAM_LAT_US
+
+    def finish_us(self, occupancy):
+        # "finish operations will become unrealistically fast" (§IV)
+        return np.zeros_like(np.asarray(occupancy, dtype=np.float64)) + self.DRAM_LAT_US
+
+
+class NVMeVirtModel(EmulatorModel):
+    """NVMeVirt: explicit channel/NAND timing, accurate for read/write, but
+    (a) append == write latency, (b) reset is a static NAND-erase constant,
+    (c) no finish/open/close timing (§IV)."""
+
+    name = "nvmevirt"
+    NAND_ERASE_US = 3500.0     # "multiple milliseconds", static
+
+    def __init__(self):
+        self._lat = LatencyModel()
+
+    def io_service_us(self, op, size_bytes, stack=Stack.SPDK,
+                      fmt=LBAFormat.LBA_4K):
+        op = np.asarray(op)
+        # append modeled with the *write* latency model — the §IV critique.
+        op_as_write = np.where(op == OpType.APPEND, int(OpType.WRITE), op)
+        return self._lat.io_service_us(op_as_write, size_bytes, stack, fmt)
+
+    def reset_us(self, occupancy, was_finished=False):
+        occ = np.asarray(occupancy, dtype=np.float64)
+        return np.full_like(occ, self.NAND_ERASE_US)
+
+    def finish_us(self, occupancy):
+        occ = np.asarray(occupancy, dtype=np.float64)
+        return np.zeros_like(occ)   # not modeled at all
+
+
+class OurModel(EmulatorModel):
+    """The model this repo proposes (and the paper prescribes): distinct
+    append/write latencies, occupancy-linear reset/finish, transition
+    timing, interference coupling — see latency.py / engine.py."""
+
+    name = "ours"
+
+    def __init__(self):
+        self._lat = LatencyModel()
+
+    def io_service_us(self, op, size_bytes, stack=Stack.SPDK,
+                      fmt=LBAFormat.LBA_4K):
+        return self._lat.io_service_us(op, size_bytes, stack, fmt)
+
+    def reset_us(self, occupancy, was_finished=False):
+        return self._lat.reset_us(occupancy, was_finished)
+
+    def finish_us(self, occupancy):
+        return self._lat.finish_us(occupancy)
+
+
+ALL_MODELS = {m.name: m for m in (FEMUModel(), NVMeVirtModel(), OurModel())}
+
+
+def fidelity_report() -> list[tuple[str, int, bool]]:
+    rows = []
+    for name, obs in FIDELITY_MATRIX.items():
+        for k in sorted(obs):
+            rows.append((name, k, obs[k]))
+    return rows

@@ -1,0 +1,53 @@
+"""Throughput/latency reducers used by the benchmark harness (§III-B)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    mean_us: float
+    p50_us: float
+    p95_us: float
+    p99_us: float
+    n: int
+
+    @staticmethod
+    def from_samples(lat_us) -> "LatencyStats":
+        lat = np.asarray(lat_us, dtype=np.float64)
+        return LatencyStats(
+            mean_us=float(lat.mean()), p50_us=float(np.percentile(lat, 50)),
+            p95_us=float(np.percentile(lat, 95)),
+            p99_us=float(np.percentile(lat, 99)), n=len(lat))
+
+
+def iops(complete_us, n: int = None) -> float:
+    """Operations per second over the busy interval."""
+    c = np.asarray(complete_us, dtype=np.float64)
+    n = n if n is not None else len(c)
+    span = c.max() - c.min()
+    if span <= 0:
+        return float("inf")
+    return (n - 1) / span * 1e6
+
+
+def bandwidth_bytes(complete_us, sizes) -> float:
+    c = np.asarray(complete_us, dtype=np.float64)
+    span = (c.max() - c.min()) / 1e6
+    if span <= 0:
+        return float("inf")
+    return float(np.sum(sizes)) / span
+
+
+def throughput_timeseries(complete_us, sizes, *, bin_s: float = 1.0):
+    """(t_seconds, MiB/s) series for Fig. 6-style plots."""
+    c = np.asarray(complete_us, dtype=np.float64) / 1e6
+    sizes = np.asarray(sizes, dtype=np.float64)
+    t0, t1 = c.min(), c.max()
+    nbins = max(int((t1 - t0) / bin_s) + 1, 1)
+    idx = np.clip(((c - t0) / bin_s).astype(int), 0, nbins - 1)
+    acc = np.zeros(nbins)
+    np.add.at(acc, idx, sizes)
+    return t0 + np.arange(nbins) * bin_s, acc / bin_s / (1024 ** 2)

@@ -1,0 +1,2 @@
+from . import collectives, ctx, flash_decode, moe_parallel, pipeline, sharding  # noqa: F401
+from .sharding import DEFAULT_RULES, make_rules, tree_shardings_for, tree_specs  # noqa: F401

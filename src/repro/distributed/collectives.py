@@ -1,0 +1,94 @@
+"""Compressed cross-pod gradient collectives with error feedback.
+
+Cross-pod ICI/DCN links are the scarcest bandwidth at multi-pod scale.
+``ef_compressed_psum`` halves (bf16) or quarters (int8, with a shared
+pmax scale) the wire bytes of the pod-axis gradient all-reduce; the
+quantization residual is carried in an error-feedback buffer so the
+*accumulated* gradient stays unbiased (EF-SGD/EF21-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+from jax.experimental.shard_map import shard_map
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _compress_psum_leaf(g, e, axis, method):
+    """One leaf: returns (psum-ed g_hat, new error)."""
+    x = g.astype(jnp.float32) + e
+    if method == "bf16":
+        q = x.astype(jnp.bfloat16)
+        err = x - q.astype(jnp.float32)
+        out = jax.lax.psum(q, axis).astype(jnp.float32)
+        return out, err
+    if method == "int8":
+        scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        err = x - q.astype(jnp.float32) * scale
+        out = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32)
+        return out * scale, err
+    raise ValueError(method)
+
+
+def ef_compressed_psum(mesh: Mesh, grads, error_state, *, axis: str = "pod",
+                       method: str = "bf16", mean: bool = True):
+    """All-reduce ``grads`` over ``axis`` with compression + error feedback.
+
+    grads/error_state leaves carry a leading pod dimension of extent
+    ``mesh.shape[axis]`` (each pod's partial gradient / residual).
+    Returns (reduced_grads without the pod dim, per-pod new_error_state).
+    """
+    n = mesh.shape[axis]
+    leaves, treedef = jax.tree.flatten(grads)
+    eleaves = jax.tree.leaves(error_state)
+
+    def body(*args):
+        k = len(args) // 2
+        gs, es = args[:k], args[k:]
+        outs, errs = [], []
+        for g, e in zip(gs, es):
+            o, ne = _compress_psum_leaf(g[0], e[0], axis, method)
+            if mean:
+                o = o / n
+            outs.append(o)
+            errs.append(ne[None])
+        return tuple(outs) + tuple(errs)
+
+    # reduced outputs are identical on every shard (replicated out_specs);
+    # error states stay PER-SHARD (PS(axis)) — each pod carries its own
+    # quantization residual for the next step.
+    res = shard_map(
+        body, mesh=mesh,
+        in_specs=tuple(PS(axis) for _ in range(2 * len(leaves))),
+        out_specs=tuple(PS() for _ in range(len(leaves)))
+        + tuple(PS(axis) for _ in range(len(leaves))),
+        check_rep=False,
+    )(*leaves, *eleaves)
+    outs = jax.tree.unflatten(treedef, res[:len(leaves)])
+    errs = jax.tree.unflatten(treedef, res[len(leaves):])
+    return outs, errs
+
+
+def compressed_psum_reference(grads_per_pod, method: str = "bf16"):
+    """Single-process oracle: what the compressed all-reduce computes for a
+    list of per-pod gradients (used by unit tests)."""
+    n = len(grads_per_pod)
+    if method == "bf16":
+        q = [g.astype(jnp.bfloat16).astype(jnp.float32)
+             for g in grads_per_pod]
+        return sum(q) / n
+    if method == "int8":
+        scale = max(float(jnp.max(jnp.abs(g))) for g in grads_per_pod) / 127.0
+        scale = max(scale, 1e-12)
+        q = [jnp.round(jnp.clip(g / scale, -127, 127)) * scale
+             for g in grads_per_pod]
+        return sum(q) / n
+    raise ValueError(method)

@@ -1,0 +1,48 @@
+"""Ambient sharding context: lets model code express *logical* activation
+shardings without threading a mesh through every call.
+
+launch code enters ``axis_rules(mesh, rules)``; model layers call
+``constrain(x, (..logical axes..))`` which resolves through the rules and
+applies ``with_sharding_constraint``.  Outside any context (unit tests,
+single device) it is a no-op, so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+
+from . import sharding as sh
+
+_CTX = contextvars.ContextVar("repro_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: sh.Rules = sh.DEFAULT_RULES):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current():
+    return _CTX.get()
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    Mesh axes that don't divide the corresponding dim are dropped
+    (sanitize), so the same annotation works across shapes.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = sh.spec_from_axes(tuple(axes), rules, mesh)
+    spec = sh.sanitize([x], [spec], mesh)[0]
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

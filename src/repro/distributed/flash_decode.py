@@ -1,0 +1,73 @@
+"""Flash-decoding over a sequence-sharded KV cache (shard_map).
+
+The decode-cell baseline lets GSPMD partition the softmax over the
+cache_seq axis; this module is the *explicit* schedule: each model-shard
+computes a partial (m, l, o) over its cache slice and a single small
+psum combines them — O(B·H·Dh) wire bytes per layer instead of any
+logits gather.  Used by the decode hillclimb and as a correctness
+reference for what GSPMD should produce.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _partial_softmax_attend(q, k, v, valid):
+    """q: (B,K,rep,Dh); k/v: (B,K,S_loc,Dh); valid: (B,S_loc) bool.
+    Returns partial (o, m, l) for cross-shard combination."""
+    logits = jnp.einsum("bkrd,bksd->bkrs", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / np.sqrt(q.shape[-1])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)            # (B,K,rep,1)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkrs,bksd->bkrd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def flash_decode(mesh: Mesh, q, cache_k, cache_v, pos, *,
+                 seq_axis: str = "model", batch_axes=("data",)):
+    """Distributed decode attention.
+
+    q: (B, K, rep, Dh) float; cache_{k,v}: (B, K, S, Dh) sharded
+    (batch_axes, None, seq_axis, None); pos: scalar int32 (current
+    length-1 index insertion is assumed done by the caller).
+    Returns (B, K, rep, Dh) attention output, replicated over seq_axis.
+    """
+    ba = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+    b_spec = ba[0] if len(ba) == 1 else ba
+
+    def body(q_l, k_l, v_l, pos_l):
+        s_loc = k_l.shape[2]
+        shard = jax.lax.axis_index(seq_axis)
+        kpos = shard * s_loc + jnp.arange(s_loc)           # global positions
+        valid = (kpos <= pos_l)[None, :]
+        valid = jnp.broadcast_to(valid, (k_l.shape[0], s_loc))
+        o, m, l = _partial_softmax_attend(q_l, k_l, v_l, valid)
+        # combine across seq shards: global max, rescale, sum
+        m_g = jax.lax.pmax(m, seq_axis)
+        corr = jnp.exp(m - m_g)
+        o = jax.lax.psum(o * corr, seq_axis)
+        l = jax.lax.psum(l * corr, seq_axis)
+        return (o / jnp.maximum(l, 1e-30)).astype(q_l.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(PS(b_spec, None, None, None),
+                  PS(b_spec, None, seq_axis, None),
+                  PS(b_spec, None, seq_axis, None),
+                  PS()),
+        out_specs=PS(b_spec, None, None, None),
+        check_rep=False,
+    )(q, cache_k, cache_v, pos)

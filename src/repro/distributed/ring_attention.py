@@ -1,0 +1,108 @@
+"""Ring attention: sequence-parallel exact attention via shard_map.
+
+The §Perf B/SP iteration showed that *constraint-based* sequence
+parallelism is refuted under GSPMD (it inserts gathers around every
+constraint).  This is the hand-written schedule: Q, K, V are sharded
+over the sequence dim on the model axis; K/V blocks rotate around the
+ring with ``ppermute`` while each shard maintains an online-softmax
+accumulator for its local queries.  Per layer the wire cost is
+K+V once around the ring — 2·S·D_kv bytes — versus the TP all-reduce's
+2·S·D_model, a (D_model / D_kv)-fold reduction for GQA models (16× for
+llama3-405b's 128-vs-8 head ratio), and activation memory drops by the
+ring degree.
+
+Causality: shard i's queries attend to kv shards j <= i fully-unmasked
+for j < i and causally for j == i; blocks with j > i are skipped
+arithmetically (zero contribution) rather than by control flow, keeping
+the schedule static.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _block_attend(q, k, v, mask, scale):
+    """q: (B,H,Sq,D); k/v: (B,H,Sk,D); mask: (Sq,Sk) bool.
+    Returns partial (o, m, l) in f32."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # guard fully-masked rows
+    m_safe = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m_safe)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m_safe, l
+
+
+def ring_attention(mesh: Mesh, q, k, v, *, causal: bool = True,
+                   scale=None, seq_axis: str = "model",
+                   batch_axes=("data",)):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D), all sharded on S over
+    ``seq_axis``.  Returns (B, Hq, S, D) with the same sharding.
+
+    GQA is handled by repeating KV heads locally (keeps ring payload at
+    the *unrepeated* K/V size).
+    """
+    n = mesh.shape[seq_axis]
+    b, hq, s_tot, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    scale = float(scale) if scale is not None else 1.0 / float(np.sqrt(d))
+    ba = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_spec = ba[0] if len(ba) == 1 else (ba if ba else None)
+
+    def body(q_l, k_l, v_l):
+        bl, hl, s_loc, dl = q_l.shape      # local (batch-sharded) shapes
+        sid = jax.lax.axis_index(seq_axis)
+        qpos = sid * s_loc + jnp.arange(s_loc)
+        q32 = q_l.astype(jnp.float32)
+
+        acc = jnp.zeros((bl, hl, s_loc, dl), jnp.float32)
+        m_run = jnp.full((bl, hl, s_loc, 1), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((bl, hl, s_loc, 1), jnp.float32)
+        perm = [(i, (i - 1) % n) for i in range(n)]   # kv moves to rank-1
+
+        k_cur, v_cur = k_l, v_l
+        for step in range(n):
+            src = (sid + step) % n                    # kv shard id held now
+            kpos = src * s_loc + jnp.arange(s_loc)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            else:
+                mask = jnp.ones((s_loc, s_loc), bool)
+            k_rep = jnp.repeat(k_cur, rep, axis=1) if rep > 1 else k_cur
+            v_rep = jnp.repeat(v_cur, rep, axis=1) if rep > 1 else v_cur
+            o, m, l = _block_attend(q32, k_rep.astype(jnp.float32),
+                                    v_rep, mask, scale)
+            m_new = jnp.maximum(m_run, m)
+            c_old = jnp.exp(m_run - m_new)
+            c_blk = jnp.exp(m - m_new)
+            acc = acc * c_old + o * c_blk
+            l_run = l_run * c_old + l * c_blk
+            m_run = m_new
+            if step != n - 1:
+                k_cur = jax.lax.ppermute(k_cur, seq_axis, perm)
+                v_cur = jax.lax.ppermute(v_cur, seq_axis, perm)
+        out = acc / jnp.maximum(l_run, 1e-30)
+        return out.astype(q_l.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(PS(b_spec, None, seq_axis, None),
+                  PS(b_spec, None, seq_axis, None),
+                  PS(b_spec, None, seq_axis, None)),
+        out_specs=PS(b_spec, None, seq_axis, None),
+        check_rep=False,
+    )(q, k, v)

@@ -1,0 +1,191 @@
+"""Logical-axis sharding rules -> PartitionSpecs / NamedShardings.
+
+Model code annotates parameters and activations with *logical* axis names
+(see models.common spec trees); this module maps them onto physical mesh
+axes.  Rules are ordered; the first matching rule whose mesh axes are all
+still unused in the current PartitionSpec wins (a mesh axis may appear at
+most once per spec — the classic MaxText/t5x resolution scheme).
+
+Default placement:
+  TP  over "model":  vocab, q-heads, mlp hidden, experts, ssm/rnn inner
+  FSDP over "data":  the embed (d_model) dim of weight matrices
+  DP  over ("pod", "data"): batch
+  decode KV cache:   cache_seq over "model" (flash-decode style)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+Rules = tuple[tuple[str, tuple[str, ...]], ...]
+
+
+def make_rules(*, fsdp: bool = True, seq_shard_cache: bool = True,
+               expert_parallel: bool = True,
+               data_axes: tuple[str, ...] = ("pod", "data"),
+               fsdp_axes: Optional[tuple[str, ...]] = None,
+               model_axis: str = "model") -> Rules:
+    m = (model_axis,)
+    # FSDP shards weights over every batch axis (pod included) — ZeRO-3
+    # across the full fleet, so optimizer state scales 1/chips.
+    fsdp_axes = fsdp_axes if fsdp_axes is not None else data_axes
+    rules = [
+        ("batch", data_axes),
+        ("vocab", m),
+        ("heads", m),
+        ("mlp", m),
+        ("ssm_inner", m),
+        ("rnn", m),
+        ("experts", m if expert_parallel else ()),
+        ("expert_mlp", () if expert_parallel else m),
+        ("experts_r", m if not expert_parallel else ()),
+        ("cache_seq", m if seq_shard_cache else ()),
+        ("embed", fsdp_axes if fsdp else ()),
+        ("act_embed", ()),
+        ("layers", ()),
+        ("layer_groups", ()),
+        ("kv_heads", ()),
+        ("head_dim", ()),
+        ("seq", ()),
+        ("seq_sp", m),
+        ("conv", ()),
+        ("ssm_heads", ()),
+        ("ssm_state", ()),
+        ("rnn_blocks", ()),
+        ("rnn_in", ()),
+        ("rnn_out", ()),
+        ("embed_in", ()),
+        ("codebooks", ()),
+    ]
+    return tuple((k, tuple(v)) for k, v in rules)
+
+
+DEFAULT_RULES = make_rules()
+
+
+def spec_from_axes(axes: Optional[Sequence[Optional[str]]],
+                   rules: Rules = DEFAULT_RULES,
+                   mesh: Optional[Mesh] = None) -> PS:
+    """Resolve one logical-axes tuple to a PartitionSpec.
+
+    Mesh axes already used by an earlier dim are skipped (replicate), as
+    are rules whose mesh axes don't exist in ``mesh`` (e.g. no "pod" axis
+    on the single-pod mesh).
+    """
+    if axes is None:
+        return PS()
+    rule_map = dict(rules)
+    used: set[str] = set()
+    out = []
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        if ax not in rule_map:
+            raise KeyError(f"no sharding rule for logical axis {ax!r}")
+        cand = [a for a in rule_map[ax]
+                if a not in used and (mesh_axes is None or a in mesh_axes)]
+        if not cand:
+            out.append(None)
+        elif len(cand) == 1:
+            used.add(cand[0])
+            out.append(cand[0])
+        else:
+            used.update(cand)
+            out.append(tuple(cand))
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return PS(*out)
+
+
+def tree_specs(axes_tree, rules: Rules = DEFAULT_RULES,
+               mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec_from_axes(axes, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, (tuple, type(None)))
+        and (x is None or all(isinstance(e, (str, type(None))) for e in x)),
+    )
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: Rules = DEFAULT_RULES):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tree_specs(axes_tree, rules, mesh))
+
+
+def shardable(dim: int, mesh: Mesh, axes) -> bool:
+    """True if ``dim`` divides by the mesh extent of ``axes``."""
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def validate_specs(shape_tree, spec_tree, mesh: Mesh):
+    """Raise if any spec doesn't divide its array shape on ``mesh``."""
+    def check(shape, spec):
+        shape = getattr(shape, "shape", shape)
+        for i, axes in enumerate(spec):
+            if axes is None:
+                continue
+            if not shardable(shape[i], mesh, axes):
+                raise ValueError(
+                    f"dim {i} of shape {tuple(shape)} not divisible by mesh "
+                    f"axes {axes} ({mesh.shape})")
+    jax.tree.map(check, shape_tree, spec_tree,
+                 is_leaf=lambda x: isinstance(x, PS))
+
+
+# ---------------------------------------------------------------------------
+# Sanitization: drop mesh axes that don't divide the dim (e.g. kv_heads=8 on
+# model=16, batch=1 on data=16).  Keeps the dry-run honest: the spec is the
+# *intent*, sanitize resolves per-(arch, shape) feasibility.
+# ---------------------------------------------------------------------------
+def sanitize(shape_tree, spec_tree, mesh: Mesh):
+    def fix(shape, spec):
+        shape = getattr(shape, "shape", shape)
+        out = []
+        for i, axes in enumerate(spec):
+            if i >= len(shape):
+                break
+            if axes is None:
+                out.append(None)
+                continue
+            tup = (axes,) if isinstance(axes, str) else tuple(axes)
+            # greedily keep the largest prefix of axes that divides
+            keep = []
+            rem = shape[i]
+            for a in tup:
+                ext = mesh.shape[a]
+                if rem % ext == 0:
+                    keep.append(a)
+                    rem //= ext
+            if not keep:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(tuple(keep))
+        while out and out[-1] is None:
+            out.pop()
+        return PS(*out)
+
+    return jax.tree.map(fix, shape_tree, spec_tree)
+
+
+def tree_shardings_for(shape_tree, axes_tree, mesh: Mesh,
+                       rules: Rules = DEFAULT_RULES):
+    """specs resolved from rules, then sanitized against actual shapes."""
+    specs = tree_specs(axes_tree, rules, mesh)
+    specs = sanitize(shape_tree, specs, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots plus the
+paper-domain event-scan kernel.  See ops.py for the dispatching API and
+ref.py for the pure-jnp oracles."""
+from . import ops, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    attention, linear_recurrence, rmsnorm, ssd_scan, zns_event_scan,
+)

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers for the kernel package.
+
+Every op takes ``impl`` (or infers it): 'pallas' runs the Pallas kernel
+compiled for TPU, 'interpret' runs the kernel body in interpret mode
+(CPU correctness), 'xla' runs the pure-jnp oracle from ref.py.  The
+default 'auto' picks 'pallas' on TPU backends and 'xla' elsewhere — the
+multi-pod dry-run therefore lowers the XLA path, while kernel tests pin
+'interpret' to exercise the kernel bodies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _fa
+from .linear_recurrence import linear_recurrence as _lr
+from .rmsnorm import rmsnorm as _rms
+from .ssd_chunk_scan import ssd_chunk_scan as _ssd
+from .zns_event_scan import zns_event_scan as _zns
+
+
+def _default_impl() -> str:
+    try:
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    except Exception:
+        return "xla"
+
+
+def _resolve(impl: str | None) -> str:
+    return impl if impl not in (None, "auto") else _default_impl()
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              kv_length=None, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla" or kv_length is not None:
+        tq, tk = q.shape[2], k.shape[2]
+        if kv_length is None and tq * tk > 1024 * 1024:
+            # memory-bounded flash-style path (mirrors the Pallas kernel)
+            return ref.attention_xla_chunked(q, k, v, causal=causal,
+                                             window=window, scale=scale)
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale, kv_length=kv_length)
+    return _fa(q, k, v, causal=causal, window=window, scale=scale,
+               interpret=(impl == "interpret"))
+
+
+def rmsnorm(x, w, *, eps=1e-6, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return _rms(x, w, eps=eps, interpret=(impl == "interpret"))
+
+
+def linear_recurrence(a, b, *, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.linear_recurrence_ref(a, b)
+    return _lr(a, b, interpret=(impl == "interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ssd_ref(x, dt, A, B, C)
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=(impl == "interpret"))
+
+
+def zns_event_scan(issue, svc, seg_start, *, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.zns_event_scan_ref(issue, svc, seg_start)
+    return _zns(issue, svc, seg_start, interpret=(impl == "interpret"))

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first initialization.  (Tests may pre-set REPRO_DRYRUN_DEVICES
+# to use a smaller placeholder pool.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against ShapeDtypeStruct inputs; record memory analysis, cost
+analysis and collective traffic.
+
+Per cell:
+  * ``--mode full``  — the production config (scan-over-layers) is
+    lowered and compiled; ``memory_analysis()`` proves the program fits,
+    ``cost_analysis()`` and the partitioned HLO feed §Roofline.
+  * ``--mode fit``   — two small *unrolled* variants (depth L1, L2) are
+    compiled and the per-layer FLOPs/bytes/collective-bytes are
+    extrapolated affinely to the true depth (XLA cost analysis counts a
+    while-loop body once, so scanned programs under-report by the trip
+    count; layers are homogeneous, so the affine fit is exact).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k \
+      --mesh single --mode both --out reports/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro import models as M
+from repro.configs import get_config
+from repro.distributed import sharding as sh
+from repro.launch import specs as SP
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models.config import SHAPES_BY_NAME, shapes_for
+from repro.optim import AdamWConfig
+from repro.serve import make_prefill_step, make_serve_step
+from repro.train import make_train_step, state_logical_axes, state_spec
+from repro.utils.hlo import collective_stats
+
+
+def _rules_for(mesh, args):
+    return sh.make_rules(
+        fsdp=not args.no_fsdp,
+        seq_shard_cache=not args.no_seqshard,
+        expert_parallel=not args.no_ep,
+        data_axes=data_axes(mesh))
+
+
+def _shardings(shape_tree, axes_tree, mesh, rules):
+    return sh.tree_shardings_for(shape_tree, axes_tree, mesh, rules)
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, PS())
+
+
+def lower_cell(cfg, shape, mesh, args):
+    """Build + lower + compile one cell; returns (compiled, aux_info)."""
+    rules = _rules_for(mesh, args)
+    params_shape = state_spec(cfg).params
+    params_ax = state_logical_axes(cfg).params
+    if shape.kind == "train":
+        step = make_train_step(cfg, AdamWConfig(),
+                               microbatches=args.microbatches)
+        st_shape = state_spec(cfg)
+        st_sh = _shardings(st_shape, state_logical_axes(cfg), mesh, rules)
+        b_shape = SP.batch_specs(cfg, shape)
+        b_sh = _shardings(b_shape, SP.batch_logical_axes(cfg), mesh, rules)
+        jf = jax.jit(step, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+        lowered = jf.lower(st_shape, b_shape)
+    elif shape.kind == "prefill":
+        pstep = make_prefill_step(cfg, shape.seq_len)
+        p_sh = _shardings(params_shape, params_ax, mesh, rules)
+        b_shape = SP.batch_specs(cfg, shape)
+        b_ax = SP.batch_logical_axes(cfg)
+        b_sh = _shardings(b_shape, b_ax, mesh, rules)
+        fi = b_shape.get("frontend_inputs")
+        if fi is not None:
+            jf = jax.jit(pstep, in_shardings=(p_sh, b_sh["tokens"],
+                                              b_sh["frontend_inputs"]))
+            lowered = jf.lower(params_shape, b_shape["tokens"], fi)
+        else:
+            jf = jax.jit(pstep, in_shardings=(p_sh, b_sh["tokens"]))
+            lowered = jf.lower(params_shape, b_shape["tokens"])
+    else:  # decode
+        sstep = make_serve_step(cfg)
+        p_sh = _shardings(params_shape, params_ax, mesh, rules)
+        d_shape = SP.decode_specs(cfg, shape)
+        d_ax = SP.decode_logical_axes(cfg)
+        c_sh = _shardings(d_shape["cache"], d_ax["cache"], mesh, rules)
+        t_sh = _shardings(d_shape["tokens"], d_ax["tokens"], mesh, rules)
+        jf = jax.jit(sstep,
+                     in_shardings=(p_sh, c_sh, t_sh, _repl(mesh)),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,))
+        lowered = jf.lower(params_shape, d_shape["cache"],
+                           d_shape["tokens"], d_shape["pos"])
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, {"compile_s": time.time() - t0}
+
+
+def analyze(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    return {
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll.as_dict(),
+    }
+
+
+def _fit_depths(cfg):
+    """Two small depths for the affine fit, honoring pattern groups."""
+    if cfg.family == "hybrid":
+        plen = len(cfg.block_pattern)
+        _, groups, tail = (
+            plen, cfg.num_layers // plen,
+            cfg.num_layers % plen)
+        l1, l2 = plen + tail, 2 * plen + tail
+        per_units = (cfg.num_layers - tail) // plen
+        return l1, l2, per_units, 1, 2
+    return 2, 3, cfg.num_layers, 2, 3
+
+
+def run_fit(cfg, shape, mesh, args) -> dict:
+    """Affine-in-depth extrapolation of flops/bytes/collectives.
+
+    Fit variants are unrolled (scan bodies are costed once by XLA) and use
+    microbatches=1 (the grad-accumulation scan would hide a trip-count
+    factor the same way).  cost_analysis numbers are per-device.
+    """
+    l1, l2, units, u1, u2 = _fit_depths(cfg)
+    fit_args = argparse.Namespace(**{**vars(args), "microbatches": 1})
+    results = []
+    for ldepth in (l1, l2):
+        c = dataclasses.replace(cfg, num_layers=ldepth, scan_layers=False)
+        compiled, _ = lower_cell(c, shape, mesh, fit_args)
+        results.append(analyze(compiled))
+        del compiled
+    def extrap(f):
+        a, b = f(results[0]), f(results[1])
+        slope = (b - a) / (u2 - u1)
+        return a + slope * (units - u1)
+    coll_kinds = results[0]["collectives"]["result_bytes"].keys()
+    return {
+        "depths": [l1, l2], "units": units,
+        "flops": extrap(lambda r: r["flops"]),
+        "bytes_accessed": extrap(lambda r: r["bytes_accessed"]),
+        "collective_result_bytes": {
+            k: extrap(lambda r, k=k: r["collectives"]["result_bytes"][k])
+            for k in coll_kinds},
+        "collective_wire_bytes": {
+            k: extrap(lambda r, k=k: r["collectives"]["wire_bytes"][k])
+            for k in coll_kinds},
+        "small_runs": results,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, args) -> dict:
+    overrides = {"kernel_impl": "xla"}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if getattr(args, "moe_impl", ""):
+        overrides["moe_impl"] = args.moe_impl
+    if getattr(args, "moe_pad", 0):
+        overrides["moe_expert_pad"] = args.moe_pad
+    if getattr(args, "remat_block", 0):
+        overrides["remat_block"] = args.remat_block
+    if getattr(args, "sp", False):
+        overrides["seq_parallel"] = True
+    if getattr(args, "ring", False):
+        overrides["ring_attention"] = True
+    cfg = get_config(arch, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in shapes_for(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(full-attention arch; see DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape),
+           "params": M.count_params(cfg),
+           "active_params": M.count_active_params(cfg),
+           "model_flops": M.model_flops(
+               cfg, shape.tokens if shape.kind != "decode"
+               else shape.global_batch, shape.kind)}
+    try:
+        from repro.distributed.ctx import axis_rules
+        rules = _rules_for(mesh, args)
+        if args.mode in ("full", "both"):
+            with mesh, axis_rules(mesh, rules):
+                compiled, info = lower_cell(cfg, shape, mesh, args)
+                out["full"] = analyze(compiled)
+                out["full"].update(info)
+                del compiled
+        if args.mode in ("fit", "both") and mesh_kind == "single":
+            with mesh, axis_rules(mesh, rules):
+                out["fit"] = run_fit(cfg, shape, mesh, args)
+        out["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        out["status"] = "error"
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--mode", choices=("full", "fit", "both"), default="both")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seqshard", action="store_true")
+    ap.add_argument("--no-ep", action="store_true")
+    ap.add_argument("--moe-impl", default="", dest="moe_impl")
+    ap.add_argument("--moe-pad", type=int, default=0, dest="moe_pad")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--ring", action="store_true")
+    ap.add_argument("--remat-block", type=int, default=0, dest="remat_block")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    res = run_cell(args.arch, args.shape, args.mesh, args)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f".{args.tag}" if args.tag else ""
+    path = os.path.join(
+        args.out, f"{args.arch}_{args.shape}_{args.mesh}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    status = res["status"]
+    extra = ""
+    if status == "ok" and "full" in res:
+        mem = res["full"]["memory"]
+        per_dev = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+        extra = f" mem/dev={per_dev:.2f}GiB compile={res['full']['compile_s']:.0f}s"
+    print(f"[dryrun] {args.arch} {args.shape} {args.mesh}: {status}{extra}")
+    if status == "error":
+        print(res["error"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving driver: prefill + continuous-batching decode over a reduced
+or full config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --requests 16 --batch 4 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as M
+from repro.configs import get_config, get_smoke_config
+from repro.serve import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    rng = np.random.default_rng(args.seed)
+
+    cache = M.init_cache(cfg, args.batch, args.max_seq)
+    queue = [rng.integers(1, cfg.vocab_size,
+                          size=int(rng.integers(4, 16)))
+             for _ in range(args.requests)]
+    cur = jnp.zeros((args.batch,), jnp.int32)
+    age = np.zeros(args.batch, int)
+    active: list = [None] * args.batch
+    done = 0
+    next_id = 0
+
+    def admit(slot):
+        nonlocal cur, next_id
+        if not queue:
+            active[slot] = None
+            return
+        prompt = queue.pop(0)
+        active[slot] = [next_id, list(prompt), 0]
+        next_id += 1
+        age[slot] = 0
+        cur = cur.at[slot].set(int(prompt[0]))
+
+    for s in range(args.batch):
+        admit(s)
+
+    t0 = time.time()
+    steps = 0
+    while done < args.requests and steps < 100_000:
+        tok, cache = serve(params, cache, cur, jnp.int32(int(age.max())))
+        tok = np.asarray(tok)
+        steps += 1
+        for s in range(args.batch):
+            if active[s] is None:
+                continue
+            rid, prompt, ngen = active[s]
+            age[s] += 1
+            if age[s] < len(prompt):
+                cur = cur.at[s].set(int(prompt[age[s]]))
+                continue
+            active[s][2] = ngen + 1
+            if active[s][2] >= args.max_new or int(tok[s]) == 0:
+                done += 1
+                admit(s)
+            else:
+                cur = cur.at[s].set(int(tok[s]))
+    dt = time.time() - t0
+    print(f"[serve] {done}/{args.requests} requests, {steps} decode steps, "
+          f"{steps * args.batch / dt:.1f} tok/s (batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

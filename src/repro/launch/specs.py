@@ -1,0 +1,64 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+against these.  The modality frontends are stubs per the assignment:
+``vision_stub`` supplies precomputed patch embeddings, ``audio_stub``
+supplies EnCodec codebook token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as M
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training / prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.num_codebooks > 1:
+        tokens = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+    else:
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision_stub":
+        batch["frontend_inputs"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def batch_logical_axes(cfg: ModelConfig) -> dict:
+    axes = {"tokens": ("batch", "seq", None) if cfg.num_codebooks > 1
+            else ("batch", "seq")}
+    if cfg.frontend == "vision_stub":
+        axes["frontend_inputs"] = ("batch", "seq", "act_embed")
+    return axes
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """serve_step inputs: cache + one new token per sequence."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.num_codebooks > 1:
+        tokens = jax.ShapeDtypeStruct((b, cfg.num_codebooks), jnp.int32)
+    else:
+        tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {
+        "cache": M.cache_spec(cfg, b, s),
+        "tokens": tokens,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "cache": M.cache_logical_axes(cfg),
+        "tokens": ("batch", None) if cfg.num_codebooks > 1 else ("batch",),
+        "pos": None,
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape)
+    return decode_specs(cfg, shape)

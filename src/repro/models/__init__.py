@@ -1,0 +1,9 @@
+from .config import (  # noqa: F401
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, SHAPES_BY_NAME, TRAIN_4K,
+    ModelConfig, ShapeConfig, shapes_for,
+)
+from .model import (  # noqa: F401
+    cache_logical_axes, cache_spec, count_active_params, count_params,
+    decode_step, forward, init_cache, init_params, logical_axes, loss_fn,
+    model_flops, model_spec, prefill,
+)

@@ -1,0 +1,340 @@
+"""Shared model components: parameter specs, initializers, attention,
+MLP, RoPE, norms.
+
+Parameters are plain nested-dict pytrees.  Every module is described by a
+spec tree of :class:`P` entries (shape + logical axis names + init); the
+same spec produces both the initialized parameters and the logical-axis
+tree consumed by ``distributed.sharding`` — they cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape, logical axes (one name per dim), init."""
+
+    shape: tuple
+    axes: tuple
+    init: str = "normal"      # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def initialize(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "const_std":
+            std = self.scale
+        else:
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = self.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_spec(spec, key, dtype):
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [p.initialize(k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_from_spec(spec):
+    return jax.tree.map(lambda p: p.axes, spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_spec(spec, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension to every param in a spec tree."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+def rmsnorm(cfg: ModelConfig, w, x):
+    return kops.rmsnorm(x, w, eps=cfg.rms_eps, impl=cfg.kernel_impl)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, Dh); positions: (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / dh))
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+def attn_spec(cfg: ModelConfig) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    spec = {
+        "wq": P((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": P((D, K, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": P((D, K, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": P((H, Dh, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P((Dh,), ("head_dim",), "zeros")
+        spec["k_norm"] = P((Dh,), ("head_dim",), "zeros")
+    return spec
+
+
+def attn_qkv(cfg: ModelConfig, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = kops.rmsnorm(q, p["q_norm"], eps=cfg.rms_eps, impl="xla")
+        k = kops.rmsnorm(k, p["k_norm"], eps=cfg.rms_eps, impl="xla")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def full_attention(cfg: ModelConfig, qh, kh, vh, *, window=None):
+    """Head-major full-sequence attention core: (B, H/K, S, Dh) -> (B, H, S, Dh).
+
+    Dispatch: shard_map ring attention when enabled (sequence-parallel
+    exact attention over the model axis), else the kernel/XLA path.
+    """
+    if cfg.ring_attention and window is None:
+        from repro.distributed import ctx as dctx
+        c = dctx.current()
+        if c is not None and "model" in c[0].axis_names \
+                and qh.shape[2] % c[0].shape["model"] == 0:
+            mesh = c[0]
+            from repro.distributed.ring_attention import ring_attention
+            data_axes = tuple(a for a in ("pod", "data")
+                              if a in mesh.axis_names)
+            return ring_attention(mesh, qh, kh, vh, causal=True,
+                                  batch_axes=data_axes)
+    return kops.attention(qh, kh, vh, causal=True, window=window,
+                          impl=cfg.kernel_impl)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, window=None):
+    """Full-sequence (train/prefill) attention.  x: (B, S, D)."""
+    q, k, v = attn_qkv(cfg, p, x, positions)
+    qh = jnp.moveaxis(q, 2, 1)     # (B, H, S, Dh)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    out = full_attention(cfg, qh, kh, vh, window=window)
+    out = jnp.moveaxis(out, 1, 2)  # (B, S, H, Dh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos, *,
+                     window=None):
+    """Single-token decode.  x: (B, 1, D); cache_{k,v}: (B, K, S, Dh);
+    ``pos``: scalar int32 — current position (tokens written so far).
+
+    Returns (out, new_cache_k, new_cache_v).  For windowed attention the
+    cache is a rolling buffer of size ``window``; insertion position is
+    pos % window and key positions are reconstructed for masking.
+    """
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k, v = attn_qkv(cfg, p, x, positions)
+    kh = jnp.moveaxis(k, 2, 1)     # (B, K, 1, Dh)
+    vh = jnp.moveaxis(v, 2, 1)
+    s = cache_k.shape[2]
+    slot = pos % s if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, kh.astype(cache_k.dtype), (0, 0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, vh.astype(cache_v.dtype), (0, 0, slot, 0))
+    # Grouped-query attention without materializing repeated KV heads:
+    # q heads are reshaped to (B, K, rep, Dh) against the (B, K, S, Dh)
+    # cache.  Accumulation in f32 via preferred_element_type.
+    rep = cfg.num_heads // cfg.num_kv_heads
+    b = x.shape[0]
+    qg = q.reshape(b, cfg.num_kv_heads, rep, cfg.head_dim)
+    logits = jnp.einsum("bkrd,bksd->bkrs", qg, cache_k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / np.sqrt(cfg.head_dim)
+    kpos = jnp.arange(s)
+    if window is None:
+        valid = kpos <= pos
+    else:
+        # rolling buffer: slot i holds absolute position pos - ((slot - i)
+        # mod window); valid if within the window and not in the future.
+        age = (slot - kpos) % s
+        abs_pos = pos - age
+        valid = (abs_pos >= 0) & (abs_pos > pos - window)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bksd->bkrd", w.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# -- MLP -----------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": P((D, F), ("embed", "mlp")),
+        "w_up": P((D, F), ("embed", "mlp")),
+        "w_down": P((F, D), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["w_down"].astype(x.dtype))
+
+
+# -- embeddings / head -----------------------------------------------------------
+def embed_spec(cfg: ModelConfig) -> dict:
+    spec = {
+        "embedding": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                       "const_std", scale=0.02),
+        "final_norm": P((cfg.d_model,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.num_codebooks > 1:
+        spec["codebook_embed"] = P(
+            (cfg.num_codebooks - 1, cfg.vocab_size, cfg.d_model),
+            ("codebooks", "vocab", "embed"), "const_std", scale=0.02)
+        spec["codebook_head"] = P(
+            (cfg.num_codebooks - 1, cfg.d_model, cfg.vocab_size),
+            ("codebooks", "embed", "vocab"))
+    if cfg.frontend == "vision_stub":
+        # projection from precomputed (stub) patch embeddings to d_model
+        spec["patch_proj"] = P((cfg.d_model, cfg.d_model), ("embed_in", "embed"))
+    return spec
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens, dtype):
+    """tokens: (B, S) or (B, S, n_codebooks) -> (B, S, D)."""
+    if cfg.num_codebooks > 1:
+        x = p["embedding"][tokens[..., 0]]
+        for c in range(cfg.num_codebooks - 1):
+            x = x + p["codebook_embed"][c][tokens[..., c + 1]]
+    else:
+        x = p["embedding"][tokens]
+    return x.astype(dtype)
+
+
+def lm_logits(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, V) (or (B, S, n_codebooks, V) for audio)."""
+    head = (p["embedding"].T if cfg.tie_embeddings else p["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.num_codebooks > 1:
+        extra = jnp.einsum("bsd,cdv->bscv", x,
+                           p["codebook_head"].astype(x.dtype))
+        logits = jnp.concatenate([logits[:, :, None, :], extra], axis=2)
+    if cfg.logits_softcap:
+        cap = cfg.logits_softcap
+        logits = jnp.tanh(logits / cap) * cap
+    return logits.astype(jnp.float32)
+
+
+def apply_frontend(cfg: ModelConfig, p, x, frontend_inputs):
+    """Splice stub modality embeddings into the token embedding sequence.
+
+    vision_stub: ``frontend_inputs`` is (B, num_patches, D) precomputed
+    patch embeddings (the ViT is an assignment-mandated stub); they are
+    projected and overwrite the first ``num_patches`` positions
+    (image-placeholder tokens).
+    """
+    if cfg.frontend == "vision_stub" and frontend_inputs is not None:
+        patches = jnp.einsum("bpe,ed->bpd", frontend_inputs.astype(x.dtype),
+                             p["patch_proj"].astype(x.dtype))
+        npatch = patches.shape[1]
+        x = jnp.concatenate([patches, x[:, npatch:]], axis=1)
+    return x
+
+
+def constrain_act(x, cfg: "ModelConfig | None" = None):
+    """Pin the residual stream sharding.
+
+    Default: batch-sharded only (keeps GSPMD from inventing exotic
+    scan-carry shardings).  With ``cfg.seq_parallel`` the sequence dim is
+    sharded over the model axis in the norm/residual regions
+    (Megatron-SP): GSPMD then all-gathers into the TP matmuls and
+    reduce-scatters out, cutting activation memory by the TP degree.
+    """
+    from repro.distributed.ctx import constrain
+    seq_axis = "seq_sp" if (cfg is not None and cfg.seq_parallel) else "seq"
+    return constrain(x, ("batch", seq_axis, "act_embed"))
+
+
+def _auto_block(n_layers: int) -> int:
+    """Largest divisor of n_layers not exceeding ~sqrt(n_layers)."""
+    limit = int(np.ceil(np.sqrt(n_layers))) + 1
+    best = 1
+    for k in range(1, limit + 1):
+        if n_layers % k == 0:
+            best = k
+    return best
+
+
+def stacked_apply(cfg: ModelConfig, body, x, layers, n_layers: int):
+    """Apply ``body(carry, layer_params) -> (carry, y)`` over a stacked
+    layer pytree with two-level rematerialization.
+
+    Inner level: each layer body is checkpointed (recompute in bwd).
+    Outer level: layers are grouped into blocks of ``cfg.remat_block``
+    (auto ~sqrt(L)); the block is checkpointed too, so the bwd pass keeps
+    only L/k block carries live plus k transient inner carries — the
+    classic O(sqrt(L)) activation-memory schedule.
+    """
+    from repro.utils.tree import scan_or_loop
+
+    if cfg.remat == "none":
+        return scan_or_loop(cfg.scan_layers, body, x, layers, n_layers)
+    inner = jax.checkpoint(body, policy=remat_policy(cfg))
+    block = cfg.remat_block or _auto_block(n_layers)
+    if block <= 1 or n_layers % block:
+        return scan_or_loop(cfg.scan_layers, inner, x, layers, n_layers)
+    nblocks = n_layers // block
+    blocked = jax.tree.map(
+        lambda a: a.reshape((nblocks, block) + a.shape[1:]), layers)
+
+    def outer(carry, bp):
+        carry, ys = scan_or_loop(cfg.scan_layers, inner, carry, bp, block)
+        return carry, ys
+
+    outer = jax.checkpoint(outer, policy=remat_policy(cfg))
+    carry, ys = scan_or_loop(cfg.scan_layers, outer, x, blocked, nblocks)
+    if ys is not None:
+        ys = jax.tree.map(
+            lambda a: a.reshape((n_layers,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def maybe_checkpoint(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(cfg))

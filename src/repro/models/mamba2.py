@@ -1,0 +1,193 @@
+"""Mamba2 (state-space duality / SSD) decoder — attention-free family.
+
+Block structure follows the Mamba2 paper: a fused input projection emits
+(z, x, B, C, dt); (x, B, C) pass through a causal depthwise conv; the SSD
+scan (kernels.ops.ssd_scan: Pallas chunked kernel on TPU, lax.scan oracle
+on CPU) evolves the (heads, headdim, state) recurrence; the output is
+gate-normalized (RMSNorm(y * silu(z))) and projected back.
+
+Decode keeps O(1) state per layer: a (conv_width-1) conv tail plus the
+(H, P, N) SSM state — which is why this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.utils.tree import scan_or_loop
+from . import common as cm
+from .config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return di, nh, g, n, conv_dim
+
+
+def layer_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, nh, g, n, conv_dim = _dims(cfg)
+    d_in_proj = 2 * di + 2 * g * n + nh
+    return {
+        "ln": cm.P((D,), ("embed",), "zeros"),
+        "in_proj": cm.P((D, d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": cm.P((cfg.conv_width, conv_dim), ("conv", "ssm_inner"),
+                       "normal", scale=0.5),
+        "conv_b": cm.P((conv_dim,), ("ssm_inner",), "zeros"),
+        "a_log": cm.P((nh,), ("ssm_heads",), "ones"),
+        "d_skip": cm.P((nh,), ("ssm_heads",), "ones"),
+        "dt_bias": cm.P((nh,), ("ssm_heads",), "zeros"),
+        "norm": cm.P((di,), ("ssm_inner",), "zeros"),
+        "out_proj": cm.P((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": cm.embed_spec(cfg),
+        "layers": cm.stack_spec(layer_spec(cfg), cfg.num_layers),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv.  xbc: (B, S, C); w: (W, C)."""
+    wdt = w.astype(xbc.dtype)
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * wdt[i] for i in range(width))
+    return out + b.astype(xbc.dtype)
+
+
+def _split_proj(cfg, proj):
+    di, nh, g, n, _ = _dims(cfg)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xs, bmat, cmat, dt
+
+
+def mamba_layer(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, nh, g, n, conv_dim = _dims(cfg)
+    x = cm.constrain_act(x, cfg)
+    xn = cm.rmsnorm(cfg, p["ln"], x)
+    proj = jnp.einsum("bsd,de->bse", xn, p["in_proj"].astype(x.dtype))
+    z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xh = xs.reshape(B, S, nh, cfg.ssm_headdim)
+    bh = bmat.reshape(B, S, g, n)
+    ch = cmat.reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    # pad S to chunk multiple for the Pallas path
+    pad = (-S) % cfg.ssm_chunk
+    if pad and cfg.kernel_impl not in ("xla",):
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, _ = kops.ssd_scan(xh, dt, a, bh, ch, chunk=cfg.ssm_chunk,
+                         impl=cfg.kernel_impl)
+    y = y[:, :S]
+    y = y + xh[:, :S] * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = cm.rmsnorm(cfg, p["norm"], y * jax.nn.silu(z))
+    return x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend_inputs=None):
+    dtype = jnp.dtype(cfg.dtype)
+    x = cm.embed_tokens(cfg, params["embed"], tokens, dtype)
+
+    body = lambda c, q: (mamba_layer(cfg, q, c), None)
+    x, _ = cm.stacked_apply(cfg, body, x, params["layers"], cfg.num_layers)
+    x = cm.rmsnorm(cfg, params["embed"]["final_norm"], x)
+    return cm.lm_logits(cfg, params["embed"], x), jnp.float32(0.0)
+
+
+def init_params(cfg: ModelConfig, key):
+    return cm.init_from_spec(model_spec(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def logical_axes(cfg: ModelConfig):
+    return cm.axes_from_spec(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Serving: O(1) recurrent state
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    di, nh, g, n, conv_dim = _dims(cfg)
+    L = cfg.num_layers
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (L, batch, cfg.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct(
+            (L, batch, nh, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "conv": ("layers", "batch", "conv", "ssm_inner"),
+        "ssm": ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One token for the whole stack.  tokens: (B,)."""
+    del pos  # state is position-free
+    dtype = jnp.dtype(cfg.dtype)
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)
+    di, nh, g, n, conv_dim = _dims(cfg)
+    B = x.shape[0]
+
+    def body(carry, inp):
+        lp, conv_st, ssm_st = inp
+        h = carry
+        xn = cm.rmsnorm(cfg, lp["ln"], h)
+        proj = jnp.einsum("bsd,de->bse", xn, lp["in_proj"].astype(h.dtype))
+        z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+        xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)[:, 0]   # (B, C)
+        hist = jnp.concatenate([conv_st, xbc[:, None, :]], axis=1)
+        w = lp["conv_w"].astype(h.dtype)
+        conv_out = jnp.einsum("bwc,wc->bc", hist, w) + lp["conv_b"].astype(h.dtype)
+        conv_out = jax.nn.silu(conv_out)
+        new_conv = hist[:, 1:, :]
+        xs1, b1, c1 = jnp.split(conv_out, [di, di + g * n], axis=-1)
+        xh = xs1.reshape(B, nh, cfg.ssm_headdim)
+        bh = jnp.repeat(b1.reshape(B, g, n), nh // g, axis=1)
+        ch = jnp.repeat(c1.reshape(B, g, n), nh // g, axis=1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + lp["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+        decay = jnp.exp(dt * a)[..., None, None]
+        ssm_new = ssm_st * decay + jnp.einsum(
+            "bhp,bhn->bhpn", (xh * dt[..., None]).astype(jnp.float32),
+            bh.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_new, ch.astype(jnp.float32))
+        y = y.astype(h.dtype) + xh * lp["d_skip"].astype(h.dtype)[None, :, None]
+        y = y.reshape(B, 1, di)
+        y = cm.rmsnorm(cfg, lp["norm"], y * jax.nn.silu(z))
+        h = h + jnp.einsum("bse,ed->bsd", y, lp["out_proj"].astype(h.dtype))
+        return h, (new_conv.astype(conv_st.dtype), ssm_new)
+
+    x, (new_conv, new_ssm) = scan_or_loop(
+        cfg.scan_layers, body, x,
+        (params["layers"], cache["conv"], cache["ssm"]), cfg.num_layers)
+    x = cm.rmsnorm(cfg, params["embed"]["final_norm"], x)
+    logits = cm.lm_logits(cfg, params["embed"], x)
+    return logits[:, 0], {"conv": new_conv, "ssm": new_ssm}

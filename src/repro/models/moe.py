@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN with sort-based (dropless-style) dispatch.
+
+TPU-native dispatch: tokens are argsorted by expert id, scattered into a
+static (E, capacity, D) buffer, processed with a single batched expert
+einsum ('ecd,edf->ecf' — MXU-shaped and shardable over the expert dim =
+expert parallelism), and combined back with top-k gate weighting.
+Overflowing tokens beyond the static capacity are dropped (standard
+capacity-factor semantics); the aux load-balancing loss keeps the router
+near-uniform so drops stay rare.
+
+Variants covered:
+* arctic-480b   — 128 experts, top-2, dense FFN residual in parallel
+  (``moe_dense_parallel``),
+* qwen2-moe-a2.7b — 60 routed experts, top-4, plus an always-on shared
+  expert (``moe_shared_d_ff``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import P, mlp, mlp_spec
+from .config import ModelConfig
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    D, E, Fe = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    Et = E + cfg.moe_expert_pad      # padded experts never receive tokens
+    spec = {
+        "router": P((D, E), ("embed", "experts_r")),
+        "w_gate": P((Et, D, Fe), ("experts", "embed", "expert_mlp")),
+        "w_up": P((Et, D, Fe), ("experts", "embed", "expert_mlp")),
+        "w_down": P((Et, Fe, D), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe_shared_d_ff:
+        spec["shared"] = mlp_spec(cfg, cfg.moe_shared_d_ff)
+    return spec
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(np.ceil(n_tokens * cfg.moe_top_k / cfg.moe_num_experts
+                      * cfg.moe_capacity_factor))
+    return max(int(np.ceil(cap / 8)) * 8, 8)   # pad for TPU tiling
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.moe_top_k
+    E = cfg.moe_num_experts
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Aux load-balancing loss (Switch-style): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    one_hot = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    fe = jnp.mean(one_hot, axis=0)
+    aux = E * jnp.sum(me * fe)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = expert_idx.reshape(-1)                            # (T*k,)
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k         # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)                                # stable
+    e_s = flat_e[order]
+    tok_s = flat_tok[order]
+    gate_s = flat_gate[order]
+    counts = jnp.bincount(flat_e, length=E)                    # (E,)
+    starts = jnp.cumsum(counts) - counts                       # exclusive
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[e_s]
+
+    cap = _capacity(cfg, T)
+    Et = E + cfg.moe_expert_pad
+    valid = rank < cap
+    slot = jnp.where(valid, e_s * cap + rank, Et * cap)        # drop row
+    buf = jnp.zeros((Et * cap + 1, D), x.dtype).at[slot].set(xf[tok_s])
+    h = buf[: Et * cap].reshape(Et, cap, D)
+
+    # ---- expert compute (EP-shardable over E) -----------------------------
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                     p["w_down"].astype(x.dtype))
+
+    # ---- combine -----------------------------------------------------------
+    out_flat = out.reshape(Et * cap, D)
+    gathered = jnp.where(valid[:, None], out_flat[jnp.minimum(slot, Et * cap - 1)], 0.0)
+    contrib = gathered * gate_s[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok_s].add(contrib)
+    return y.reshape(B, S, D), aux
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """The full FFN half of an MoE layer (routed + shared/dense paths)."""
+    if cfg.moe_impl == "ep":
+        from repro.distributed import ctx as dctx
+        c = dctx.current()
+        if c is not None:
+            mesh, _ = c
+            from repro.distributed.moe_parallel import moe_ffn_ep
+            data_axes = tuple(a for a in ("pod", "data")
+                              if a in mesh.axis_names)
+            y, aux = moe_ffn_ep(cfg, mesh, p["moe"], x,
+                                data_axes=data_axes)
+        else:
+            y, aux = moe_ffn(cfg, p["moe"], x)
+    else:
+        y, aux = moe_ffn(cfg, p["moe"], x)
+    if cfg.moe_shared_d_ff:
+        y = y + mlp(p["moe"]["shared"], x)
+    if cfg.moe_dense_parallel:
+        y = y + mlp(p["dense_mlp"], x)
+    return y, aux

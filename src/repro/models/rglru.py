@@ -1,0 +1,283 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention
+in a 1:2 pattern (rec, rec, attn), each followed by a SwiGLU MLP.
+
+The RG-LRU gate structure follows Griffin: per-block-diagonal recurrence
+and input gates, a learned per-channel decay ``a = sigmoid(Lambda)``
+raised to ``c * r_t``, and input scaled by sqrt(1 - a_t^2).  The diagonal
+linear recurrence runs through kernels.ops.linear_recurrence (Pallas
+blocked scan on TPU, lax.scan oracle elsewhere).
+
+Layer-stack organization: the 38-layer model is 12 scanned pattern groups
+of (rec, rec, attn) + 2 trailing rec layers, each group scanned with
+``lax.scan`` so the HLO stays compact.  Local attention uses a rolling
+window cache, which bounds decode state and enables ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.utils.tree import scan_or_loop
+from . import common as cm
+from .config import ModelConfig
+
+
+def _rec_dims(cfg: ModelConfig):
+    di = cfg.d_model            # lru width = d_model (recurrentgemma)
+    nb = cfg.num_heads          # gate block-diagonal blocks
+    return di, nb, di // nb
+
+
+def rec_block_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, nb, bs = _rec_dims(cfg)
+    return {
+        "ln": cm.P((D,), ("embed",), "zeros"),
+        "proj_x": cm.P((D, di), ("embed", "rnn")),
+        "proj_gate": cm.P((D, di), ("embed", "rnn")),
+        "conv_w": cm.P((cfg.conv_width, di), ("conv", "rnn"), "normal", 0.5),
+        "conv_b": cm.P((di,), ("rnn",), "zeros"),
+        "w_a": cm.P((nb, bs, bs), ("rnn_blocks", "rnn_in", "rnn_out")),
+        "b_a": cm.P((di,), ("rnn",), "zeros"),
+        "w_i": cm.P((nb, bs, bs), ("rnn_blocks", "rnn_in", "rnn_out")),
+        "b_i": cm.P((di,), ("rnn",), "zeros"),
+        "lam": cm.P((di,), ("rnn",), "ones"),
+        "out_proj": cm.P((di, D), ("rnn", "embed")),
+        "ln2": cm.P((D,), ("embed",), "zeros"),
+        "mlp": cm.mlp_spec(cfg),
+    }
+
+
+def attn_block_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "ln": cm.P((D,), ("embed",), "zeros"),
+        "attn": cm.attn_spec(cfg),
+        "ln2": cm.P((D,), ("embed",), "zeros"),
+        "mlp": cm.mlp_spec(cfg),
+    }
+
+
+def _pattern_counts(cfg: ModelConfig):
+    plen = len(cfg.block_pattern)
+    groups = cfg.num_layers // plen
+    tail = cfg.num_layers - groups * plen
+    return plen, groups, tail
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    plen, groups, tail = _pattern_counts(cfg)
+    group_spec = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        sp = rec_block_spec(cfg) if kind == "rec" else attn_block_spec(cfg)
+        group_spec[f"b{i}_{kind}"] = sp
+    spec = {
+        "embed": cm.embed_spec(cfg),
+        "groups": cm.stack_spec(group_spec, groups, "layer_groups"),
+    }
+    for t in range(tail):
+        spec[f"tail{t}"] = rec_block_spec(cfg)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+def _block_linear(w, x):
+    """Block-diagonal linear: w (nb, bs, bs); x (..., nb*bs)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    return jnp.einsum("...ni,nij->...nj", xs, w.astype(x.dtype)).reshape(x.shape)
+
+
+def rglru(cfg: ModelConfig, p, u, h0=None):
+    """u: (B, S, di) -> (B, S, di).  h0 optional initial state (B, di)."""
+    r = jax.nn.sigmoid(_block_linear(p["w_a"], u)
+                       + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(_block_linear(p["w_i"], u)
+                       + p["b_i"].astype(u.dtype))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))   # log a
+    log_a = cfg.rglru_c * r.astype(jnp.float32) * log_a0        # (B,S,di)
+    a = jnp.exp(log_a)
+    gated = (i * u).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    h = kops.linear_recurrence(a, b, impl=cfg.kernel_impl)
+    return h.astype(u.dtype)
+
+
+def rec_block(cfg: ModelConfig, p, x):
+    x = cm.constrain_act(x, cfg)
+    xn = cm.rmsnorm(cfg, p["ln"], x)
+    u = jnp.einsum("bsd,de->bse", xn, p["proj_x"].astype(x.dtype))
+    from .mamba2 import _causal_conv
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    h = rglru(cfg, p, u)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xn,
+                                  p["proj_gate"].astype(x.dtype)))
+    y = jnp.einsum("bse,ed->bsd", h * gate, p["out_proj"].astype(x.dtype))
+    x = x + y
+    x = x + cm.mlp(p["mlp"], cm.rmsnorm(cfg, p["ln2"], x))
+    return x
+
+
+def attn_block(cfg: ModelConfig, p, x, positions):
+    x = cm.constrain_act(x, cfg)
+    h = cm.attention(cfg, p["attn"], cm.rmsnorm(cfg, p["ln"], x), positions,
+                     window=cfg.window)
+    x = x + h
+    x = x + cm.mlp(p["mlp"], cm.rmsnorm(cfg, p["ln2"], x))
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend_inputs=None):
+    dtype = jnp.dtype(cfg.dtype)
+    x = cm.embed_tokens(cfg, params["embed"], tokens, dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def group_body(carry, gp):
+        h = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            p = gp[f"b{i}_{kind}"]
+            h = rec_block(cfg, p, h) if kind == "rec" else attn_block(
+                cfg, p, h, positions)
+        return h, None
+
+    _, groups, tail = _pattern_counts(cfg)
+    x, _ = cm.stacked_apply(cfg, group_body, x, params["groups"], groups)
+    for t in range(tail):
+        x = rec_block(cfg, params[f"tail{t}"], x)
+    x = cm.rmsnorm(cfg, params["embed"]["final_norm"], x)
+    return cm.lm_logits(cfg, params["embed"], x), jnp.float32(0.0)
+
+
+def init_params(cfg: ModelConfig, key):
+    return cm.init_from_spec(model_spec(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def logical_axes(cfg: ModelConfig):
+    return cm.axes_from_spec(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    di, _, _ = _rec_dims(cfg)
+    plen, groups, tail = _pattern_counts(cfg)
+    n_rec_per_group = sum(1 for k in cfg.block_pattern if k == "rec")
+    n_att_per_group = plen - n_rec_per_group
+    w = min(cfg.window or max_seq, max_seq)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "rec_h": jax.ShapeDtypeStruct(
+            (groups, n_rec_per_group, batch, di), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (groups, n_rec_per_group, batch, cfg.conv_width - 1, di), dt),
+        "k": jax.ShapeDtypeStruct(
+            (groups, n_att_per_group, batch, cfg.num_kv_heads, w,
+             cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct(
+            (groups, n_att_per_group, batch, cfg.num_kv_heads, w,
+             cfg.head_dim), dt),
+        "tail_rec_h": jax.ShapeDtypeStruct((max(tail, 1), batch, di),
+                                           jnp.float32),
+        "tail_conv": jax.ShapeDtypeStruct(
+            (max(tail, 1), batch, cfg.conv_width - 1, di), dt),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "rec_h": ("layer_groups", None, "batch", "rnn"),
+        "conv": ("layer_groups", None, "batch", "conv", "rnn"),
+        "k": ("layer_groups", None, "batch", "kv_heads", "cache_seq",
+              "head_dim"),
+        "v": ("layer_groups", None, "batch", "kv_heads", "cache_seq",
+              "head_dim"),
+        "tail_rec_h": (None, "batch", "rnn"),
+        "tail_conv": (None, "batch", "conv", "rnn"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq))
+
+
+def _rec_block_decode(cfg, p, x, h_prev, conv_st):
+    """x: (B, 1, D); h_prev: (B, di); conv_st: (B, W-1, di)."""
+    xn = cm.rmsnorm(cfg, p["ln"], x)
+    u = jnp.einsum("bsd,de->bse", xn, p["proj_x"].astype(x.dtype))[:, 0]
+    hist = jnp.concatenate([conv_st, u[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    u = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+    r = jax.nn.sigmoid(_block_linear(p["w_a"], u) + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(_block_linear(p["w_i"], u) + p["b_i"].astype(u.dtype))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(cfg.rglru_c * r.astype(jnp.float32) * log_a0)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (
+        i * u).astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xn,
+                                  p["proj_gate"].astype(x.dtype)))[:, 0]
+    y = jnp.einsum("be,ed->bd", h.astype(x.dtype) * gate,
+                   p["out_proj"].astype(x.dtype))
+    x = x + y[:, None, :]
+    x = x + cm.mlp(p["mlp"], cm.rmsnorm(cfg, p["ln2"], x))
+    return x, h, new_conv
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], dtype)
+    plen, groups, tail = _pattern_counts(cfg)
+    del plen
+    rec_ids = [i for i, k in enumerate(cfg.block_pattern) if k == "rec"]
+    att_ids = [i for i, k in enumerate(cfg.block_pattern) if k == "attn"]
+
+    def group_body(carry, inp):
+        gp, rec_h, conv, ck, cv = inp
+        h = carry
+        new_rh, new_cv_st, new_k, new_v = [], [], [], []
+        ri = ai = 0
+        for i, kind in enumerate(cfg.block_pattern):
+            p = gp[f"b{i}_{kind}"]
+            if kind == "rec":
+                h, hh, cst = _rec_block_decode(cfg, p, h, rec_h[ri], conv[ri])
+                new_rh.append(hh); new_cv_st.append(cst)
+                ri += 1
+            else:
+                hn = cm.rmsnorm(cfg, p["ln"], h)
+                att, k1, v1 = cm.attention_decode(
+                    cfg, p["attn"], hn, ck[ai], cv[ai], pos,
+                    window=cfg.window)
+                h = h + att
+                h = h + cm.mlp(p["mlp"], cm.rmsnorm(cfg, p["ln2"], h))
+                new_k.append(k1); new_v.append(v1)
+                ai += 1
+        return h, (jnp.stack(new_rh), jnp.stack(new_cv_st),
+                   jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (rh, cst, k, v) = scan_or_loop(
+        cfg.scan_layers, group_body, x,
+        (params["groups"], cache["rec_h"], cache["conv"], cache["k"],
+         cache["v"]), groups)
+    new_cache = dict(cache)
+    new_cache.update(rec_h=rh, conv=cst, k=k, v=v)
+    tail_h, tail_c = [], []
+    for t in range(tail):
+        x, hh, cc = _rec_block_decode(cfg, params[f"tail{t}"], x,
+                                      cache["tail_rec_h"][t],
+                                      cache["tail_conv"][t])
+        tail_h.append(hh); tail_c.append(cc)
+    if tail:
+        new_cache["tail_rec_h"] = jnp.stack(tail_h)
+        new_cache["tail_conv"] = jnp.stack(tail_c)
+    x = cm.rmsnorm(cfg, params["embed"]["final_norm"], x)
+    logits = cm.lm_logits(cfg, params["embed"], x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,5 @@
+from .elastic import ReshardPlan, largest_mesh, make_reshard_plan, validate_plan  # noqa: F401
+from .failures import (  # noqa: F401
+    FailureDetector, HostState, RestartBudget, StragglerPolicy,
+)
+from .zns_store import ZnsHostDevice, ZonedCheckpointStore  # noqa: F401

@@ -1,0 +1,1 @@
+from .step import greedy_generate, make_prefill_step, make_serve_step  # noqa: F401

@@ -1,0 +1,50 @@
+"""Serve-step factories: prefill and single-token decode with greedy or
+temperature sampling.  The decode step donates the cache buffer."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as M
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, tokens, frontend_inputs=None):
+        logits, cache = M.prefill(cfg, params, tokens, max_seq,
+                                  frontend_inputs)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens, pos) -> (next_tokens, new_cache).
+
+    One new token per sequence against the existing KV/recurrent cache —
+    this is what the ``decode_*`` / ``long_*`` dry-run cells lower.
+    """
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = M.decode_step(cfg, params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, *, steps: int,
+                    max_seq: int):
+    """Reference autoregressive loop (tests/examples; not the hot path)."""
+    prefill = make_prefill_step(cfg, max_seq)
+    step = make_serve_step(cfg)
+    tok, cache = prefill(params, prompt)
+    toks = [tok]
+    pos = prompt.shape[1]
+    for i in range(steps - 1):
+        tok, cache = step(params, cache, tok, jnp.int32(pos + i))
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,1 @@
+from .step import TrainState, make_train_step, state_logical_axes, state_spec  # noqa: F401

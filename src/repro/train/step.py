@@ -1,0 +1,112 @@
+"""Train-step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation.  Pure function of (state, batch); distribution is
+imposed from outside via jit in/out shardings (launch/dryrun.py,
+launch/train.py)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as M
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: dict
+    opt: dict
+
+    @staticmethod
+    def create(cfg: ModelConfig, key) -> "TrainState":
+        params = M.init_params(cfg, key)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt=init_opt_state(params))
+
+
+def state_spec(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct skeleton of TrainState (no allocation)."""
+    spec = M.model_spec(cfg)
+    import numpy as np
+    from repro.models.common import P as PSpec
+
+    def sds(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(cfg.param_dtype))
+
+    def sds32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
+    leaf = lambda x: isinstance(x, PSpec)
+    params = jax.tree.map(sds, spec, is_leaf=leaf)
+    opt = {"m": jax.tree.map(sds32, spec, is_leaf=leaf),
+           "v": jax.tree.map(sds32, spec, is_leaf=leaf)}
+    return TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      params=params, opt=opt)
+
+
+def state_logical_axes(cfg: ModelConfig) -> TrainState:
+    axes = M.logical_axes(cfg)
+    return TrainState(step=None, params=axes, opt={"m": axes, "v": axes})
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    *, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates grads over a lax.scan of microbatch
+    slices (batch dim must divide evenly).
+    """
+
+    def loss_of(params, batch):
+        loss, metrics = M.loss_fn(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbatch = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            loss, metrics, grads = single(params, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 acc_g, grads)
+            return (acc_g, acc_l + loss), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.float32(0.0)), mbatch)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * inv, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(state.params, batch)
+        else:
+            loss, metrics, grads = single(state.params, batch)
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt, state.step)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        new_state = TrainState(step=state.step + 1, params=params, opt=opt)
+        return new_state, metrics
+
+    return train_step

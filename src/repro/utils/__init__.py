@@ -1,0 +1,2 @@
+from .hlo import CollectiveStats, collective_stats  # noqa: F401
+from .tree import scan_or_loop, tree_bytes, tree_count  # noqa: F401

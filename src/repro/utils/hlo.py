@@ -1,0 +1,105 @@
+"""Post-compile HLO analysis: collective-traffic accounting.
+
+``compiled.as_text()`` (post-SPMD-partitioning, post-optimization) lists
+every collective instruction with its result shape.  We sum result-shape
+bytes per collective kind and derive a wire-bytes estimate with standard
+ring-algorithm factors.  Conventions:
+
+* all-gather:          result = fully gathered tensor  -> wire ~ result
+* all-reduce:          result = operand                -> wire ~ 2 x result
+* reduce-scatter:      result = operand / n            -> wire ~ n x result
+* all-to-all:          result = operand                -> wire ~ result
+* collective-permute:  result = operand                -> wire ~ result
+
+``-start``/``-done`` async pairs are deduplicated by counting only the
+start (or the sync form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like bf16[8,128]{1,0} or f32[] ; tuple results are (shape, shape, ...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_REPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: dict
+    result_bytes: dict
+    wire_bytes: dict
+
+    @property
+    def total_result_bytes(self) -> float:
+        return float(sum(self.result_bytes.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    def as_dict(self) -> dict:
+        return {"count": self.count, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes,
+                "total_result_bytes": self.total_result_bytes,
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    count = {k: 0 for k in _COLLECTIVES}
+    rbytes = {k: 0.0 for k in _COLLECTIVES}
+    wbytes = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_text, kind, _ = m.groups()
+        nbytes = _shape_bytes(result_text)
+        # group size for reduce-scatter wire estimate
+        g = _REPL_RE.search(line)
+        gsize = (len(g.group(1).split(",")) if g else 1) or 1
+        count[kind] += 1
+        rbytes[kind] += nbytes
+        if kind == "reduce-scatter":
+            wbytes[kind] += nbytes * gsize
+        else:
+            wbytes[kind] += nbytes * _WIRE_FACTOR[kind]
+    return CollectiveStats(count, rbytes, wbytes)

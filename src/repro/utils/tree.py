@@ -1,0 +1,36 @@
+"""Small pytree helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(tree)))
+
+
+def tree_count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def scan_or_loop(use_scan: bool, body, carry, xs, length: int):
+    """lax.scan when ``use_scan`` else an unrolled python loop.
+
+    The unrolled form exists for roofline extraction: XLA's cost analysis
+    counts a while-loop body once, so per-layer costs are measured from
+    small unrolled variants and extrapolated affinely in depth.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and all(y is not None for y in jax.tree.leaves(ys[0], is_leaf=lambda v: v is None)):
+        stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *ys) if ys else None
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,146 @@
+"""Data pipeline determinism/resume, optimizer math, failure policies,
+elastic resharding."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, TokenPipeline
+from repro.optim import (
+    AdamWConfig, adamw_update, clip_by_global_norm, init_opt_state,
+    schedule_lr,
+)
+from repro.runtime import (
+    FailureDetector, HostState, RestartBudget, StragglerPolicy,
+    make_reshard_plan, validate_plan,
+)
+
+
+# -- data ---------------------------------------------------------------------
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8)
+    p1 = TokenPipeline(cfg)
+    batches = [next(p1) for _ in range(3)]
+    p2 = TokenPipeline(cfg)
+    p2.load_state_dict({"step": 2})
+    np.testing.assert_array_equal(next(p2)["tokens"], batches[2]["tokens"])
+
+
+def test_pipeline_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=8)
+    shards = [TokenPipeline(cfg, shard=s, num_shards=4).batch_at(0)["tokens"]
+              for s in range(4)]
+    assert all(s.shape == (2, 8) for s in shards)
+    # distinct shards
+    assert not np.array_equal(shards[0], shards[1])
+
+
+def test_pipeline_elastic_reshard_preserves_step():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=12)
+    p = TokenPipeline(cfg, shard=0, num_shards=4)
+    for _ in range(5):
+        next(p)
+    q = p.reshard(shard=1, num_shards=3)
+    assert q.state.step == 5
+    assert q.batch_at(5)["tokens"].shape == (4, 8)
+
+
+def test_token_distribution_is_zipfish():
+    cfg = DataConfig(vocab_size=1000, seq_len=256, global_batch=16)
+    toks = TokenPipeline(cfg).batch_at(0)["tokens"].ravel()
+    counts = np.bincount(toks, minlength=1000)
+    top = counts.max() / len(toks)
+    assert top > 5.0 / 1000       # head much heavier than uniform
+
+
+# -- optimizer -------------------------------------------------------------------
+def test_adamw_matches_manual_reference():
+    cfg = AdamWConfig(lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8,
+                      weight_decay=0.0, clip_norm=1e9, warmup_steps=0,
+                      schedule="constant")
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st = init_opt_state(p)
+    new_p, st2, _ = adamw_update(cfg, p, g, st, jnp.int32(0))
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    assert float(new_p["w"][0]) == pytest.approx(expect, rel=1e-5)
+
+
+def test_weight_decay_decoupled():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=1e9,
+                      warmup_steps=0, schedule="constant")
+    p = {"w": jnp.array([2.0])}
+    g = {"w": jnp.array([0.0])}
+    new_p, _, _ = adamw_update(cfg, p, g, init_opt_state(p), jnp.int32(0))
+    assert float(new_p["w"][0]) == pytest.approx(2.0 - 0.1 * 0.5 * 2.0)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = np.sqrt(float(clipped["a"][0]) ** 2 + float(clipped["b"][0]) ** 2)
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_frac=0.1)
+    assert float(schedule_lr(cfg, jnp.int32(0))) == pytest.approx(0.0)
+    assert float(schedule_lr(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    end = float(schedule_lr(cfg, jnp.int32(110)))
+    assert end == pytest.approx(0.1, rel=1e-3)
+
+
+# -- failure detection / straggler / restart budget ------------------------------
+def test_failure_detector_transitions():
+    fd = FailureDetector(3, lease_s=10)
+    for h in range(3):
+        fd.heartbeat(h, 0.0)
+    assert fd.tick(5.0) == {}
+    ch = fd.tick(15.0)
+    assert all(s is HostState.SUSPECT for s in ch.values())
+    ch = fd.tick(25.0)
+    assert all(s is HostState.DEAD for s in ch.values())
+    fd.heartbeat(1, 26.0)
+    assert fd.hosts[1].state is HostState.HEALTHY
+    assert fd.hosts[1].incarnation == 1
+    assert fd.healthy_hosts() == [1]
+
+
+def test_straggler_policy_backups():
+    sp = StragglerPolicy(factor=1.5)
+    for d in (1.0, 1.1, 0.9, 1.0, 1.05):
+        sp.observe(d)
+    plan = sp.mitigate({0: 1.0, 1: 5.0, 2: 1.1})
+    assert plan == {1: 2}
+
+
+def test_restart_budget():
+    rb = RestartBudget(max_restarts=2, window_s=100)
+    assert rb.allow(0.0) and rb.allow(1.0)
+    assert not rb.allow(2.0)
+    assert rb.allow(200.0)
+
+
+# -- elastic ----------------------------------------------------------------------
+def test_reshard_plan_valid_and_deterministic():
+    old = list(range(8))
+    new = [0, 1, 2, 4, 5, 6, 7]       # host 3 died
+    p1 = make_reshard_plan(old, new, model_parallel=4, chips_per_host=4)
+    p2 = make_reshard_plan(old, new, model_parallel=4, chips_per_host=4)
+    assert p1 == p2
+    validate_plan(p1)
+    assert p1.mesh_shape == (7, 4)
+    ranks = [p1.data_shards[h][0] for h in sorted(p1.data_shards)]
+    assert sorted(ranks) == list(range(7))
+
+
+def test_reshard_rejects_too_few_chips():
+    with pytest.raises(ValueError):
+        make_reshard_plan([0, 1], [0], model_parallel=16, chips_per_host=4)

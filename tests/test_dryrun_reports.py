@@ -1,0 +1,65 @@
+"""Deliverable gate: the 40-cell dry-run sweep must be complete and green.
+
+Reads reports/dryrun (committed sweep output).  Skips if the sweep
+hasn't been run in this checkout.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(REPO, "reports", "dryrun")
+
+ARCHS = ("tinyllama-1.1b", "qwen3-4b", "qwen3-8b", "llama3-405b",
+         "arctic-480b", "qwen2-moe-a2.7b", "mamba2-370m", "internvl2-26b",
+         "musicgen-large", "recurrentgemma-9b")
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SUBQUADRATIC = ("mamba2-370m", "recurrentgemma-9b")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(DRYRUN, "*.json")),
+    reason="dry-run sweep not present (run scripts/run_dryrun_sweep.sh)")
+
+
+@pytest.mark.parametrize("mesh", ("single", "multi"))
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cell_report(arch, shape, mesh):
+    path = os.path.join(DRYRUN, f"{arch}_{shape}_{mesh}.json")
+    assert os.path.exists(path), f"missing sweep cell {path}"
+    with open(path) as f:
+        r = json.load(f)
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        assert r["status"] == "skipped"
+        assert "sub-quadratic" in r["reason"]
+        return
+    assert r["status"] == "ok", r.get("error")
+    mem = r["full"]["memory"]
+    assert mem["temp_bytes"] >= 0 and mem["argument_bytes"] > 0
+    assert r["full"]["flops"] > 0
+    # multi-pod runs must actually use 512 chips
+    chips = 1
+    for v in r["mesh_shape"].values():
+        chips *= v
+    assert chips == (512 if mesh == "multi" else 256)
+
+
+def test_roofline_terms_positive():
+    import sys
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch.roofline import load_cells, roofline_row
+    cells = load_cells([DRYRUN, os.path.join(REPO, "reports",
+                                             "dryrun_fitfix")])
+    n = 0
+    for key, r in cells.items():
+        if key[2] != "single" or r.get("status") != "ok":
+            continue
+        row = roofline_row(r)
+        assert row["t_compute_s"] > 0
+        assert row["t_memory_s"] > 0
+        assert row["dominant"] in ("compute", "memory", "collective")
+        assert 0 < row["useful_flop_ratio"] < 20
+        n += 1
+    assert n >= 30

@@ -1,0 +1,83 @@
+"""Event-engine invariants (hypothesis) + steady-state model sanity."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (
+    KiB, OpType, Stack, ThroughputModel, Trace, simulate,
+)
+from repro.core.engine import zone_sequential_completions
+
+
+@given(st.integers(1, 200), st.integers(1, 8), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_engine_conservation_and_ordering(n, qd, seed):
+    rng = np.random.default_rng(seed)
+    ops = rng.choice([int(OpType.READ), int(OpType.WRITE),
+                      int(OpType.APPEND)], size=n)
+    tr = Trace.build(
+        op=ops, zone=rng.integers(0, 10, n),
+        size=rng.choice([4 * KiB, 8 * KiB, 32 * KiB], n),
+        issue=np.sort(rng.uniform(0, 1e5, n)),
+        thread=rng.integers(0, 4, n), qd=np.full(n, qd))
+    res = simulate(tr, seed=seed)
+    # completion after start, start after issue is NOT guaranteed (closed
+    # loop gates on ring), but start is never negative and svc > 0
+    assert (res.complete >= res.start).all()
+    assert (res.service > 0).all()
+    assert (res.start >= 0).all()
+    # per-zone write serialization: write intervals in a zone don't overlap
+    for z in range(10):
+        m = (tr.zone == z) & (tr.op == OpType.WRITE)
+        if m.sum() < 2:
+            continue
+        s, c = res.start[m], res.complete[m]
+        order = np.argsort(s)
+        assert (s[order][1:] >= c[order][:-1] - 1e-6).all()
+
+
+@given(st.integers(2, 400), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_zone_sequential_completions_properties(n, seed):
+    rng = np.random.default_rng(seed)
+    issue = np.sort(rng.uniform(0, 1e4, n))
+    svc = rng.uniform(0.5, 40, n)
+    seg = rng.uniform(size=n) < 0.08
+    seg[0] = True
+    out = zone_sequential_completions(issue, svc, seg, backend="numpy")
+    # each completion >= issue + svc; within a segment, strictly increasing
+    assert (out >= issue + svc - 1e-6).all()
+    cur_seg_start = 0
+    for i in range(1, n):
+        if seg[i]:
+            cur_seg_start = i
+            continue
+        assert out[i] >= out[i - 1] + svc[i] - 1e-6
+
+
+def test_steady_state_monotone_in_concurrency():
+    tm = ThroughputModel()
+    last = 0.0
+    for qd in (1, 2, 4, 8, 16, 32):
+        iops = tm.steady_state(OpType.READ, 4 * KiB, qd=qd).iops
+        assert iops >= last - 1e-6
+        last = iops
+
+
+def test_steady_state_rejects_spdk_multi_write_per_zone():
+    tm = ThroughputModel()
+    import pytest
+    with pytest.raises(ValueError):
+        tm.steady_state(OpType.WRITE, 4 * KiB, qd=4, stack=Stack.SPDK)
+
+
+def test_bandwidth_never_exceeds_device_cap():
+    tm = ThroughputModel()
+    for op in (OpType.WRITE, OpType.APPEND):
+        for size_k in (4, 16, 64, 256):
+            for qd in (1, 4, 16):
+                for zones in (1, 4):
+                    if op == OpType.WRITE and qd > 1:
+                        continue
+                    r = tm.steady_state(op, size_k * KiB, qd=qd, zones=zones)
+                    assert r.bandwidth_bytes <= tm.spec.peak_write_bw_bytes * 1.001

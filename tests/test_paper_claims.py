@@ -1,0 +1,171 @@
+"""The paper's 13 observations + 5 recommendations, asserted against the
+model.  Anchors marked 'exact' must round-trip the paper's number;
+'trend' assertions check the direction/magnitude class."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    KiB, MiB, LatencyModel, LBAFormat, OpType, Stack, ThroughputModel,
+    simulate,
+)
+from repro.core import calibration as C
+from repro.core.workloads import reset_interference
+
+lm = LatencyModel()
+tm = ThroughputModel()
+
+
+# -- Obs#1: LBA format matters -------------------------------------------------
+def test_obs1_lba_format_penalty():
+    for op in (OpType.WRITE, OpType.APPEND):
+        l512 = float(lm.io_service_us(op, 512, fmt=LBAFormat.LBA_512))
+        l4k = float(lm.io_service_us(op, 4 * KiB, fmt=LBAFormat.LBA_4K))
+        assert l512 > l4k
+        assert l512 / l4k <= 2.1   # "as much as a factor of two"
+
+
+# -- Obs#2: SPDK lowest latency (exact anchors) ----------------------------------
+def test_obs2_stack_latencies_exact():
+    assert float(lm.io_service_us(OpType.WRITE, 4 * KiB, Stack.SPDK)) == \
+        pytest.approx(11.36, abs=0.01)
+    assert float(lm.io_service_us(OpType.WRITE, 4 * KiB, Stack.KERNEL_NONE)) \
+        == pytest.approx(12.62, abs=0.01)
+    assert float(lm.io_service_us(OpType.WRITE, 4 * KiB,
+                                  Stack.KERNEL_MQ_DEADLINE)) == \
+        pytest.approx(14.47, abs=0.01)
+
+
+# -- Obs#3: request-size dependence ---------------------------------------------
+def test_obs3_throughput_vs_size():
+    w4 = tm.steady_state(OpType.WRITE, 4 * KiB)
+    a4 = tm.steady_state(OpType.APPEND, 4 * KiB)
+    a8 = tm.steady_state(OpType.APPEND, 8 * KiB)
+    assert w4.iops == pytest.approx(85_000, rel=0.05)
+    assert a4.iops == pytest.approx(66_000, rel=0.02)
+    assert a8.iops == pytest.approx(69_000, rel=0.05)
+    # bytes-throughput highest for large requests
+    w32 = tm.steady_state(OpType.WRITE, 32 * KiB)
+    assert w32.bandwidth_bytes > w4.bandwidth_bytes * 3
+
+
+# -- Obs#4: write < append (exact anchors) ---------------------------------------
+def test_obs4_append_write_gap_exact():
+    w = float(lm.io_service_us(OpType.WRITE, 4 * KiB))
+    a = float(lm.io_service_us(OpType.APPEND, 8 * KiB))
+    assert w == pytest.approx(11.36, abs=0.01)
+    assert a == pytest.approx(14.02, abs=0.01)
+    assert (a - w) / w == pytest.approx(0.2342, abs=0.005)
+
+
+# -- Obs#5/#7: intra-zone scaling ------------------------------------------------
+def test_obs5_obs7_intra_zone_beats_inter_zone():
+    read128 = tm.steady_state(OpType.READ, 4 * KiB, qd=128)
+    wr32 = tm.steady_state(OpType.WRITE, 4 * KiB, qd=32,
+                           stack=Stack.KERNEL_MQ_DEADLINE)
+    assert read128.iops == pytest.approx(424_000, rel=0.02)
+    assert wr32.iops == pytest.approx(293_000, rel=0.02)
+    inter = tm.steady_state(OpType.WRITE, 4 * KiB, zones=14)
+    assert inter.iops == pytest.approx(186_000, rel=0.02)
+    assert wr32.iops > inter.iops
+    # read > write > append in a single zone (Obs#7)
+    app = tm.steady_state(OpType.APPEND, 4 * KiB, qd=128)
+    assert read128.iops > wr32.iops > app.iops
+
+
+# -- Obs#6: append cap layout-agnostic -------------------------------------------
+def test_obs6_append_agnostic():
+    intra = tm.steady_state(OpType.APPEND, 4 * KiB, qd=4)
+    inter = tm.steady_state(OpType.APPEND, 4 * KiB, zones=4)
+    assert intra.iops == pytest.approx(132_000, rel=0.02)
+    assert inter.iops == pytest.approx(intra.iops, rel=0.02)
+    deep = tm.steady_state(OpType.APPEND, 4 * KiB, qd=64)
+    assert deep.iops == pytest.approx(intra.iops, rel=0.02)
+
+
+# -- Obs#8: >=8KiB reaches the device limit --------------------------------------
+def test_obs8_large_requests_saturate():
+    small = tm.steady_state(OpType.WRITE, 4 * KiB, zones=14)
+    assert small.bandwidth_bytes / MiB == pytest.approx(726.74, rel=0.02)
+    big = tm.steady_state(OpType.WRITE, 8 * KiB, zones=4)
+    assert big.bandwidth_bytes / MiB == pytest.approx(1155, rel=0.02)
+
+
+# -- Obs#9: open/close cheap; implicit == explicit -------------------------------
+def test_obs9_open_close_costs():
+    assert lm.open_us() == pytest.approx(9.56)
+    assert lm.close_us() == pytest.approx(11.01)
+    assert lm.implicit_open_penalty_us(OpType.WRITE) == pytest.approx(2.02)
+    assert lm.implicit_open_penalty_us(OpType.APPEND) == pytest.approx(2.83)
+
+
+# -- Obs#10: occupancy-dependent reset/finish ------------------------------------
+def test_obs10_reset_finish_occupancy():
+    assert float(lm.reset_us(0.5)) / 1e3 == pytest.approx(11.60, abs=0.05)
+    assert float(lm.reset_us(1.0)) / 1e3 == pytest.approx(16.19, abs=0.05)
+    assert float(lm.reset_us(0.5, was_finished=True)) == pytest.approx(
+        float(lm.reset_us(0.5)) * (1 - 0.2658), rel=1e-6)
+    assert float(lm.finish_us(0.001)) / 1e3 == pytest.approx(907.51, rel=0.01)
+    assert float(lm.finish_us(1.0)) / 1e3 == pytest.approx(3.07, abs=0.01)
+    occs = np.linspace(0.01, 0.99, 20)
+    fin = np.asarray(lm.finish_us(occs))
+    assert np.all(np.diff(fin) < 0)          # monotone decreasing
+    rst = np.asarray(lm.reset_us(occs))
+    assert np.all(np.diff(rst) > 0)          # monotone increasing
+
+
+# -- Obs#11: stability anchors ----------------------------------------------------
+def test_obs11_read_latency_under_pressure():
+    _, p95_idle = tm.read_latency_under_write_pressure_us(0.0)
+    assert p95_idle == pytest.approx(C.READONLY_READ_P95_US, rel=0.01)
+    _, p95_full = tm.read_latency_under_write_pressure_us(1.0)
+    assert p95_full / 1e3 == pytest.approx(98.04, rel=0.02)
+    from repro.core import ConventionalSSD
+    conv = ConventionalSSD().simulate_write_pressure(rate_mibs=1155.0)
+    assert conv.read_lat_p95_us / 1e3 == pytest.approx(299.89, rel=0.05)
+    assert conv.write_amplification > 1.0
+
+
+# -- Obs#12/#13: reset interference ------------------------------------------------
+def test_obs12_resets_do_not_disturb_io():
+    tr = reset_interference(OpType.WRITE, n_resets=100)
+    res = simulate(tr, seed=0, jitter=False)
+    iomask = tr.op == OpType.WRITE
+    io_svc = res.service[iomask]
+    base = float(lm.io_service_us(OpType.WRITE, 4 * KiB))
+    assert float(np.mean(io_svc)) == pytest.approx(base, rel=0.01)
+
+
+def test_obs13_io_inflates_reset_p95():
+    p95 = {}
+    for io_op, label in ((None, "isolated"), (OpType.READ, "read"),
+                         (OpType.WRITE, "write"), (OpType.APPEND, "append")):
+        tr = reset_interference(io_op, n_resets=200)
+        res = simulate(tr, seed=5)
+        rmask = tr.op == OpType.RESET
+        p95[label] = float(np.percentile(
+            (res.complete - res.start)[rmask], 95)) / 1e3
+    assert p95["isolated"] == pytest.approx(17.94, rel=0.05)
+    assert p95["read"] == pytest.approx(28.00, rel=0.05)
+    assert p95["write"] == pytest.approx(32.00, rel=0.05)
+    assert p95["append"] == pytest.approx(31.48, rel=0.05)
+
+
+# -- §IV: emulator fidelity ---------------------------------------------------------
+def test_sec4_emulator_models():
+    from repro.core.emulator_models import ALL_MODELS
+    femu = ALL_MODELS["femu"]
+    nvmev = ALL_MODELS["nvmevirt"]
+    ours = ALL_MODELS["ours"]
+    # FEMU: no latency model — orders of magnitude too fast
+    assert float(np.asarray(femu.io_service_us(OpType.WRITE, 4 * KiB))) < 3.0
+    # NVMeVirt: append == write (the §IV critique)
+    assert float(np.asarray(nvmev.io_service_us(OpType.APPEND, 4 * KiB))) == \
+        float(np.asarray(nvmev.io_service_us(OpType.WRITE, 4 * KiB)))
+    # NVMeVirt: reset is static regardless of occupancy
+    assert float(np.asarray(nvmev.reset_us(0.1))) == \
+        float(np.asarray(nvmev.reset_us(1.0)))
+    # ours: distinct append/write + occupancy-dependent reset
+    assert float(np.asarray(ours.io_service_us(OpType.APPEND, 4 * KiB))) > \
+        float(np.asarray(ours.io_service_us(OpType.WRITE, 4 * KiB)))
+    assert float(np.asarray(ours.reset_us(1.0))) > \
+        float(np.asarray(ours.reset_us(0.1)))

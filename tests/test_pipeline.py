@@ -1,0 +1,64 @@
+"""GPipe pipeline: forward equals sequential stack; grads flow."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 4, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_gpipe_matches_sequential_and_differentiates():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.distributed.pipeline import (
+            gpipe, stack_stage_fn, stages_from_stack)
+        rng = np.random.default_rng(0)
+        L, D, M, MB = 8, 16, 6, 4
+        ws = jnp.array(rng.standard_normal((L, D, D)) * 0.2, jnp.float32)
+        x = jnp.array(rng.standard_normal((M, MB, D)), jnp.float32)
+
+        def layer(w, h):
+            return jnp.tanh(h @ w)
+
+        # sequential oracle
+        def seq(ws, xmb):
+            h = xmb
+            for i in range(L):
+                h = layer(ws[i], h)
+            return h
+        want = jnp.stack([seq(ws, x[i]) for i in range(M)])
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4,), ("pipe",))
+        stages = stages_from_stack(ws, 4)
+        stage_fn = stack_stage_fn(layer)
+        with mesh:
+            got = gpipe(mesh, stage_fn, stages, x)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-5, err
+
+        # gradient flows through the pipeline (vs sequential grad)
+        def loss_pipe(stages):
+            with mesh:
+                y = gpipe(mesh, stage_fn, stages, x)
+            return jnp.sum(y ** 2)
+        def loss_seq(ws):
+            return jnp.sum(jnp.stack([seq(ws, x[i]) for i in range(M)]) ** 2)
+        g_pipe = jax.grad(loss_pipe)(stages)
+        g_seq = jax.grad(loss_seq)(ws).reshape(4, 2, D, D)
+        gerr = float(jnp.max(jnp.abs(g_pipe - g_seq)))
+        assert gerr < 1e-4, gerr
+        print("OK", err, gerr)
+    """)
+    assert "OK" in out

@@ -1,0 +1,99 @@
+"""Sharding-rule resolution, sanitization, and spec/shape divisibility
+across all architectures (no multi-device needed: pure spec logic)."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro import models as M
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as sh
+from repro.launch import specs as SP
+from repro.models.config import SHAPES_BY_NAME, shapes_for
+from repro.train.step import state_logical_axes, state_spec
+
+
+def _fake_mesh(shape, axes):
+    # AbstractMesh builds without devices — enough for spec resolution
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(shape, axes)
+
+
+MESHES = [
+    _fake_mesh((16, 16), ("data", "model")),
+    _fake_mesh((2, 16, 16), ("pod", "data", "model")),
+]
+
+
+def test_rules_no_duplicate_mesh_axes_per_spec():
+    mesh = MESHES[1]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        specs = sh.tree_specs(M.logical_axes(cfg), mesh=mesh)
+        for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PS)):
+            flat = []
+            for entry in spec:
+                if entry is None:
+                    continue
+                flat.extend([entry] if isinstance(entry, str) else list(entry))
+            assert len(flat) == len(set(flat)), (arch, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+def test_sanitized_state_specs_divide_shapes(arch, mesh):
+    cfg = get_config(arch, kernel_impl="xla")
+    shapes = state_spec(cfg)
+    axes = state_logical_axes(cfg)
+    specs = sh.tree_specs(axes, mesh=mesh)
+    specs = sh.sanitize(shapes, specs, mesh)
+    sh.validate_specs(shapes, specs, mesh)   # must not raise
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_sanitized_input_specs_divide_shapes(arch):
+    mesh = MESHES[1]
+    cfg = get_config(arch, kernel_impl="xla")
+    for shape in shapes_for(cfg):
+        ins = SP.input_specs(cfg, shape)
+        if shape.kind == "decode":
+            axes = SP.decode_logical_axes(cfg)
+        else:
+            axes = SP.batch_logical_axes(cfg)
+        specs = sh.tree_specs(axes, mesh=mesh)
+        specs = sh.sanitize(ins, specs, mesh)
+        sh.validate_specs(ins, specs, mesh)
+
+
+def test_sanitize_drops_indivisible_axes():
+    mesh = MESHES[0]
+    spec = sh.sanitize(
+        [jax.ShapeDtypeStruct((8, 33), np.float32)],
+        [PS("data", "model")], mesh)[0]
+    # 8 % 16 != 0 and 33 % 16 != 0 -> both dropped
+    assert spec == PS()
+
+
+def test_fsdp_rules_shard_embed_over_pod_and_data():
+    rules = sh.make_rules()
+    spec = sh.spec_from_axes(("embed", "mlp"), rules, MESHES[1])
+    assert spec == PS(("pod", "data"), "model")
+
+
+def test_no_rule_raises_keyerror():
+    with pytest.raises(KeyError):
+        sh.spec_from_axes(("nonexistent_axis",), sh.DEFAULT_RULES, MESHES[0])
+
+
+def test_optimized_presets_resolve():
+    from repro.configs import get_optimized_config, step_settings
+    c = get_optimized_config("qwen2-moe-a2.7b")
+    assert c.moe_impl == "ep" and c.moe_expert_pad == 4
+    assert (c.moe_num_experts + c.moe_expert_pad) % 16 == 0
+    a = get_optimized_config("arctic-480b")
+    assert a.moe_impl == "ep" and a.moe_num_experts % 16 == 0
+    assert step_settings("llama3-405b")["microbatches"] == 16
+    # non-MoE archs pass through unchanged
+    t = get_optimized_config("tinyllama-1.1b")
+    assert t.moe_impl == "gspmd"

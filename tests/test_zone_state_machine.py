@@ -1,0 +1,139 @@
+"""Zone state machine: legality, limits, and property-based invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import OpType, ZoneError, ZoneManager, ZoneState, ZNSDeviceSpec
+from repro.core.state_machine import TRANSITION_TABLE, transition_array
+
+SMALL = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                      num_zones=32, max_open_zones=4, max_active_zones=6)
+
+
+def test_write_advances_pointer_and_opens():
+    zm = ZoneManager(SMALL)
+    lba = zm.write(3, 4096)
+    assert lba == SMALL.zone_start(3)
+    assert zm.state(3) == ZoneState.IMPLICIT_OPEN
+    lba2 = zm.write(3, 4096)
+    assert lba2 == lba + 4096
+
+
+def test_append_returns_lba():
+    zm = ZoneManager(SMALL)
+    lbas = [zm.write(0, 1024, append=True) for _ in range(4)]
+    assert lbas == [SMALL.zone_start(0) + i * 1024 for i in range(4)]
+
+
+def test_zone_overflow_rejected():
+    zm = ZoneManager(SMALL)
+    zm.write(0, SMALL.zone_cap_bytes - 512)
+    with pytest.raises(ZoneError):
+        zm.write(0, 1024)
+
+
+def test_fill_to_cap_becomes_full():
+    zm = ZoneManager(SMALL)
+    zm.write(0, SMALL.zone_cap_bytes)
+    assert zm.state(0) == ZoneState.FULL
+    with pytest.raises(ZoneError):
+        zm.write(0, 512)
+
+
+def test_max_open_zone_limit():
+    zm = ZoneManager(SMALL)
+    for z in range(SMALL.max_open_zones):
+        zm.open(z)
+    with pytest.raises(ZoneError):
+        zm.open(SMALL.max_open_zones)
+    # closing one frees a slot (still active though)
+    zm.close(0)
+    zm.open(SMALL.max_open_zones)
+
+
+def test_max_active_zone_limit():
+    zm = ZoneManager(SMALL)
+    for z in range(SMALL.max_open_zones):
+        zm.open(z)
+    for z in range(SMALL.max_open_zones):
+        zm.close(z)
+    for z in range(SMALL.max_open_zones, SMALL.max_active_zones):
+        zm.open(z)
+    with pytest.raises(ZoneError):
+        zm.open(SMALL.max_active_zones + 1)
+
+
+def test_finish_semantics():
+    zm = ZoneManager(SMALL)
+    with pytest.raises(ZoneError):
+        zm.finish(0)               # empty: forbidden (§III-E)
+    zm.write(0, 4096)
+    occ = zm.finish(0)
+    assert zm.state(0) == ZoneState.FULL
+    assert 0 < occ < 0.1
+    with pytest.raises(ZoneError):
+        zm.finish(0)               # full: forbidden
+
+
+def test_reset_returns_occupancy_and_finished_flag():
+    zm = ZoneManager(SMALL)
+    zm.write(0, SMALL.zone_cap_bytes // 2)
+    zm.finish(0)
+    occ, fin = zm.reset(0)
+    assert fin and occ == 1.0      # finish fills the zone
+    assert zm.state(0) == ZoneState.EMPTY
+    zm.write(0, 1024)
+    occ, fin = zm.reset(0)
+    assert not fin
+
+
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 6)),
+                min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_transition_array_matches_table(pairs):
+    states = np.array([p[0] for p in pairs], dtype=np.int32)
+    ops = np.array([p[1] for p in pairs], dtype=np.int32)
+    nxt, ok = transition_array(states, ops)
+    nxt, ok = np.asarray(nxt), np.asarray(ok)
+    for s, o, n, k in zip(states, ops, nxt, ok):
+        expect = TRANSITION_TABLE[s, o]
+        assert k == (expect >= 0)
+        assert n == (expect if expect >= 0 else s)
+
+
+@given(st.lists(st.tuples(st.integers(0, 7),       # zone
+                          st.sampled_from(["write", "append", "open",
+                                           "close", "finish", "reset"]),
+                          st.integers(1, 1 << 18)),  # nbytes
+                min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_random_op_sequences_preserve_invariants(ops):
+    """Whatever the op sequence, accepted ops preserve: wp <= cap,
+    monotone wp between resets, open/active counts within limits."""
+    zm = ZoneManager(SMALL)
+    for zone, op, nbytes in ops:
+        prev_wp = zm.write_pointer(zone)
+        try:
+            if op == "write":
+                zm.write(zone, nbytes)
+            elif op == "append":
+                zm.write(zone, nbytes, append=True)
+            elif op == "open":
+                zm.open(zone)
+            elif op == "close":
+                zm.close(zone)
+            elif op == "finish":
+                zm.finish(zone)
+            elif op == "reset":
+                zm.reset(zone)
+        except ZoneError:
+            continue
+        wp = zm.write_pointer(zone)
+        assert 0 <= wp <= SMALL.zone_cap_bytes
+        if op in ("write", "append", "finish"):
+            assert wp >= prev_wp
+        assert zm.open_count <= SMALL.max_open_zones
+        assert zm.active_count <= SMALL.max_active_zones
+        if zm.write_pointer(zone) == SMALL.zone_cap_bytes:
+            assert zm.state(zone) == ZoneState.FULL
