@@ -1,0 +1,47 @@
+"""Device-session backend microbench: event vs vectorized on large traces.
+
+Acceptance gate for the ``ZnsDevice`` backend registry: the vectorized
+backend (chain-decomposed max-plus scans) must run a >=100k-request mixed
+trace >=5x faster than the per-request event engine while agreeing on the
+completion times (jitter-free) to float tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KiB, OpType, WorkloadSpec, ZnsDevice
+
+from .common import timed
+
+
+def _mixed_workload(scale: int) -> WorkloadSpec:
+    return (WorkloadSpec()
+            .writes(n=40 * scale, size=4 * KiB, qd=4, zone=0)
+            .reads(n=50 * scale, size=4 * KiB, qd=16, zone=100, nzones=100)
+            .appends(n=20 * scale, size=8 * KiB, qd=2, zone=300)
+            .resets(n=2 * scale, occupancy=1.0, nzones=200,
+                    io_ctx=OpType.READ))
+
+
+def run():
+    dev = ZnsDevice()
+    rows = []
+    for scale, repeats in ((100, 3), (1000, 1)):
+        tr = _mixed_workload(scale).build()
+        n = len(tr)
+        res_v, us_v = timed(lambda: dev.run(tr, backend="vectorized",
+                                            jitter=False), repeats=repeats)
+        res_e, us_e = timed(lambda: dev.run(tr, backend="event",
+                                            jitter=False), repeats=repeats)
+        rel = np.max(np.abs(res_e.sim.complete - res_v.sim.complete)
+                     / np.maximum(res_e.sim.complete, 1.0))
+        speedup = us_e / us_v
+        rows.append((f"device/backends/n{n}", us_v,
+                     f"speedup_x={speedup:.1f};event_us={us_e:.0f};"
+                     f"max_rel_err={rel:.1e};"
+                     f"ge5x={'PASS' if speedup >= 5.0 else 'FAIL'}"))
+        if scale >= 1000:
+            st = res_v.latency_stats(OpType.READ)
+            rows.append((f"device/vectorized/read_p99/n{n}", 0.0,
+                         f"p99_us={st.p99_us:.1f};iops={res_v.iops:.0f}"))
+    return rows

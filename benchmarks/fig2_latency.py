@@ -6,27 +6,28 @@ slower (Obs#1/#2/#4).
 """
 from __future__ import annotations
 
-from repro.core import KiB, LatencyModel, LBAFormat, OpType, Stack
+from repro.core import KiB, LBAFormat, OpType, Stack, ZnsDevice
 
 from .common import timed
 
 
 def run():
-    lm = LatencyModel()
+    dev = ZnsDevice()
     rows = []
     # Fig 2a: 512B vs 4KiB formats, request size = block size
     for stack in (Stack.SPDK, Stack.KERNEL_NONE, Stack.KERNEL_MQ_DEADLINE):
         for fmt, size in ((LBAFormat.LBA_512, 512), (LBAFormat.LBA_4K, 4 * KiB)):
             for op in (OpType.WRITE, OpType.APPEND):
                 (lat,), us = timed(
-                    lambda: (float(lm.io_service_us(op, size, stack, fmt)),))
+                    lambda: (float(dev.io_latency_us(op, size, stack=stack,
+                                                     fmt=fmt)),))
                 rows.append((
                     f"fig2a/{op.name.lower()}/{stack.name.lower()}/{fmt.name}",
                     us, f"latency_us={lat:.2f}"))
     # Fig 2b: best request sizes (write 4KiB / append 8KiB) per format
     for fmt in (LBAFormat.LBA_512, LBAFormat.LBA_4K):
-        w = float(lm.io_service_us(OpType.WRITE, 4 * KiB, Stack.SPDK, fmt))
-        a = float(lm.io_service_us(OpType.APPEND, 8 * KiB, Stack.SPDK, fmt))
+        w = float(dev.io_latency_us(OpType.WRITE, 4 * KiB, fmt=fmt))
+        a = float(dev.io_latency_us(OpType.APPEND, 8 * KiB, fmt=fmt))
         rows.append((f"fig2b/write4k/{fmt.name}", 0.0, f"latency_us={w:.2f}"))
         rows.append((f"fig2b/append8k/{fmt.name}", 0.0, f"latency_us={a:.2f}"))
         if fmt == LBAFormat.LBA_4K:

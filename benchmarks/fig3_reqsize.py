@@ -5,19 +5,19 @@ KiB; >=32 KiB requests approach the ~1.2 GiB/s device limit (Obs#3).
 """
 from __future__ import annotations
 
-from repro.core import KiB, MiB, OpType, ThroughputModel
+from repro.core import KiB, MiB, OpType, ZnsDevice
 
 from .common import timed
 
 
 def run():
-    tm = ThroughputModel()
+    dev = ZnsDevice()
     rows = []
     for op in (OpType.WRITE, OpType.APPEND):
         for size_k in (4, 8, 16, 32, 64, 128):
             (res,), us = timed(
                 lambda op=op, size_k=size_k:
-                (tm.steady_state(op, size_k * KiB),))
+                (dev.steady_state(op, size_k * KiB),))
             rows.append((
                 f"fig3/{op.name.lower()}/{size_k}KiB", us,
                 f"kiops={res.iops/1e3:.1f};mibs={res.bandwidth_bytes/MiB:.0f}"))

@@ -8,36 +8,36 @@ concurrent zones.
 """
 from __future__ import annotations
 
-from repro.core import KiB, MiB, OpType, Stack, ThroughputModel
+from repro.core import KiB, MiB, OpType, Stack, ZnsDevice
 
 from .common import timed
 
 
 def run():
-    tm = ThroughputModel()
+    dev = ZnsDevice()
     rows = []
     # Fig 4a: intra-zone, 4 KiB
     for qd in (1, 2, 4, 8, 16, 32, 64, 128):
-        r = tm.steady_state(OpType.READ, 4 * KiB, qd=qd)
-        a = tm.steady_state(OpType.APPEND, 4 * KiB, qd=qd)
-        w = tm.steady_state(OpType.WRITE, 4 * KiB, qd=qd,
+        r = dev.steady_state(OpType.READ, 4 * KiB, qd=qd)
+        a = dev.steady_state(OpType.APPEND, 4 * KiB, qd=qd)
+        w = dev.steady_state(OpType.WRITE, 4 * KiB, qd=qd,
                             stack=Stack.KERNEL_MQ_DEADLINE)
         rows.append((f"fig4a/intra/qd{qd}", 0.0,
                      f"read={r.iops/1e3:.0f}K;write_mq={w.iops/1e3:.0f}K;"
                      f"append={a.iops/1e3:.0f}K"))
     # Fig 4b: inter-zone, 4 KiB, QD1 per zone
     for zones in (1, 2, 4, 8, 14):
-        r = tm.steady_state(OpType.READ, 4 * KiB, zones=zones)
-        a = tm.steady_state(OpType.APPEND, 4 * KiB, zones=zones)
-        w = tm.steady_state(OpType.WRITE, 4 * KiB, zones=zones)
+        r = dev.steady_state(OpType.READ, 4 * KiB, zones=zones)
+        a = dev.steady_state(OpType.APPEND, 4 * KiB, zones=zones)
+        w = dev.steady_state(OpType.WRITE, 4 * KiB, zones=zones)
         rows.append((f"fig4b/inter/z{zones}", 0.0,
                      f"read={r.iops/1e3:.0f}K;write={w.iops/1e3:.0f}K;"
                      f"append={a.iops/1e3:.0f}K"))
     # Fig 4c: bandwidth, larger requests
     for size_k in (4, 8, 16):
         for conc in (1, 2, 4, 8):
-            a = tm.steady_state(OpType.APPEND, size_k * KiB, qd=conc)
-            w = tm.steady_state(OpType.WRITE, size_k * KiB, zones=conc)
+            a = dev.steady_state(OpType.APPEND, size_k * KiB, qd=conc)
+            w = dev.steady_state(OpType.WRITE, size_k * KiB, zones=conc)
             rows.append((
                 f"fig4c/{size_k}KiB/conc{conc}", 0.0,
                 f"append_intra={a.bandwidth_bytes/MiB:.0f}MiB/s;"

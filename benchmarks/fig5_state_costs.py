@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import LatencyModel, OpType, simulate
-from repro.core.workloads import finish_sweep, reset_sweep
+from repro.core import OpType, WorkloadSpec, ZnsDevice
 
 from .common import timed
 
@@ -18,7 +17,8 @@ OCCS = (0.0, 0.0005, 0.0625, 0.125, 0.25, 0.5, 1.0)
 
 
 def run():
-    lm = LatencyModel()
+    dev = ZnsDevice()
+    lm = dev.lat
     rows = []
     rows.append(("fig5/open", 0.0, f"latency_us={lm.open_us():.2f}"))
     rows.append(("fig5/close", 0.0, f"latency_us={lm.close_us():.2f}"))
@@ -26,27 +26,32 @@ def run():
                  f"us={lm.implicit_open_penalty_us(OpType.WRITE):.2f}"))
     rows.append(("fig5/implicit_append_penalty", 0.0,
                  f"us={lm.implicit_open_penalty_us(OpType.APPEND):.2f}"))
-    # Fig 5a: reset latency sweep via the event engine
-    tr = reset_sweep(OCCS, finished_first=False, n_per_level=40)
-    (res,), us = timed(lambda: (simulate(tr, seed=1),), repeats=1)
-    lat = (res.complete - res.start) / 1e3
+    # Fig 5a: reset latency sweep via the device session
+    wl = WorkloadSpec().reset_sweep(OCCS, n_per_level=40)
+    (res,), us = timed(lambda: (dev.run(wl, backend="event", seed=1),),
+                       repeats=1)
+    tr = res.trace
+    lat = res.sim.in_device_latency / 1e3
     for occ in OCCS:
         sel = np.isclose(tr.occupancy, occ) & (tr.op == OpType.RESET)
         rows.append((f"fig5a/reset/occ{occ:g}", us / len(tr),
                      f"ms={float(np.mean(lat[sel])):.2f}"))
     # finished-then-reset variant
-    tr2 = reset_sweep(OCCS, finished_first=True, n_per_level=40)
-    res2 = simulate(tr2, seed=2)
-    lat2 = (res2.complete - res2.start) / 1e3
+    res2 = dev.run(WorkloadSpec().reset_sweep(OCCS, n_per_level=40,
+                                              finish_first=True),
+                   backend="event", seed=2)
+    tr2 = res2.trace
+    lat2 = res2.sim.in_device_latency / 1e3
     sel = (tr2.op == OpType.RESET) & np.isclose(tr2.occupancy, 0.5)
     rows.append(("fig5a/reset_finished/occ0.5", 0.0,
                  f"ms={float(np.mean(lat2[sel])):.2f} (26.58% below plain)"))
     # Fig 5b: finish latency sweep
-    tr3 = finish_sweep((0.001, 0.0625, 0.125, 0.25, 0.5, 0.999),
-                       n_per_level=40)
-    res3 = simulate(tr3, seed=3)
-    lat3 = (res3.complete - res3.start) / 1e3
-    for occ in (0.001, 0.0625, 0.125, 0.25, 0.5, 0.999):
+    foccs = (0.001, 0.0625, 0.125, 0.25, 0.5, 0.999)
+    res3 = dev.run(WorkloadSpec().finish_sweep(foccs, n_per_level=40),
+                   backend="event", seed=3)
+    tr3 = res3.trace
+    lat3 = res3.sim.in_device_latency / 1e3
+    for occ in foccs:
         sel = np.isclose(tr3.occupancy, occ) & (tr3.op == OpType.FINISH)
         rows.append((f"fig5b/finish/occ{occ:g}", 0.0,
                      f"ms={float(np.mean(lat3[sel])):.2f}"))

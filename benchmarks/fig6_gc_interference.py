@@ -8,9 +8,7 @@ p95 under full-rate writes: 299.89 ms (conv) vs 98.04 ms (ZNS) vs
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import ConventionalSSD, ThroughputModel, zns_write_pressure_series
+from repro.core import ConvDevice, ZnsDevice
 from repro.core.calibration import PEAK_WRITE_BW_MIBS
 
 from .common import timed
@@ -18,19 +16,15 @@ from .common import timed
 
 def run():
     rows = []
-    conv = ConventionalSSD()
-    tm = ThroughputModel()
+    conv = ConvDevice()
+    zns = ZnsDevice()
     for rate in (0.0, 250.0, 750.0, PEAK_WRITE_BW_MIBS):
-        (sim,), us = timed(lambda rate=rate: (conv.simulate_write_pressure(
+        (c,), us = timed(lambda rate=rate: (conv.run_write_pressure(
             rate_mibs=rate, duration_s=60),), repeats=1)
-        t, w_zns = zns_write_pressure_series(rate_mibs=rate, duration_s=60)
-        u = rate / PEAK_WRITE_BW_MIBS
-        zns_mean, zns_p95 = tm.read_latency_under_write_pressure_us(u)
-        cv_conv = float(np.std(sim.write_mibs) / max(np.mean(sim.write_mibs), 1e-9))
-        cv_zns = float(np.std(w_zns) / max(np.mean(w_zns), 1e-9))
+        z = zns.run_write_pressure(rate_mibs=rate, duration_s=60)
         rows.append((
             f"fig6/rate{rate:g}MiBs", us,
-            f"conv_write_cv={cv_conv:.2f};zns_write_cv={cv_zns:.2f};"
-            f"conv_read_p95_ms={sim.read_lat_p95_us/1e3:.2f};"
-            f"zns_read_p95_ms={zns_p95/1e3:.2f}"))
+            f"conv_write_cv={c.write_cv:.2f};zns_write_cv={z.write_cv:.2f};"
+            f"conv_read_p95_ms={c.read_lat_p95_us/1e3:.2f};"
+            f"zns_read_p95_ms={z.read_lat_p95_us/1e3:.2f}"))
     return rows

@@ -7,25 +7,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import OpType, simulate
+from repro.core import OpType, ZnsDevice
 from repro.core.workloads import reset_interference
 
 from .common import timed
 
 
 def run():
+    dev = ZnsDevice()
     rows = []
-    io_lat_baseline = None
     for io_op, label in ((None, "isolated"), (OpType.READ, "read"),
                          (OpType.WRITE, "write"), (OpType.APPEND, "append")):
         tr = reset_interference(io_op, n_resets=300)
-        (res,), us = timed(lambda tr=tr: (simulate(tr, seed=7),), repeats=1)
-        rmask = tr.op == OpType.RESET
-        p95 = float(np.percentile((res.complete - res.start)[rmask], 95)) / 1e3
+        (res,), us = timed(lambda tr=tr: (dev.run(tr, backend="event",
+                                                  seed=7),), repeats=1)
+        p95 = res.latency_stats(OpType.RESET).p95_us / 1e3
         derived = f"reset_p95_ms={p95:.2f}"
         if io_op is not None:
-            iomask = ~rmask
-            io_lat = float(np.mean(res.service[iomask]))
+            iomask = tr.op != OpType.RESET
+            io_lat = float(np.mean(res.sim.service[iomask]))
             derived += f";io_svc_us={io_lat:.2f}"
         rows.append((f"fig7/reset_under_{label}", us, derived))
     return rows

@@ -7,18 +7,18 @@ low QD for latency.
 """
 from __future__ import annotations
 
-from repro.core import KiB, OpType, Stack, ThroughputModel
+from repro.core import KiB, OpType, Stack, ZnsDevice
 
 from .common import timed
 
 
 def run():
-    tm = ThroughputModel()
+    dev = ZnsDevice()
     rows = []
     for size_k in (4, 16, 32):
         for qd in (1, 2, 4, 8, 16):
-            a = tm.steady_state(OpType.APPEND, size_k * KiB, qd=qd)
-            w = tm.steady_state(OpType.WRITE, size_k * KiB, qd=qd,
+            a = dev.steady_state(OpType.APPEND, size_k * KiB, qd=qd)
+            w = dev.steady_state(OpType.WRITE, size_k * KiB, qd=qd,
                                 stack=Stack.KERNEL_MQ_DEADLINE)
             rows.append((
                 f"fig8/{size_k}KiB/qd{qd}", 0.0,

@@ -12,7 +12,7 @@ import time
 MODULES = (
     "fig2_latency", "fig3_reqsize", "fig4_scalability", "fig5_state_costs",
     "fig6_gc_interference", "fig7_reset_interference", "fig8_qd",
-    "table1_insights", "checkpoint_bench", "kernel_bench",
+    "table1_insights", "device_bench", "checkpoint_bench", "kernel_bench",
 )
 
 

@@ -6,30 +6,28 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    KiB, MiB, LatencyModel, OpType, Stack, ThroughputModel, simulate,
-)
+from repro.core import KiB, MiB, OpType, Stack, ZnsDevice
 from repro.core.emulator_models import ALL_MODELS, FIDELITY_MATRIX
 from repro.core.workloads import reset_interference
 
 
 def run():
-    lm = LatencyModel()
-    tm = ThroughputModel()
+    dev = ZnsDevice()
+    lm = dev.lat
     rows = []
     # Insight 1: write up to 23% lower latency than append
-    w = float(lm.io_service_us(OpType.WRITE, 4 * KiB))
-    a = float(lm.io_service_us(OpType.APPEND, 8 * KiB))
+    w = float(dev.io_latency_us(OpType.WRITE, 4 * KiB))
+    a = float(dev.io_latency_us(OpType.APPEND, 8 * KiB))
     rows.append(("table1/append_vs_write", 0.0,
                  f"gap_pct={(a - w) / a * 100:.2f} (paper<=23.42)"))
     # Insight 2: prefer intra-zone scalability
-    intra = tm.steady_state(OpType.WRITE, 4 * KiB, qd=32,
-                            stack=Stack.KERNEL_MQ_DEADLINE).iops
-    inter = tm.steady_state(OpType.WRITE, 4 * KiB, zones=14).iops
+    intra = dev.steady_state(OpType.WRITE, 4 * KiB, qd=32,
+                             stack=Stack.KERNEL_MQ_DEADLINE).iops
+    inter = dev.steady_state(OpType.WRITE, 4 * KiB, zones=14).iops
     rows.append(("table1/intra_vs_inter_write", 0.0,
                  f"intra_kiops={intra/1e3:.0f};inter_kiops={inter/1e3:.0f}"))
     # Insight 3: finish most expensive (hundreds of ms)
-    f0 = float(lm.finish_us(0.001)) / 1e3
+    f0 = float(dev.finish_latency_us(0.001)) / 1e3
     rows.append(("table1/finish_cost", 0.0,
                  f"finish_ms_at_0pct={f0:.1f} (paper 907.51)"))
     # Insight 4: ZNS ~3x higher read throughput under concurrent I/O
@@ -39,13 +37,12 @@ def run():
     rows.append(("table1/zns_read_advantage", 0.0,
                  f"x={CONV_READ_P95_UNDER_WRITES_MS / ZNS_READ_P95_UNDER_WRITES_MS:.2f}"))
     # Insight 5: reset latency +<=78% under I/O; resets don't hurt I/O
-    tr = reset_interference(OpType.WRITE, n_resets=200)
-    res = simulate(tr, seed=11)
-    rmask = tr.op == OpType.RESET
-    p95_w = float(np.percentile((res.complete - res.start)[rmask], 95)) / 1e3
-    tr0 = reset_interference(None, n_resets=200)
-    res0 = simulate(tr0, seed=11)
-    p95_0 = float(np.percentile((res0.complete - res0.start), 95)) / 1e3
+    res = dev.run(reset_interference(OpType.WRITE, n_resets=200),
+                  backend="event", seed=11)
+    p95_w = res.latency_stats(OpType.RESET).p95_us / 1e3
+    res0 = dev.run(reset_interference(None, n_resets=200),
+                   backend="event", seed=11)
+    p95_0 = res0.latency_stats().p95_us / 1e3
     rows.append(("table1/reset_inflation", 0.0,
                  f"pct={(p95_w / p95_0 - 1) * 100:.1f} (paper 78.42)"))
     # §IV emulator fidelity matrix

@@ -5,7 +5,7 @@ calibrated ZN540 model + conventional-SSD contrast (Obs#11).
 """
 import numpy as np
 
-from repro.core import MiB, ConventionalSSD, OpType, ThroughputModel
+from repro.core import MiB, ConvDevice, OpType, ZnsDevice
 from repro.core.calibration import PEAK_WRITE_BW_MIBS
 from repro.runtime.zns_store import ZnsHostDevice
 
@@ -41,14 +41,14 @@ def main():
           f"(~{gc_s/fill_s*100:.1f}% of fill time; paper says ~1%)")
 
     print("\n== why not a conventional SSD? (Obs#11) ==")
-    conv = ConventionalSSD().simulate_write_pressure(
-        rate_mibs=PEAK_WRITE_BW_MIBS, duration_s=60)
-    tm = ThroughputModel()
-    _, zns_p95 = tm.read_latency_under_write_pressure_us(1.0)
-    print(f"  write-throughput CV:  conv={np.std(conv.write_mibs)/np.mean(conv.write_mibs):.2f}"
-          f"  zns~0.01")
+    conv = ConvDevice().run_write_pressure(rate_mibs=PEAK_WRITE_BW_MIBS,
+                                           duration_s=60)
+    zns = ZnsDevice().run_write_pressure(rate_mibs=PEAK_WRITE_BW_MIBS,
+                                         duration_s=60)
+    print(f"  write-throughput CV:  conv={conv.write_cv:.2f}"
+          f"  zns={zns.write_cv:.2f}")
     print(f"  read p95 under writes: conv={conv.read_lat_p95_us/1e3:.0f} ms"
-          f"  zns={zns_p95/1e3:.0f} ms")
+          f"  zns={zns.read_lat_p95_us/1e3:.0f} ms")
     print("  -> training-data reads next to checkpoint writes need ZNS-class"
           " isolation")
 

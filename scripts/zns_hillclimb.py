@@ -44,14 +44,15 @@ def cycle(name, *, stripe, qd, zones, redundancy, concurrent_gc,
           manifest_op=OpType.WRITE):
     dev = ZnsHostDevice(0, stripe_bytes=stripe, append_qd=qd,
                         concurrent_zones=zones)
+    zns = dev.device            # the ZnsDevice session handle
     write_s, n_req = dev.simulate_payload_write(SHARD)
-    man_us = float(dev.lat.io_service_us(manifest_op, 4 * KiB))
+    man_us = float(zns.io_latency_us(manifest_op, 4 * KiB))
     # reclaim: the zones of the previous checkpoint of equal size
-    n_zones = int(np.ceil(SHARD / dev.spec.zone_cap_bytes))
+    n_zones = int(np.ceil(SHARD / zns.spec.zone_cap_bytes))
     occ = 1.0
-    reset_us = float(np.asarray(dev.lat.reset_us(occ)).mean()) * n_zones
+    reset_us = float(np.asarray(zns.reset_latency_us(occ)).mean()) * n_zones
     if concurrent_gc:
-        reset_us *= dev.lat.reset_inflation([OpType.APPEND])
+        reset_us *= zns.lat.reset_inflation([OpType.APPEND])
         host_s = max(write_s, reset_us / 1e6) + man_us / 1e6
     else:
         host_s = write_s + reset_us / 1e6 + man_us / 1e6

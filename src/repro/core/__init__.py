@@ -9,9 +9,15 @@ from .spec import (  # noqa: F401
 from .state_machine import ZoneError, ZoneManager, transition_array  # noqa: F401
 from .latency import DEFAULT_LATENCY_MODEL, LatencyModel  # noqa: F401
 from .engine import (  # noqa: F401
-    SimResult, SteadyStateResult, ThroughputModel, Trace, simulate,
+    SimResult, SteadyStateResult, ThroughputModel, Trace,
+    compute_service_times, simulate, simulate_vectorized,
     zone_sequential_completions,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import LatencyStats, bandwidth_bytes, iops, throughput_timeseries  # noqa: F401
+from .workload import StreamSpec, WorkloadSpec  # noqa: F401
+from .device import (  # noqa: F401
+    ConvDevice, PressureResult, RunResult, ZnsDevice,
+    available_backends, register_backend,
+)
 from . import calibration, emulator_models, workloads  # noqa: F401

@@ -1,0 +1,272 @@
+"""Unified device-session API: ``ZnsDevice`` / ``ConvDevice`` facades.
+
+The paper's artifact is a calibrated ZN540 performance model; this module
+is its single entry point.  A :class:`ZnsDevice` owns the device spec, the
+calibrated :class:`LatencyModel`, the :class:`ZoneManager`, and the
+closed-form :class:`ThroughputModel`, and runs declarative
+:class:`WorkloadSpec` workloads through pluggable simulation backends:
+
+* ``"event"``      — the per-request discrete-event engine (exact pools,
+  greedy server assignment); reference semantics.
+* ``"vectorized"`` — chain-decomposed max-plus scans batched through
+  ``zone_sequential_completions`` (the Pallas kernel on TPU, a numpy
+  doubling scan elsewhere); order-of-magnitude faster on large traces.
+* ``"auto"``       — vectorized for large traces, event otherwise.
+
+Third parties can add backends with :func:`register_backend`.
+
+    dev = ZnsDevice()                       # ZN540 by default
+    wl = WorkloadSpec().writes(n=100_000, size=4 * KiB, qd=4)
+    res = dev.run(wl, backend="auto")
+    res.latency_stats().p99_us, res.iops, res.bandwidth_bytes
+
+:class:`ConvDevice` exposes the conventional-SSD (SN640) baseline through
+the same facade so ZNS-vs-conventional scenarios share one interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Union
+
+import numpy as np
+
+from .conventional import ConventionalSSD, ConvSimResult, \
+    zns_write_pressure_series
+from .engine import (
+    SimResult, SteadyStateResult, ThroughputModel, Trace, simulate,
+    simulate_vectorized, zone_sequential_completions,
+)
+from .latency import LatencyModel
+from .metrics import LatencyStats, bandwidth_bytes, iops, \
+    throughput_timeseries
+from .spec import (
+    ConvDeviceSpec, LBAFormat, MiB, OpType, Stack, ZNSDeviceSpec,
+)
+from .state_machine import ZoneManager
+from .workload import WorkloadSpec
+
+#: Trace length above which ``backend="auto"`` picks the vectorized engine.
+AUTO_VECTORIZED_MIN = 8192
+
+
+# ---------------------------------------------------------------------------
+# Run results
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunResult:
+    """Per-request simulation output + figure-ready reductions."""
+
+    trace: Trace
+    sim: SimResult
+    backend: str
+
+    def latency_stats(self, op: Optional[OpType] = None, *,
+                      from_issue: bool = False) -> LatencyStats:
+        """mean/p50/p95/p99 latency (us); in-device (start -> complete) by
+        default, submission-to-completion with ``from_issue=True``."""
+        lat = self.sim.latency_from(self.trace.issue) if from_issue \
+            else self.sim.in_device_latency
+        if op is not None:
+            lat = lat[self.trace.op == int(op)]
+            if len(lat) == 0:
+                raise ValueError(
+                    f"no {OpType(op).name} requests in this trace; present: "
+                    f"{[OpType(o).name for o in np.unique(self.trace.op)]}")
+        return LatencyStats.from_samples(lat)
+
+    def per_op_stats(self, *, from_issue: bool = False
+                     ) -> Dict[OpType, LatencyStats]:
+        return {OpType(o): self.latency_stats(OpType(o),
+                                              from_issue=from_issue)
+                for o in np.unique(self.trace.op)}
+
+    @property
+    def iops(self) -> float:
+        return iops(self.sim.complete)
+
+    @property
+    def bandwidth_bytes(self) -> float:
+        return bandwidth_bytes(self.sim.complete, self.trace.size)
+
+    def throughput_timeseries(self, *, bin_s: float = 1.0):
+        return throughput_timeseries(self.sim.complete, self.trace.size,
+                                     bin_s=bin_s)
+
+    def __len__(self) -> int:
+        return len(self.trace)
+
+
+@dataclasses.dataclass(frozen=True)
+class PressureResult:
+    """Write-pressure scenario output, shared by ZNS and conventional
+    devices (Fig. 6 layout: rate-limited writes + 4 KiB random reads)."""
+
+    t_s: np.ndarray
+    write_mibs: np.ndarray
+    read_lat_mean_us: float
+    read_lat_p95_us: float
+    read_mibs: Optional[np.ndarray] = None
+    write_amplification: float = 1.0
+
+    @property
+    def write_cv(self) -> float:
+        m = float(np.mean(self.write_mibs))
+        return float(np.std(self.write_mibs)) / m if m > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+BackendFn = Callable[..., SimResult]
+_BACKENDS: Dict[str, BackendFn] = {}
+
+
+def register_backend(name: str, fn: Optional[BackendFn] = None):
+    """Register a simulation backend ``fn(trace, spec, lat, *, seed,
+    jitter, **opts) -> SimResult``; usable as a decorator."""
+    def _register(f: BackendFn) -> BackendFn:
+        _BACKENDS[name] = f
+        return f
+    return _register(fn) if fn is not None else _register
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+@register_backend("event")
+def _event_backend(trace, spec, lat, *, seed=0, jitter=True, **_):
+    return simulate(trace, spec, lat, seed=seed, jitter=jitter)
+
+
+@register_backend("vectorized")
+def _vectorized_backend(trace, spec, lat, *, seed=0, jitter=True, **opts):
+    return simulate_vectorized(trace, spec, lat, seed=seed, jitter=jitter,
+                               **opts)
+
+
+def _resolve_backend(name: str, trace: Trace) -> str:
+    if name == "auto":
+        return "vectorized" if len(trace) >= AUTO_VECTORIZED_MIN else "event"
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; available: "
+                       f"{available_backends()} (or 'auto')")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# ZNS facade
+# ---------------------------------------------------------------------------
+class ZnsDevice:
+    """One ZNS device session: spec + latency + zones + throughput model.
+
+    This is the facade the rest of the repo binds to — benchmarks, the
+    checkpoint store, and examples all speak ``ZnsDevice`` instead of
+    wiring ``ThroughputModel``/``simulate()``/``Trace`` by hand.
+    """
+
+    def __init__(self, spec: Optional[ZNSDeviceSpec] = None, *,
+                 lat: Optional[LatencyModel] = None,
+                 throughput: Optional[ThroughputModel] = None):
+        self.spec = spec if spec is not None else ZNSDeviceSpec()
+        self.lat = lat or LatencyModel(self.spec)
+        self.zones = ZoneManager(self.spec)
+        self.throughput = throughput or ThroughputModel(self.spec, self.lat)
+
+    # -- workload session ----------------------------------------------------
+    def workload(self, **kw) -> WorkloadSpec:
+        """A fresh :class:`WorkloadSpec` (convenience entry point)."""
+        return WorkloadSpec(**kw)
+
+    def run(self, workload: Union[WorkloadSpec, Trace], *,
+            backend: str = "auto", seed: int = 0, jitter: bool = True,
+            **backend_opts) -> RunResult:
+        """Simulate a workload; returns a :class:`RunResult`.
+
+        ``workload`` may be a :class:`WorkloadSpec` (lowered via
+        ``build()``) or an already-built :class:`Trace`.
+        """
+        trace = workload.build() if isinstance(workload, WorkloadSpec) \
+            else workload
+        name = _resolve_backend(backend, trace)
+        sim = _BACKENDS[name](trace, self.spec, self.lat, seed=seed,
+                              jitter=jitter, **backend_opts)
+        return RunResult(trace=trace, sim=sim, backend=name)
+
+    # -- closed-form model (Figs. 3/4/8) ------------------------------------
+    def steady_state(self, op: OpType, size_bytes: int, *, qd: int = 1,
+                     zones: int = 1, stack: Stack = Stack.SPDK,
+                     fmt: LBAFormat = LBAFormat.LBA_4K) -> SteadyStateResult:
+        return self.throughput.steady_state(op, size_bytes, qd=qd,
+                                            zones=zones, stack=stack, fmt=fmt)
+
+    # -- calibrated latency points (Figs. 2/5) -------------------------------
+    def io_latency_us(self, op: OpType, size_bytes, *,
+                      stack: Stack = Stack.SPDK,
+                      fmt: LBAFormat = LBAFormat.LBA_4K):
+        return self.lat.io_service_us(op, size_bytes, stack, fmt)
+
+    def reset_latency_us(self, occupancy, *, was_finished=False):
+        return self.lat.reset_us(occupancy, was_finished)
+
+    def finish_latency_us(self, occupancy):
+        return self.lat.finish_us(occupancy)
+
+    # -- interference closures (§III-F/G) ------------------------------------
+    def read_latency_under_write_pressure_us(self, write_utilization: float,
+                                             qd: int = 1):
+        return self.throughput.read_latency_under_write_pressure_us(
+            write_utilization, qd)
+
+    def run_write_pressure(self, *, rate_mibs: float, duration_s: float = 60.0,
+                           bin_s: float = 1.0, seed: int = 0
+                           ) -> PressureResult:
+        """ZNS side of the Fig. 6 scenario: flat writes, stable reads."""
+        t, w = zns_write_pressure_series(rate_mibs=rate_mibs,
+                                         duration_s=duration_s, bin_s=bin_s,
+                                         seed=seed)
+        u = rate_mibs / (self.spec.peak_write_bw_bytes / MiB)
+        mean, p95 = self.read_latency_under_write_pressure_us(u)
+        return PressureResult(t_s=t, write_mibs=w, read_lat_mean_us=mean,
+                              read_lat_p95_us=p95)
+
+    # -- kernels -------------------------------------------------------------
+    def sequential_completions(self, issue, svc, segment_starts, *,
+                               backend: str = "auto"):
+        """Per-zone serialized completion times (max-plus scan)."""
+        return zone_sequential_completions(issue, svc, segment_starts,
+                                           backend=backend)
+
+    def __repr__(self) -> str:
+        return f"ZnsDevice({self.spec.name}, zones={self.spec.num_zones})"
+
+
+# ---------------------------------------------------------------------------
+# Conventional-SSD facade (§III-F baseline)
+# ---------------------------------------------------------------------------
+class ConvDevice:
+    """Conventional (non-zoned) SSD session sharing the ZnsDevice shape."""
+
+    def __init__(self, spec: Optional[ConvDeviceSpec] = None, *,
+                 seed: int = 0):
+        self.spec = spec if spec is not None else ConvDeviceSpec()
+        self.model = ConventionalSSD(self.spec, seed=seed)
+        self.lat = self.model.lat
+
+    def write_amplification(self, utilization: float) -> float:
+        return self.model.write_amplification(utilization)
+
+    def run_write_pressure(self, *, rate_mibs: float, duration_s: float = 60.0,
+                           utilization: float = 0.85, read_qd: int = 32,
+                           bin_s: float = 1.0) -> PressureResult:
+        r: ConvSimResult = self.model.simulate_write_pressure(
+            rate_mibs=rate_mibs, duration_s=duration_s,
+            utilization=utilization, read_qd=read_qd, bin_s=bin_s)
+        return PressureResult(t_s=r.t_s, write_mibs=r.write_mibs,
+                              read_lat_mean_us=r.read_lat_mean_us,
+                              read_lat_p95_us=r.read_lat_p95_us,
+                              read_mibs=r.read_mibs,
+                              write_amplification=r.write_amplification)
+
+    def __repr__(self) -> str:
+        return f"ConvDevice({self.spec.name})"

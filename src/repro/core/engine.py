@@ -1,6 +1,9 @@
 """Discrete-event + steady-state performance engines for the ZNS model.
 
-Two complementary engines, both built on :mod:`repro.core.latency`:
+These engines back the :class:`repro.core.ZnsDevice` session API (the
+preferred entry point; ``simulate``/``ThroughputModel`` remain as stable
+shims for existing callers).  Three complementary engines, all built on
+:mod:`repro.core.latency`:
 
 * :class:`ThroughputModel` — closed-form steady-state throughput/latency
   for a homogeneous workload configuration.  This is what reproduces the
@@ -15,14 +18,21 @@ Two complementary engines, both built on :mod:`repro.core.latency`:
   I/O inflates reset latency (Obs#13) while resets never delay I/O
   (Obs#12, enforced structurally via a dedicated metadata pool).
 
+* :func:`simulate_vectorized` — the ``"vectorized"`` ZnsDevice backend:
+  decomposes a trace into serialized chains solved by batched max-plus
+  scans, 10-20x faster than the event loop on 100k+-request traces.
+
 The per-zone sequential-completion recurrence that dominates large traces
 (``c_i = max(c_{i-1}, s_i) + v_i``) is a max-plus linear scan; the TPU
 Pallas kernel ``repro.kernels.zns_event_scan`` implements it blocked, and
-:func:`zone_sequential_completions` dispatches to it.
+:func:`zone_sequential_completions` dispatches to it (with a vectorized
+float64 numpy doubling scan as the CPU path).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import sys
 from typing import Optional
 
 import numpy as np
@@ -207,22 +217,20 @@ _POOL_OF_OP = {
 }
 
 
-def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
-             lat: Optional[LatencyModel] = None, *, seed: int = 0,
-             jitter: bool = True) -> SimResult:
-    """Simulate a trace; returns per-request start/complete times (us).
+def compute_service_times(trace: Trace, lat: Optional[LatencyModel] = None,
+                          *, seed: int = 0, jitter: bool = True,
+                          spec: ZNSDeviceSpec = ZNSDeviceSpec()) -> np.ndarray:
+    """Per-request service times (us) for a trace.
 
-    Pools: flash data path (reads+writes+appends share
-    ``read_parallelism`` servers, with writes additionally respecting
-    per-zone serialization and the append pool limit), a dedicated
-    metadata pool for RESET/FINISH (structurally enforcing Obs#12), and a
-    free pool for OPEN/CLOSE.
+    Shared by every simulation backend so that the event and vectorized
+    engines draw *identical* jitter for the same seed: the rng stream is
+    consumed in a fixed order (resets, finishes, then I/O).
+    Includes Obs#13 reset inflation from ``trace.io_ctx``.
     """
     lat = lat or LatencyModel(spec)
     rng = np.random.default_rng(seed)
     n = len(trace)
     ops = trace.op
-    # Precompute base service times.
     svc = np.zeros(n, dtype=np.float64)
     io_mask = (ops == OpType.READ) | (ops == OpType.WRITE) | (ops == OpType.APPEND)
     if io_mask.any():
@@ -252,6 +260,27 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
         sig = np.where(ops[io_mask] == OpType.READ, 0.15, 0.05)
         g = rng.standard_normal(io_mask.sum())
         svc[io_mask] = svc[io_mask] * np.exp(sig * g - sig ** 2 / 2)
+    return svc
+
+
+def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
+             lat: Optional[LatencyModel] = None, *, seed: int = 0,
+             jitter: bool = True) -> SimResult:
+    """Simulate a trace; returns per-request start/complete times (us).
+
+    .. deprecated:: prefer :meth:`repro.core.ZnsDevice.run` (the ``"event"``
+       backend), which wraps this engine behind the session API.
+
+    Pools: flash data path (reads+writes+appends share
+    ``read_parallelism`` servers, with writes additionally respecting
+    per-zone serialization and the append pool limit), a dedicated
+    metadata pool for RESET/FINISH (structurally enforcing Obs#12), and a
+    free pool for OPEN/CLOSE.
+    """
+    lat = lat or LatencyModel(spec)
+    n = len(trace)
+    ops = trace.op
+    svc = compute_service_times(trace, lat, seed=seed, jitter=jitter)
 
     # Pools.
     flash_free = np.zeros(spec.read_parallelism, dtype=np.float64)
@@ -260,23 +289,41 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
     mgmt_free = np.zeros(2, dtype=np.float64)
     zone_ready = np.zeros(spec.num_zones, dtype=np.float64)
 
-    # Closed-loop rings: completion history per thread.
+    # Closed-loop gating: exact completion history per thread — request at
+    # thread position ``pos`` waits for the completion of the request ``qd``
+    # positions earlier on the same thread.  Requests are processed in
+    # *ready-time* order (a discrete-event heap), so server-pool assignment
+    # is causal even when many closed-loop streams share issue times.
     threads = int(trace.thread.max()) + 1 if n else 1
-    maxqd = int(trace.qd.max()) if n else 1
-    ring = np.zeros((threads, max(maxqd, 1)), dtype=np.float64)
-    ring_pos = np.zeros(threads, dtype=np.int64)
+    hist: list[list] = [[] for _ in range(threads)]
+    order = np.argsort(trace.issue, kind="stable")
+    by_thread: list[list] = [[] for _ in range(threads)]
+    for idx in order:
+        by_thread[int(trace.thread[idx])].append(int(idx))
+    ptr = [0] * threads
 
     start = np.zeros(n, dtype=np.float64)
     complete = np.zeros(n, dtype=np.float64)
 
-    order = np.argsort(trace.issue, kind="stable")
-    for idx in order:
-        op = OpType(int(ops[idx]))
-        t = int(trace.thread[idx])
+    heap: list = []
+
+    def _push_next(t: int) -> None:
+        p = ptr[t]
+        if p >= len(by_thread[t]):
+            return
+        idx = by_thread[t][p]
         q = max(int(trace.qd[idx]), 1)
-        pos = ring_pos[t]
-        gate = ring[t, int(pos % q)] if pos >= q else 0.0
+        gate = hist[t][p - q] if p >= q else 0.0
         ready = max(float(trace.issue[idx]), gate)
+        heapq.heappush(heap, (ready, float(trace.issue[idx]), idx, t))
+
+    for t in range(threads):
+        _push_next(t)
+
+    while heap:
+        ready, _, idx, t = heapq.heappop(heap)
+        ptr[t] += 1
+        op = OpType(int(ops[idx]))
         z = int(trace.zone[idx])
         if op == OpType.WRITE and z >= 0:
             ready = max(ready, zone_ready[z])   # single in-flight write/zone
@@ -302,20 +349,52 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
             zone_ready[z] = end
         start[idx] = begin
         complete[idx] = end
-        ring[t, int(pos % ring.shape[1])] = end
-        ring_pos[t] = pos + 1
+        hist[t].append(end)
+        _push_next(t)
 
     return SimResult(start=start, complete=complete, service=svc)
+
+
+def _maxplus_scan_numpy(issue, svc, seg):
+    """Segmented max-plus scan, vectorized: O(n log n) doubling passes.
+
+    Same Hillis–Steele composition as the Pallas kernel
+    (``repro.kernels.zns_event_scan``) but in float64 numpy: each element
+    is the affine max-plus map ``c -> max(c + a, b)`` with ``a = svc``
+    (``-inf`` at segment heads, dropping the carry) and ``b = issue + svc``;
+    prefix-composition yields ``c_i`` directly since ``c_0 = -inf``.
+    Passes stop at the longest head-to-head run — composition never
+    crosses a segment head, so larger shifts are no-ops.
+    """
+    a = np.where(seg, -np.inf, svc)
+    b = issue + svc
+    n = len(a)
+    heads = np.flatnonzero(seg)
+    if len(heads):
+        bounds = np.concatenate([[0], heads, [n]])
+        max_run = int(np.diff(bounds).max())
+    else:
+        max_run = n
+    k = 1
+    while k < max_run:
+        # compose earlier (shifted) map, then current: (a_s,b_s) . (a,b);
+        # b must fold the *current* a before a accumulates the shift.
+        np.maximum(b[:-k] + a[k:], b[k:], out=b[k:])
+        np.add(a[k:], a[:-k], out=a[k:])
+        k *= 2
+    return b
 
 
 def zone_sequential_completions(issue, svc, segment_starts, *, backend="auto"):
     """Per-zone sequential completion times: c_i = max(c_{i-1}, s_i) + v_i.
 
     ``segment_starts``: bool array marking the first request of each zone
-    segment (requests must be grouped by zone).  Dispatches to the Pallas
-    max-plus scan kernel when available; falls back to the numpy oracle.
+    segment (requests must be grouped by zone).  Backends: ``"pallas"``
+    forces the TPU kernel (float32), ``"numpy"`` the vectorized float64
+    doubling scan, ``"python"`` the sequential oracle; ``"auto"`` uses the
+    Pallas kernel on TPU and the numpy scan elsewhere.
     """
-    if backend in ("auto", "pallas"):
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
         try:
             from repro.kernels import ops as kops
             import jax.numpy as jnp
@@ -330,6 +409,8 @@ def zone_sequential_completions(issue, svc, segment_starts, *, backend="auto"):
     issue = np.asarray(issue, dtype=np.float64)
     svc = np.asarray(svc, dtype=np.float64)
     seg = np.asarray(segment_starts, dtype=bool)
+    if backend != "python":
+        return _maxplus_scan_numpy(issue, svc, seg)
     out = np.empty_like(issue)
     c = -np.inf
     for i in range(len(issue)):
@@ -338,3 +419,157 @@ def zone_sequential_completions(issue, svc, segment_starts, *, backend="auto"):
         c = max(c, issue[i]) + svc[i]
         out[i] = c
     return out
+
+
+_ON_TPU: Optional[bool] = None
+
+
+def _on_tpu() -> bool:
+    # Only consult jax once something else has imported it: dragging the
+    # whole jax runtime in for a CPU-side numpy scan costs ~1 s.  The
+    # answer is only cached after jax is available, so early CPU-path
+    # calls don't pin the dispatch before jax initializes.
+    global _ON_TPU
+    if _ON_TPU is None:
+        jax = sys.modules.get("jax")
+        if jax is None:
+            return False
+        try:
+            _ON_TPU = jax.default_backend() == "tpu"
+        except Exception:
+            return False
+    return _ON_TPU
+
+
+# ---------------------------------------------------------------------------
+# Vectorized trace engine (the ZnsDevice "vectorized" backend)
+# ---------------------------------------------------------------------------
+def _cumcount(keys: np.ndarray) -> np.ndarray:
+    """Occurrence rank of each element within its key group (stable)."""
+    n = len(keys)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    starts = np.r_[True, sk[1:] != sk[:-1]] if n else np.zeros(0, bool)
+    group_start = np.maximum.accumulate(np.where(starts, np.arange(n), 0))
+    rank = np.arange(n) - group_start
+    out = np.empty(n, dtype=np.int64)
+    out[order] = rank
+    return out
+
+
+def _chain_perm(member: np.ndarray, chain_id: np.ndarray):
+    """(perm, heads) for a chain family: members sorted by (chain, seq)."""
+    idx = np.flatnonzero(member)
+    if len(idx) == 0:
+        return idx, np.zeros(0, dtype=bool)
+    order = np.argsort(chain_id[idx], kind="stable")
+    perm = idx[order]
+    cid = chain_id[perm]
+    heads = np.r_[True, cid[1:] != cid[:-1]]
+    return perm, heads
+
+
+def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
+                        lat: Optional[LatencyModel] = None, *, seed: int = 0,
+                        jitter: bool = True, sweeps: int = 8,
+                        scan_backend: str = "auto") -> SimResult:
+    """Vectorized counterpart of :func:`simulate` for large traces.
+
+    The event engine's per-request constraints decompose into serialized
+    *chains*: the per-zone write chain, the metadata (RESET/FINISH) chain,
+    per-thread closed-loop lag-``qd`` chains, and lag-``capacity`` pool
+    chains for the flash/append/mgmt server pools.  Each chain is the
+    max-plus recurrence ``c_i = max(c_{i-1}, ready_i) + svc_i``, solved as
+    a batch of segments through :func:`zone_sequential_completions` (the
+    Pallas max-plus scan on TPU, the numpy doubling scan elsewhere).
+    Cross-chain coupling is resolved by Gauss–Seidel sweeps from below,
+    which converge to the event engine's least fixpoint; ``sweeps`` bounds
+    the iteration (traces from :class:`repro.core.WorkloadSpec` converge
+    in 2–3).
+
+    Exact (up to float associativity) whenever each request's binding
+    constraint is one of those chains — i.e. the server pools are either
+    slack or saturated with near-homogeneous service times; the greedy
+    per-server assignment of the event engine is approximated by a FIFO
+    lag-``capacity`` recurrence otherwise.
+    """
+    lat = lat or LatencyModel(spec)
+    n = len(trace)
+    svc_orig = compute_service_times(trace, lat, seed=seed, jitter=jitter)
+    if n == 0:
+        z = np.zeros(0, dtype=np.float64)
+        return SimResult(start=z, complete=z.copy(), service=svc_orig)
+
+    # Work in event-processing order (stable sort by issue time).
+    order = np.argsort(trace.issue, kind="stable")
+    inv = np.empty(n, dtype=np.int64)
+    inv[order] = np.arange(n)
+    ops = trace.op[order]
+    zone = trace.zone[order].astype(np.int64)
+    thread = trace.thread[order].astype(np.int64)
+    qd = np.maximum(trace.qd[order].astype(np.int64), 1)
+    issue = trace.issue[order]
+    svc = svc_orig[order]
+
+    io = (ops == OpType.READ) | (ops == OpType.WRITE) | (ops == OpType.APPEND)
+    wr = (ops == OpType.WRITE) & (zone >= 0)
+    ap = ops == OpType.APPEND
+    meta = (ops == OpType.RESET) | (ops == OpType.FINISH)
+    mgmt = (ops == OpType.OPEN) | (ops == OpType.CLOSE)
+
+    def _conc_bound(member: np.ndarray) -> int:
+        """Upper bound on concurrent in-flight ops from ``member`` rows:
+        sum over threads of the thread's queue depth."""
+        t, q = thread[member], qd[member]
+        if t.size == 0:
+            return 0
+        per_thread = np.zeros(int(t.max()) + 1, dtype=np.int64)
+        np.maximum.at(per_thread, t, q)
+        return int(per_thread.sum())
+
+    # Chain families: (member mask, chain id).  Ids only need to be unique
+    # within a family; _chain_perm groups members by them.  Exact chains:
+    # per-thread closed-loop lag-qd interleaves (qd constant per thread),
+    # per-zone write serialization, and the single-server metadata engine.
+    # Server pools (flash/append/mgmt) are lag-capacity FIFO chains — only
+    # added when the workload can actually saturate them, and approximate
+    # unless the saturating ops have near-homogeneous service times.
+    tpos = _cumcount(thread)
+    families = [(np.ones(n, dtype=bool), thread * (int(qd.max()) + 1) + tpos % qd)]
+    if wr.any():
+        families.append((wr, zone))
+    meta_lag = max(spec.reset_parallelism, 1)
+    if meta.any() and (meta_lag == 1 or _conc_bound(meta) > meta_lag):
+        families.append((meta, _cumcount(np.where(meta, 0, -1)) % meta_lag))
+    if mgmt.any() and _conc_bound(mgmt) > 2:
+        families.append((mgmt, _cumcount(np.where(mgmt, 0, -1)) % 2))
+    if io.any() and _conc_bound(io) > spec.read_parallelism:
+        families.append((io, _cumcount(np.where(io, 0, -1))
+                         % max(spec.read_parallelism, 1)))
+    if ap.any() and _conc_bound(ap) > spec.append_parallelism:
+        families.append((ap, _cumcount(np.where(ap, 0, -1))
+                         % max(spec.append_parallelism, 1)))
+    chains = [(perm, heads, svc[perm])
+              for perm, heads in (_chain_perm(m, c) for m, c in families)
+              if len(perm)]
+
+    comp = issue + svc       # lower bound: no queueing at all
+    for _ in range(max(sweeps, 1)):
+        moved = False
+        for perm, heads, svc_p in chains:
+            # Current begin estimates fold the issue times and every gate
+            # applied so far; the scan serializes the chain on top.
+            cur = comp[perm]
+            out = zone_sequential_completions(cur - svc_p, svc_p, heads,
+                                              backend=scan_backend)
+            # Anything beyond float noise counts as progress
+            # (re-deriving begin = comp - svc costs ~1 ulp per sweep).
+            if (out > cur * (1.0 + 1e-12) + 1e-9).any():
+                moved = True
+                comp[perm] = np.maximum(cur, out)
+        if not moved:
+            break
+
+    start = comp - svc
+    return SimResult(start=start[inv].copy(), complete=comp[inv].copy(),
+                     service=svc_orig)

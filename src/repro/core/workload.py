@@ -1,0 +1,212 @@
+"""Declarative workload builder for the :class:`repro.core.ZnsDevice` API.
+
+A :class:`WorkloadSpec` is an immutable, chainable description of a
+benchmark workload as a set of closed-loop *streams* — mirroring how the
+paper drives fio/SPDK (§III-A): each stream is one thread issuing one
+operation type at a queue depth, with optional rate limiting, intra- vs
+inter-zone layouts, occupancy sweeps for zone-management ops, and phases
+(time offsets).  ``build()`` lowers the spec to the struct-of-arrays
+:class:`repro.core.Trace` consumed by the simulation backends.
+
+    wl = (WorkloadSpec()
+          .writes(n=10_000, size=4 * KiB, qd=4, zone=0)
+          .reads(n=10_000, size=4 * KiB, qd=8, zone=100, nzones=64)
+          .resets(n=50, occupancy=1.0, io_ctx=OpType.WRITE))
+    result = ZnsDevice().run(wl, backend="vectorized")
+
+Streams get distinct thread ids unless pinned, so closed-loop gating is
+per stream exactly as in the paper's multi-thread setups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .engine import Trace
+from .spec import KiB, LBAFormat, OpType, Stack
+
+_IO_OPS = (OpType.READ, OpType.WRITE, OpType.APPEND)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One closed-loop stream of a single operation type."""
+
+    op: OpType
+    n: int
+    size: int = 0
+    qd: int = 1
+    zone: int = 0
+    nzones: int = 1                 # round-robin over [zone, zone + nzones)
+    thread: Optional[int] = None    # auto-assigned at build() when None
+    rate_bytes_per_s: Optional[float] = None
+    every_us: Optional[float] = None  # fixed inter-issue spacing
+    start_us: float = 0.0
+    # zone-management parameters
+    occupancy: float = 0.0
+    occupancies: Optional[Tuple[float, ...]] = None  # sweep levels
+    n_per_level: int = 1
+    pause_us: float = 0.0           # settle time before each mgmt op
+    finish_first: bool = False      # FINISH each zone before RESET
+    was_finished: bool = False
+    io_ctx: int = -1                # OpType running concurrently (Obs#13)
+
+    def lower(self, thread: int) -> Trace:
+        if self.op in _IO_OPS:
+            return self._lower_io(thread)
+        return self._lower_mgmt(thread)
+
+    # -- I/O streams --------------------------------------------------------
+    def _lower_io(self, thread: int) -> Trace:
+        n = self.n
+        zones = self.zone + (np.arange(n) % max(self.nzones, 1))
+        if self.every_us is not None:
+            pace = float(self.every_us)
+        elif self.rate_bytes_per_s is not None:
+            pace = self.size / self.rate_bytes_per_s * 1e6
+        else:
+            pace = 0.0              # purely closed-loop: QD gates everything
+        issue = self.start_us + np.arange(n, dtype=np.float64) * pace
+        return Trace.build(
+            op=np.full(n, int(self.op)), zone=zones,
+            size=np.full(n, self.size), issue=issue,
+            thread=np.full(n, thread), qd=np.full(n, self.qd))
+
+    # -- zone-management streams -------------------------------------------
+    def _lower_mgmt(self, thread: int) -> Trace:
+        ops, occs, fin, issue, ctx = [], [], [], [], []
+        t = self.start_us
+        levels = self.occupancies if self.occupancies is not None \
+            else (self.occupancy,)
+        for occ in levels:
+            for _ in range(self.n_per_level if self.occupancies is not None
+                           else self.n):
+                t += self.pause_us
+                if self.op == OpType.RESET and self.finish_first \
+                        and 0.0 < occ < 1.0:
+                    ops.append(int(OpType.FINISH)); occs.append(occ)
+                    fin.append(False); issue.append(t); ctx.append(self.io_ctx)
+                    t += 1.0
+                    ops.append(int(OpType.RESET)); occs.append(occ)
+                    fin.append(True); issue.append(t); ctx.append(self.io_ctx)
+                else:
+                    ops.append(int(self.op)); occs.append(occ)
+                    fin.append(self.was_finished); issue.append(t)
+                    ctx.append(self.io_ctx)
+                if self.every_us is not None:
+                    t += self.every_us
+        n = len(ops)
+        zones = self.zone + (np.arange(n) % max(self.nzones, 1))
+        return Trace.build(
+            op=ops, zone=zones, size=None, issue=issue,
+            thread=np.full(n, thread), qd=np.full(n, self.qd),
+            occupancy=occs, was_finished=fin, io_ctx=ctx)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Composable, declarative multi-stream workload.
+
+    Every builder method returns a *new* spec (chainable, immutable).
+    ``stack``/``fmt`` apply to the whole workload (a :class:`Trace` is
+    homogeneous in both, matching the paper's per-experiment setup).
+    """
+
+    streams: Tuple[StreamSpec, ...] = ()
+    stack: Stack = Stack.SPDK
+    fmt: LBAFormat = LBAFormat.LBA_4K
+    phase_us: float = 0.0
+
+    # -- configuration ------------------------------------------------------
+    def on_stack(self, stack: Stack) -> "WorkloadSpec":
+        return dataclasses.replace(self, stack=Stack(stack))
+
+    def with_format(self, fmt: LBAFormat) -> "WorkloadSpec":
+        return dataclasses.replace(self, fmt=LBAFormat(fmt))
+
+    def phase(self, *, at_us: Optional[float] = None,
+              after_us: float = 0.0) -> "WorkloadSpec":
+        """Shift the start time of subsequently added streams."""
+        new = at_us if at_us is not None else self.phase_us + after_us
+        return dataclasses.replace(self, phase_us=float(new))
+
+    # -- stream builders ----------------------------------------------------
+    def stream(self, op: OpType, **kw) -> "WorkloadSpec":
+        kw.setdefault("start_us", self.phase_us)
+        s = StreamSpec(op=OpType(op), **kw)
+        return dataclasses.replace(self, streams=self.streams + (s,))
+
+    def reads(self, n: int, *, size: int = 4 * KiB, **kw) -> "WorkloadSpec":
+        return self.stream(OpType.READ, n=n, size=size, **kw)
+
+    def writes(self, n: int, *, size: int = 4 * KiB, **kw) -> "WorkloadSpec":
+        return self.stream(OpType.WRITE, n=n, size=size, **kw)
+
+    def appends(self, n: int, *, size: int = 8 * KiB, **kw) -> "WorkloadSpec":
+        return self.stream(OpType.APPEND, n=n, size=size, **kw)
+
+    def resets(self, n: int = 1, *, occupancy: float = 1.0,
+               io_ctx: Union[OpType, int, None] = None,
+               **kw) -> "WorkloadSpec":
+        ctx = -1 if io_ctx is None else int(io_ctx)
+        return self.stream(OpType.RESET, n=n, occupancy=occupancy,
+                           io_ctx=ctx, **kw)
+
+    def finishes(self, n: int = 1, *, occupancy: float = 0.0,
+                 **kw) -> "WorkloadSpec":
+        return self.stream(OpType.FINISH, n=n, occupancy=occupancy, **kw)
+
+    def opens(self, n: int = 1, **kw) -> "WorkloadSpec":
+        return self.stream(OpType.OPEN, n=n, **kw)
+
+    def closes(self, n: int = 1, **kw) -> "WorkloadSpec":
+        return self.stream(OpType.CLOSE, n=n, **kw)
+
+    # -- sweeps (Fig. 5 methodology) ----------------------------------------
+    def reset_sweep(self, occupancies: Sequence[float], *,
+                    n_per_level: int = 100, pause_us: float = 1e6,
+                    finish_first: bool = False, **kw) -> "WorkloadSpec":
+        """Reset (optionally finish-then-reset) at each occupancy level,
+        pausing ``pause_us`` before each op for the device to settle."""
+        return self.stream(OpType.RESET, n=n_per_level,
+                           occupancies=tuple(float(o) for o in occupancies),
+                           n_per_level=n_per_level, pause_us=pause_us,
+                           finish_first=finish_first, **kw)
+
+    def finish_sweep(self, occupancies: Sequence[float], *,
+                     n_per_level: int = 100, pause_us: float = 1e6,
+                     **kw) -> "WorkloadSpec":
+        return self.stream(OpType.FINISH, n=n_per_level,
+                           occupancies=tuple(float(o) for o in occupancies),
+                           n_per_level=n_per_level, pause_us=pause_us, **kw)
+
+    # -- lowering ------------------------------------------------------------
+    def build(self) -> Trace:
+        """Lower to a :class:`Trace` (struct-of-arrays request list)."""
+        if not self.streams:
+            raise ValueError("empty WorkloadSpec: add at least one stream")
+        used = {s.thread for s in self.streams if s.thread is not None}
+        auto = (t for t in range(len(self.streams) + len(used))
+                if t not in used)
+        traces = []
+        for s in self.streams:
+            thread = s.thread if s.thread is not None else next(auto)
+            tr = s.lower(thread)
+            traces.append(tr)
+        return _concat(traces, self.stack, self.fmt)
+
+    def __len__(self) -> int:
+        return len(self.streams)
+
+
+def _concat(traces, stack: Stack, fmt: LBAFormat) -> Trace:
+    ts = [t for t in traces if len(t)]
+    if not ts:
+        raise ValueError("WorkloadSpec lowered to an empty trace")
+    cat = lambda f: np.concatenate([getattr(t, f) for t in ts])
+    return Trace(op=cat("op"), zone=cat("zone"), size=cat("size"),
+                 issue=cat("issue"), thread=cat("thread"), qd=cat("qd"),
+                 occupancy=cat("occupancy"), was_finished=cat("was_finished"),
+                 io_ctx=cat("io_ctx"), stack=stack, fmt=fmt)

@@ -4,6 +4,11 @@ Each generator mirrors one of the paper's experimental setups (§III-A..G):
 closed-loop threads at a queue depth, optional rate limiting, intra- vs
 inter-zone layouts, fill/reset/finish sequences for the state-machine
 costs, and the two-thread reset-interference layout of §III-G.
+
+The sweep/interference generators are now thin wrappers over the
+declarative :class:`repro.core.WorkloadSpec` builder (they lower to the
+identical traces); prefer composing a ``WorkloadSpec`` directly for new
+workloads.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import numpy as np
 from .engine import Trace
 from .latency import LatencyModel
 from .spec import KiB, MiB, LBAFormat, OpType, Stack, ZNSDeviceSpec
+from .workload import WorkloadSpec
 
 
 def _closed_loop_issue(n: int, pace_us: float) -> np.ndarray:
@@ -82,36 +88,18 @@ def reset_sweep(occupancies, *, finished_first: bool, n_per_level: int = 100,
     Mirrors the Fig. 5 methodology: fill to the level, pause 1 s for the
     device to stabilize, then reset (or finish+reset).
     """
-    ops, occs, fin, issue = [], [], [], []
-    t = 0.0
-    for occ in occupancies:
-        for _ in range(n_per_level):
-            t += pause_us
-            if finished_first and 0.0 < occ < 1.0:
-                ops.append(int(OpType.FINISH)); occs.append(occ)
-                fin.append(False); issue.append(t)
-                t += 1.0
-                ops.append(int(OpType.RESET)); occs.append(occ)
-                fin.append(True); issue.append(t)
-            else:
-                ops.append(int(OpType.RESET)); occs.append(occ)
-                fin.append(False); issue.append(t)
-    n = len(ops)
-    return Trace.build(op=ops, zone=np.zeros(n), size=None,
-                       issue=issue, occupancy=occs, was_finished=fin)
+    return (WorkloadSpec()
+            .reset_sweep(occupancies, n_per_level=n_per_level,
+                         pause_us=pause_us, finish_first=finished_first)
+            .build())
 
 
 def finish_sweep(occupancies, *, n_per_level: int = 100,
                  pause_us: float = 1e6) -> Trace:
-    ops, occs, issue = [], [], []
-    t = 0.0
-    for occ in occupancies:
-        for _ in range(n_per_level):
-            t += pause_us
-            ops.append(int(OpType.FINISH)); occs.append(occ); issue.append(t)
-    n = len(ops)
-    return Trace.build(op=ops, zone=np.zeros(n), size=None, issue=issue,
-                       occupancy=occs)
+    return (WorkloadSpec()
+            .finish_sweep(occupancies, n_per_level=n_per_level,
+                          pause_us=pause_us)
+            .build())
 
 
 # ---------------------------------------------------------------------------
@@ -124,24 +112,17 @@ def reset_interference(io_op: Optional[OpType], *, n_resets: int = 400,
 
     ``io_op = None`` reproduces the isolated-reset baseline.
     """
-    ctx = int(io_op) if io_op is not None else -1
-    resets = Trace.build(
-        op=np.full(n_resets, int(OpType.RESET)),
-        zone=np.arange(n_resets) % (spec.num_zones // 2),
-        size=None, issue=np.zeros(n_resets),
-        thread=np.zeros(n_resets), qd=np.ones(n_resets),
-        occupancy=np.ones(n_resets), io_ctx=np.full(n_resets, ctx))
+    wl = WorkloadSpec().resets(n=n_resets, occupancy=1.0,
+                               nzones=spec.num_zones // 2, io_ctx=io_op)
     if io_op is None:
-        return resets
+        return wl.build()
     # Enough I/O to overlap every reset (resets take ~16-32 ms each).
     est_span_us = n_resets * 35e3
     svc = float(LatencyModel(spec).io_service_us(io_op, io_size))
-    n_io = int(est_span_us / svc) + 1
-    n_io = min(n_io, 150_000)
-    io = io_stream(io_op, size=io_size, n=n_io, qd=1,
-                   zone=spec.num_zones // 2, nzones=spec.num_zones // 2,
-                   thread=1)
-    return concat(resets, io)
+    n_io = min(int(est_span_us / svc) + 1, 150_000)
+    return wl.stream(io_op, n=n_io, size=io_size, qd=1,
+                     zone=spec.num_zones // 2,
+                     nzones=spec.num_zones // 2).build()
 
 
 # ---------------------------------------------------------------------------
@@ -164,15 +145,13 @@ def write_pressure_workload(cfg: WritePressureConfig, *, use_append: bool,
     per_thread_rate = cfg.rate_mibs * MiB / cfg.write_threads
     n_w = int(per_thread_rate * cfg.duration_s / cfg.write_size)
     op = OpType.APPEND if use_append else OpType.WRITE
-    traces = []
+    wl = WorkloadSpec()
     for t in range(cfg.write_threads):
-        traces.append(io_stream(
-            op, size=cfg.write_size, n=max(n_w, 1), qd=cfg.write_qd,
-            zone=t * 50, nzones=8, thread=t,
-            rate_bytes_per_s=per_thread_rate))
+        wl = wl.stream(op, n=max(n_w, 1), size=cfg.write_size,
+                       qd=cfg.write_qd, zone=t * 50, nzones=8, thread=t,
+                       rate_bytes_per_s=per_thread_rate)
     est_read_rate = 2_000.0  # reads crawl under pressure; engine decides
-    n_r = int(est_read_rate * cfg.duration_s)
-    traces.append(io_stream(OpType.READ, size=cfg.read_size, n=n_r,
-                            qd=cfg.read_qd, zone=500, nzones=200,
-                            thread=cfg.write_threads))
-    return concat(*traces)
+    wl = wl.reads(n=int(est_read_rate * cfg.duration_s), size=cfg.read_size,
+                  qd=cfg.read_qd, zone=500, nzones=200,
+                  thread=cfg.write_threads)
+    return wl.build()

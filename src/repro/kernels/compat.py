@@ -1,0 +1,11 @@
+"""Small jax-version compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+jax releases; resolve whichever this environment provides once, here.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

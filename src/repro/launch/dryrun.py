@@ -113,6 +113,8 @@ def lower_cell(cfg, shape, mesh, args):
 def analyze(compiled) -> dict:
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
     return {

@@ -31,10 +31,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import (
-    KiB, MiB, LatencyModel, OpType, Stack, ThroughputModel, ZNSDeviceSpec,
-    ZoneManager, zone_sequential_completions,
-)
+from repro.core import KiB, MiB, OpType, Stack, ZNSDeviceSpec, ZnsDevice
 from repro.core.state_machine import ZoneError
 
 
@@ -57,16 +54,21 @@ class HostWriteReport:
 
 
 class ZnsHostDevice:
-    """One host's ZNS device: zone accounting + calibrated timing."""
+    """One host's ZNS device session: zone accounting + calibrated timing.
+
+    Owns a :class:`repro.core.ZnsDevice` handle; ``zm``/``lat``/``tm``
+    remain as aliases into it for existing callers.
+    """
 
     def __init__(self, host: int, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
                  *, stripe_bytes: int = 1 * MiB, append_qd: int = 4,
                  concurrent_zones: int = 1):
         self.host = host
-        self.spec = spec
-        self.zm = ZoneManager(spec)
-        self.lat = LatencyModel(spec)
-        self.tm = ThroughputModel(spec, self.lat)
+        self.device = ZnsDevice(spec)
+        self.spec = self.device.spec
+        self.zm = self.device.zones
+        self.lat = self.device.lat
+        self.tm = self.device.throughput
         self.stripe = stripe_bytes
         self.append_qd = append_qd
         self.concurrent_zones = concurrent_zones
@@ -127,7 +129,7 @@ class ZnsHostDevice:
         issue = np.arange(n_appends, dtype=np.float64) * (svc_eff / self.append_qd)
         seg = np.zeros(n_appends, dtype=bool)
         seg[0] = True
-        done = zone_sequential_completions(
+        done = self.device.sequential_completions(
             issue, np.full(n_appends, svc_eff / self.append_qd), seg)
         return float(done[-1]) / 1e6, n_appends
 

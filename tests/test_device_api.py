@@ -1,0 +1,205 @@
+"""ZnsDevice session API: WorkloadSpec lowering, backend registry, and
+event-vs-vectorized equivalence (including per-zone write serialization
+and the Obs#12/#13 reset-interference couplings)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    KiB, MiB, ConvDevice, LatencyModel, OpType, RunResult, Stack, Trace,
+    WorkloadSpec, ZnsDevice, available_backends, compute_service_times,
+    register_backend, simulate, zone_sequential_completions,
+)
+from repro.core.workloads import reset_interference, reset_sweep
+
+
+def _assert_equivalent(wl, *, jitter=False, seed=3, rtol=1e-9):
+    dev = ZnsDevice()
+    tr = wl.build() if isinstance(wl, WorkloadSpec) else wl
+    ev = dev.run(tr, backend="event", seed=seed, jitter=jitter)
+    vc = dev.run(tr, backend="vectorized", seed=seed, jitter=jitter)
+    np.testing.assert_allclose(vc.sim.service, ev.sim.service, rtol=1e-12)
+    np.testing.assert_allclose(vc.sim.complete, ev.sim.complete, rtol=rtol,
+                               atol=1e-6)
+    np.testing.assert_allclose(vc.sim.start, ev.sim.start, rtol=rtol,
+                               atol=1e-6)
+    return ev, vc
+
+
+# -- backend equivalence --------------------------------------------------------
+def test_equiv_intra_zone_write_serialization():
+    ev, vc = _assert_equivalent(WorkloadSpec().writes(n=3000, qd=4, zone=7))
+    # per-zone write serialization: intervals must not overlap
+    s, c = np.sort(vc.sim.start), np.sort(vc.sim.complete)
+    assert (s[1:] >= c[:-1] - 1e-6).all()
+
+
+def test_equiv_inter_zone_writes():
+    _assert_equivalent(WorkloadSpec().writes(n=3000, qd=1, nzones=8))
+
+
+def test_equiv_mixed_read_write_append_reset():
+    wl = (WorkloadSpec()
+          .writes(n=1500, qd=4, zone=0)
+          .reads(n=1500, qd=8, zone=100, nzones=50)
+          .appends(n=1000, qd=2, zone=200)
+          .resets(n=150, occupancy=1.0, nzones=64, io_ctx=OpType.READ))
+    _assert_equivalent(wl)
+
+
+def test_equiv_saturated_read_pool():
+    _assert_equivalent(WorkloadSpec().reads(n=4000, qd=128))
+
+
+def test_equiv_rate_limited_and_phased():
+    wl = (WorkloadSpec()
+          .writes(n=1000, size=128 * KiB, qd=8, zone=0, nzones=8,
+                  rate_bytes_per_s=200 * MiB)
+          .phase(at_us=5e5)
+          .reads(n=1000, qd=4, zone=100, nzones=64))
+    _assert_equivalent(wl)
+
+
+def test_equiv_with_jitter_same_seed():
+    wl = (WorkloadSpec()
+          .resets(n=100, occupancy=1.0, nzones=50, io_ctx=OpType.WRITE)
+          .writes(n=2000, qd=4, zone=100))
+    _assert_equivalent(wl, jitter=True, seed=11)
+
+
+def test_equiv_obs13_reset_inflation_applied():
+    dev = ZnsDevice()
+    quiet = dev.run(WorkloadSpec().resets(n=50, occupancy=1.0, nzones=50),
+                    backend="vectorized", jitter=False)
+    loud = dev.run(WorkloadSpec().resets(n=50, occupancy=1.0, nzones=50,
+                                         io_ctx=OpType.WRITE),
+                   backend="vectorized", jitter=False)
+    ratio = (loud.latency_stats(OpType.RESET).mean_us
+             / quiet.latency_stats(OpType.RESET).mean_us)
+    assert ratio == pytest.approx(1.7842, rel=1e-3)   # Obs#13 anchor
+
+
+def test_equiv_obs12_resets_do_not_delay_io():
+    # same I/O stream with and without concurrent resets: I/O completions
+    # are identical (structural Obs#12) on both backends.
+    io = WorkloadSpec().writes(n=1500, qd=4, zone=100)
+    both = WorkloadSpec().resets(n=100, occupancy=1.0, nzones=50,
+                                 thread=9).writes(n=1500, qd=4, zone=100)
+    for backend in ("event", "vectorized"):
+        dev = ZnsDevice()
+        a = dev.run(io, backend=backend, jitter=False)
+        b = dev.run(both, backend=backend, jitter=False)
+        wmask = b.trace.op == OpType.WRITE
+        np.testing.assert_allclose(b.sim.complete[wmask], a.sim.complete,
+                                   rtol=1e-12)
+
+
+# -- workload lowering ----------------------------------------------------------
+def test_workload_threads_auto_assigned():
+    tr = (WorkloadSpec().writes(n=10).reads(n=10).appends(n=10)).build()
+    assert set(np.unique(tr.thread)) == {0, 1, 2}
+
+
+def test_workload_thread_pinning_respected():
+    tr = (WorkloadSpec().writes(n=10, thread=5).reads(n=10)).build()
+    assert set(np.unique(tr.thread)) == {0, 5}
+
+
+def test_workload_stack_format_applied():
+    tr = (WorkloadSpec().writes(n=4)
+          .on_stack(Stack.KERNEL_MQ_DEADLINE)).build()
+    assert tr.stack == Stack.KERNEL_MQ_DEADLINE
+
+
+def test_workload_reset_sweep_matches_generator():
+    occs = (0.0, 0.25, 0.5, 1.0)
+    a = reset_sweep(occs, finished_first=True, n_per_level=10)
+    b = (WorkloadSpec()
+         .reset_sweep(occs, n_per_level=10, finish_first=True)).build()
+    for f in ("op", "zone", "size", "issue", "occupancy", "was_finished"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+def test_workload_empty_rejected():
+    with pytest.raises(ValueError):
+        WorkloadSpec().build()
+
+
+# -- facade + registry ----------------------------------------------------------
+def test_device_run_accepts_trace_and_spec():
+    dev = ZnsDevice()
+    res = dev.run(reset_interference(None, n_resets=20), backend="event")
+    assert isinstance(res, RunResult)
+    assert res.backend == "event"
+    assert len(res) == 20
+
+
+def test_device_auto_backend_threshold():
+    dev = ZnsDevice()
+    small = dev.run(WorkloadSpec().writes(n=64), backend="auto")
+    assert small.backend == "event"
+
+
+def test_unknown_backend_raises():
+    dev = ZnsDevice()
+    with pytest.raises(KeyError):
+        dev.run(WorkloadSpec().writes(n=4), backend="nope")
+
+
+def test_register_custom_backend():
+    @register_backend("instant-test")
+    def _instant(trace, spec, lat, *, seed=0, jitter=True, **_):
+        svc = compute_service_times(trace, lat, seed=seed, jitter=jitter)
+        issue = np.asarray(trace.issue, dtype=np.float64)
+        from repro.core import SimResult
+        return SimResult(start=issue, complete=issue + svc, service=svc)
+
+    assert "instant-test" in available_backends()
+    res = ZnsDevice().run(WorkloadSpec().writes(n=8), backend="instant-test")
+    np.testing.assert_allclose(res.sim.complete,
+                               res.trace.issue + res.sim.service)
+
+
+def test_deprecated_simulate_matches_event_backend():
+    tr = WorkloadSpec().writes(n=200, qd=2).build()
+    old = simulate(tr, seed=5)
+    new = ZnsDevice().run(tr, backend="event", seed=5)
+    np.testing.assert_array_equal(old.complete, new.sim.complete)
+
+
+def test_steady_state_facade_matches_anchor():
+    res = ZnsDevice().steady_state(OpType.READ, 4 * KiB, qd=128)
+    assert res.iops == pytest.approx(424_000, rel=0.02)
+
+
+def test_run_result_metrics_shape():
+    res = ZnsDevice().run(WorkloadSpec().writes(n=500, qd=4), jitter=False)
+    st = res.latency_stats(OpType.WRITE)
+    assert st.n == 500 and st.p99_us >= st.p50_us > 0
+    assert res.iops > 0 and res.bandwidth_bytes > 0
+    assert OpType.WRITE in res.per_op_stats()
+
+
+def test_run_result_stats_absent_op_raises():
+    res = ZnsDevice().run(WorkloadSpec().writes(n=10), jitter=False)
+    with pytest.raises(ValueError, match="no READ requests"):
+        res.latency_stats(OpType.READ)
+
+
+def test_conv_device_shares_pressure_interface():
+    conv = ConvDevice().run_write_pressure(rate_mibs=1155.0, duration_s=10)
+    zns = ZnsDevice().run_write_pressure(rate_mibs=1155.0, duration_s=10)
+    assert conv.write_cv > 5 * zns.write_cv       # Fig. 6: GC sawtooth
+    assert conv.read_lat_p95_us > zns.read_lat_p95_us  # Obs#11
+
+
+# -- scan kernel dispatch --------------------------------------------------------
+def test_scan_numpy_matches_python_oracle():
+    rng = np.random.default_rng(0)
+    n = 4097
+    issue = np.sort(rng.uniform(0, 1e6, n))
+    svc = rng.uniform(5, 5000, n)
+    seg = rng.uniform(size=n) < 0.01
+    seg[0] = True
+    out_np = zone_sequential_completions(issue, svc, seg, backend="numpy")
+    out_py = zone_sequential_completions(issue, svc, seg, backend="python")
+    np.testing.assert_allclose(out_np, out_py, rtol=1e-12)

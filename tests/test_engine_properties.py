@@ -1,6 +1,9 @@
 """Event-engine invariants (hypothesis) + steady-state model sanity."""
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (

@@ -1,7 +1,12 @@
 """CLI drivers end-to-end (subprocess): train, serve, roofline."""
+import glob
 import os
 import subprocess
 import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow  # end-to-end suite: skipped by -m "not slow"
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -38,6 +43,9 @@ def test_serve_driver_completes_requests():
     assert "[serve] 6/6 requests" in out
 
 
+@pytest.mark.skipif(
+    not glob.glob(os.path.join(REPO, "reports", "dryrun", "*.json")),
+    reason="dry-run sweep not present (run scripts/run_dryrun_sweep.sh)")
 def test_roofline_aggregator_emits_rows():
     out = _run(["-m", "repro.launch.roofline", "--in", "reports/dryrun",
                 "reports/dryrun_fitfix"])

@@ -15,9 +15,14 @@ from repro.train.step import state_logical_axes, state_spec
 
 
 def _fake_mesh(shape, axes):
-    # AbstractMesh builds without devices — enough for spec resolution
+    # AbstractMesh builds without devices — enough for spec resolution.
+    # Signature changed across jax versions: older takes a shape_tuple of
+    # (name, size) pairs, newer takes (axis_sizes, axis_names).
     from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
 
 
 MESHES = [

@@ -5,6 +5,8 @@ import dataclasses
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end suite: skipped by -m "not slow"
+
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,9 @@
 """Zone state machine: legality, limits, and property-based invariants."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import OpType, ZoneError, ZoneManager, ZoneState, ZNSDeviceSpec
