@@ -1,43 +1,65 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig5]``
-Prints ``name,us_per_call,derived`` CSV rows.
+``PYTHONPATH=src python -m benchmarks.run [--only fig5,device_bench]
+[--quick] [--json out.json]``
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes them as a JSON list (CI uploads this as an artifact).  ``--quick``
+runs benchmarks that support it in a reduced smoke configuration.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 
 MODULES = (
     "fig2_latency", "fig3_reqsize", "fig4_scalability", "fig5_state_costs",
     "fig6_gc_interference", "fig7_reset_interference", "fig8_qd",
-    "table1_insights", "device_bench", "checkpoint_bench", "kernel_bench",
+    "table1_insights", "device_bench", "fleet_bench", "checkpoint_bench",
+    "kernel_bench",
 )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="substring filter on module")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters on module names")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced smoke configuration (CI)")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this JSON file")
     args = ap.parse_args()
     import importlib
 
+    filters = [f for f in args.only.split(",") if f]
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name in MODULES:
-        if args.only and args.only not in name:
+        if filters and not any(f in name for f in filters):
             continue
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            rows = mod.run()
+            kwargs = {}
+            if args.quick and \
+                    "quick" in inspect.signature(mod.run).parameters:
+                kwargs["quick"] = True
+            rows = mod.run(**kwargs)
             for row in rows:
                 n, us, derived = row
                 print(f"{n},{us:.3f},{derived}")
+                all_rows.append({"name": n, "us_per_call": us,
+                                 "derived": derived})
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=1)
     if failures:
         raise SystemExit(1)
 

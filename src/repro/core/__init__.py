@@ -7,17 +7,23 @@ from .spec import (  # noqa: F401
     SN640, ZN540,
 )
 from .state_machine import ZoneError, ZoneManager, transition_array  # noqa: F401
-from .latency import DEFAULT_LATENCY_MODEL, LatencyModel  # noqa: F401
+from .latency import (  # noqa: F401
+    DEFAULT_LATENCY_MODEL, DEFAULT_LATENCY_PARAMS, LatencyModel,
+    LatencyParams, stack_latency_params, unstack_latency_params,
+    zn540_params,
+)
 from .engine import (  # noqa: F401
     SimResult, SteadyStateResult, ThroughputModel, Trace,
     compute_service_times, simulate, simulate_vectorized,
-    zone_sequential_completions,
+    zone_sequential_completions, zone_sequential_completions_batched,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import LatencyStats, bandwidth_bytes, iops, throughput_timeseries  # noqa: F401
 from .workload import StreamSpec, WorkloadSpec  # noqa: F401
+from .fleet import batched_sequential_completions, simulate_fleet_vectorized  # noqa: F401
 from .device import (  # noqa: F401
-    ConvDevice, PressureResult, RunResult, ZnsDevice,
-    available_backends, register_backend,
+    ConvDevice, DeviceFleet, FleetRunResult, PressureResult, RunResult,
+    ZnsDevice, available_backends, available_pressure_backends,
+    register_backend, register_pressure_backend, unregister_backend,
 )
 from . import calibration, emulator_models, workloads  # noqa: F401

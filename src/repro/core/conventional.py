@@ -22,13 +22,31 @@ from .spec import KiB, MiB, ConvDeviceSpec, OpType
 
 
 @dataclasses.dataclass(frozen=True)
-class ConvSimResult:
+class PressureResult:
+    """Write-pressure scenario output, shared by ZNS and conventional
+    devices (Fig. 6 layout: rate-limited writes + 4 KiB random reads).
+
+    Every registered pressure backend (``repro.core.device.
+    register_pressure_backend``) returns this type, so ZNS-vs-conventional
+    comparisons are one code path.
+    """
+
     t_s: np.ndarray
     write_mibs: np.ndarray
-    read_mibs: np.ndarray
     read_lat_mean_us: float
     read_lat_p95_us: float
-    write_amplification: float
+    read_mibs: Optional[np.ndarray] = None
+    write_amplification: float = 1.0
+
+    @property
+    def write_cv(self) -> float:
+        m = float(np.mean(self.write_mibs))
+        return float(np.std(self.write_mibs)) / m if m > 0 else 0.0
+
+
+#: .. deprecated:: the conventional path now returns the shared
+#:    :class:`PressureResult` directly.
+ConvSimResult = PressureResult
 
 
 class ConventionalSSD:
@@ -57,7 +75,7 @@ class ConventionalSSD:
                                 duration_s: float = 60.0,
                                 utilization: float = 0.85,
                                 read_qd: int = 32,
-                                bin_s: float = 1.0) -> ConvSimResult:
+                                bin_s: float = 1.0) -> PressureResult:
         """Reproduce Fig. 6: rate-limited random writes + random 4 KiB reads.
 
         The ZNS device sustains the target rate flat; the conventional SSD
@@ -98,10 +116,10 @@ class ConventionalSSD:
         mean = idle_mean + (pressure ** 3) * pressured_mean
         p95 = mean * (np.exp(1.645 * sigma) if pressure > 0.05
                       else C.READONLY_READ_P95_US / idle_mean)
-        return ConvSimResult(t_s=t, write_mibs=w, read_mibs=r,
-                             read_lat_mean_us=float(mean),
-                             read_lat_p95_us=float(p95),
-                             write_amplification=wa)
+        return PressureResult(t_s=t, write_mibs=w, read_mibs=r,
+                              read_lat_mean_us=float(mean),
+                              read_lat_p95_us=float(p95),
+                              write_amplification=wa)
 
 
 def zns_write_pressure_series(*, rate_mibs: float, duration_s: float = 60.0,

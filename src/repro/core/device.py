@@ -1,9 +1,11 @@
-"""Unified device-session API: ``ZnsDevice`` / ``ConvDevice`` facades.
+"""Unified device-session API: ``ZnsDevice`` / ``ConvDevice`` /
+``DeviceFleet`` facades.
 
 The paper's artifact is a calibrated ZN540 performance model; this module
 is its single entry point.  A :class:`ZnsDevice` owns the device spec, the
-calibrated :class:`LatencyModel`, the :class:`ZoneManager`, and the
-closed-form :class:`ThroughputModel`, and runs declarative
+calibrated :class:`LatencyModel` (a thin binding of the
+:class:`LatencyParams` parameter pytree), the :class:`ZoneManager`, and
+the closed-form :class:`ThroughputModel`, and runs declarative
 :class:`WorkloadSpec` workloads through pluggable simulation backends:
 
 * ``"event"``      — the per-request discrete-event engine (exact pools,
@@ -20,23 +22,31 @@ Third parties can add backends with :func:`register_backend`.
     res = dev.run(wl, backend="auto")
     res.latency_stats().p99_us, res.iops, res.bandwidth_bytes
 
-:class:`ConvDevice` exposes the conventional-SSD (SN640) baseline through
-the same facade so ZNS-vs-conventional scenarios share one interface.
+:class:`DeviceFleet` scales the same session API to N heterogeneous
+devices: specs + latency-parameter pytrees stack along a leading device
+axis and one batched run replaces the per-device Python loop
+(`repro.core.fleet`).  :class:`ConvDevice` exposes the conventional-SSD
+(SN640) baseline through the same facade, with its write-pressure path
+registered on the shared pressure-backend registry
+(:func:`register_pressure_backend`) returning the same
+:class:`PressureResult` type.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .conventional import ConventionalSSD, ConvSimResult, \
+from .conventional import ConventionalSSD, PressureResult, \
     zns_write_pressure_series
 from .engine import (
     SimResult, SteadyStateResult, ThroughputModel, Trace, simulate,
     simulate_vectorized, zone_sequential_completions,
 )
-from .latency import LatencyModel
+from .fleet import batched_sequential_completions, simulate_fleet_vectorized
+from .latency import LatencyModel, LatencyParams, stack_latency_params
 from .metrics import LatencyStats, bandwidth_bytes, iops, \
     throughput_timeseries
 from .spec import (
@@ -59,11 +69,19 @@ class RunResult:
     trace: Trace
     sim: SimResult
     backend: str
+    _stats_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
+                                           compare=False)
 
     def latency_stats(self, op: Optional[OpType] = None, *,
                       from_issue: bool = False) -> LatencyStats:
         """mean/p50/p95/p99 latency (us); in-device (start -> complete) by
-        default, submission-to-completion with ``from_issue=True``."""
+        default, submission-to-completion with ``from_issue=True``.
+        Memoized per ``(op, from_issue)`` — percentile reductions over
+        large traces are not recomputed on repeated access."""
+        key = (None if op is None else int(op), bool(from_issue))
+        cached = self._stats_cache.get(key)
+        if cached is not None:
+            return cached
         lat = self.sim.latency_from(self.trace.issue) if from_issue \
             else self.sim.in_device_latency
         if op is not None:
@@ -72,7 +90,9 @@ class RunResult:
                 raise ValueError(
                     f"no {OpType(op).name} requests in this trace; present: "
                     f"{[OpType(o).name for o in np.unique(self.trace.op)]}")
-        return LatencyStats.from_samples(lat)
+        stats = LatencyStats.from_samples(lat)
+        self._stats_cache[key] = stats
+        return stats
 
     def per_op_stats(self, *, from_issue: bool = False
                      ) -> Dict[OpType, LatencyStats]:
@@ -96,42 +116,61 @@ class RunResult:
         return len(self.trace)
 
 
-@dataclasses.dataclass(frozen=True)
-class PressureResult:
-    """Write-pressure scenario output, shared by ZNS and conventional
-    devices (Fig. 6 layout: rate-limited writes + 4 KiB random reads)."""
-
-    t_s: np.ndarray
-    write_mibs: np.ndarray
-    read_lat_mean_us: float
-    read_lat_p95_us: float
-    read_mibs: Optional[np.ndarray] = None
-    write_amplification: float = 1.0
-
-    @property
-    def write_cv(self) -> float:
-        m = float(np.mean(self.write_mibs))
-        return float(np.std(self.write_mibs)) / m if m > 0 else 0.0
-
-
 # ---------------------------------------------------------------------------
-# Backend registry
+# Backend registries (trace simulation + write-pressure scenarios)
 # ---------------------------------------------------------------------------
 BackendFn = Callable[..., SimResult]
 _BACKENDS: Dict[str, BackendFn] = {}
 
+PressureBackendFn = Callable[..., PressureResult]
+_PRESSURE_BACKENDS: Dict[str, PressureBackendFn] = {}
 
-def register_backend(name: str, fn: Optional[BackendFn] = None):
-    """Register a simulation backend ``fn(trace, spec, lat, *, seed,
-    jitter, **opts) -> SimResult``; usable as a decorator."""
-    def _register(f: BackendFn) -> BackendFn:
-        _BACKENDS[name] = f
+
+def _register_into(registry: Dict, what: str, name: str, fn, replace: bool):
+    def _register(f, stacklevel: int):
+        if not replace and name in registry and registry[name] is not f:
+            warnings.warn(
+                f"{what} {name!r} is already registered; replacing it. "
+                f"Pass replace=True to silence this warning.",
+                RuntimeWarning, stacklevel=stacklevel)
+        registry[name] = f
         return f
-    return _register(fn) if fn is not None else _register
+    if fn is not None:
+        # user -> register_*() -> _register_into -> _register -> warn
+        return _register(fn, 4)
+    # decorator form: the user's frame invokes the returned closure
+    return lambda f: _register(f, 3)
+
+
+def register_backend(name: str, fn: Optional[BackendFn] = None, *,
+                     replace: bool = False):
+    """Register a simulation backend ``fn(trace, spec, lat, *, seed,
+    jitter, **opts) -> SimResult``; usable as a decorator.  Registering an
+    existing name warns (``replace=True`` silences)."""
+    return _register_into(_BACKENDS, "backend", name, fn, replace)
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a backend; ``"auto"`` degrades gracefully (see
+    :func:`_resolve_backend`)."""
+    _BACKENDS.pop(name, None)
+
+
+def register_pressure_backend(name: str,
+                              fn: Optional[PressureBackendFn] = None, *,
+                              replace: bool = False):
+    """Register a write-pressure scenario backend ``fn(device, *,
+    rate_mibs, duration_s, bin_s, ...) -> PressureResult``."""
+    return _register_into(_PRESSURE_BACKENDS, "pressure backend", name, fn,
+                          replace)
 
 
 def available_backends() -> tuple:
     return tuple(sorted(_BACKENDS))
+
+
+def available_pressure_backends() -> tuple:
+    return tuple(sorted(_PRESSURE_BACKENDS))
 
 
 @register_backend("event")
@@ -145,9 +184,22 @@ def _vectorized_backend(trace, spec, lat, *, seed=0, jitter=True, **opts):
                                **opts)
 
 
+def _resolve_auto(n_requests: int) -> str:
+    # Tolerate a mutated registry (third parties may unregister or
+    # replace the built-ins mid-session): fall back from the preferred
+    # engine to its sibling, then to any registered backend.
+    want = "vectorized" if n_requests >= AUTO_VECTORIZED_MIN else "event"
+    alt = "event" if want == "vectorized" else "vectorized"
+    for cand in (want, alt, *available_backends()):
+        if cand in _BACKENDS:
+            return cand
+    raise KeyError("backend='auto' but no simulation backends are "
+                   "registered (registry was emptied mid-session)")
+
+
 def _resolve_backend(name: str, trace: Trace) -> str:
     if name == "auto":
-        return "vectorized" if len(trace) >= AUTO_VECTORIZED_MIN else "event"
+        return _resolve_auto(len(trace))
     if name not in _BACKENDS:
         raise KeyError(f"unknown backend {name!r}; available: "
                        f"{available_backends()} (or 'auto')")
@@ -172,6 +224,11 @@ class ZnsDevice:
         self.lat = lat or LatencyModel(self.spec)
         self.zones = ZoneManager(self.spec)
         self.throughput = throughput or ThroughputModel(self.spec, self.lat)
+
+    @property
+    def params(self) -> LatencyParams:
+        """The device's latency-parameter pytree."""
+        return self.lat.params
 
     # -- workload session ----------------------------------------------------
     def workload(self, **kw) -> WorkloadSpec:
@@ -219,16 +276,15 @@ class ZnsDevice:
             write_utilization, qd)
 
     def run_write_pressure(self, *, rate_mibs: float, duration_s: float = 60.0,
-                           bin_s: float = 1.0, seed: int = 0
-                           ) -> PressureResult:
-        """ZNS side of the Fig. 6 scenario: flat writes, stable reads."""
-        t, w = zns_write_pressure_series(rate_mibs=rate_mibs,
-                                         duration_s=duration_s, bin_s=bin_s,
-                                         seed=seed)
-        u = rate_mibs / (self.spec.peak_write_bw_bytes / MiB)
-        mean, p95 = self.read_latency_under_write_pressure_us(u)
-        return PressureResult(t_s=t, write_mibs=w, read_lat_mean_us=mean,
-                              read_lat_p95_us=p95)
+                           bin_s: float = 1.0, seed: int = 0,
+                           backend: str = "zns", **opts) -> PressureResult:
+        """Fig. 6 scenario through the shared pressure-backend registry."""
+        if backend not in _PRESSURE_BACKENDS:
+            raise KeyError(f"unknown pressure backend {backend!r}; "
+                           f"available: {available_pressure_backends()}")
+        return _PRESSURE_BACKENDS[backend](self, rate_mibs=rate_mibs,
+                                           duration_s=duration_s, bin_s=bin_s,
+                                           seed=seed, **opts)
 
     # -- kernels -------------------------------------------------------------
     def sequential_completions(self, issue, svc, segment_starts, *,
@@ -239,6 +295,23 @@ class ZnsDevice:
 
     def __repr__(self) -> str:
         return f"ZnsDevice({self.spec.name}, zones={self.spec.num_zones})"
+
+
+@register_pressure_backend("zns")
+def _zns_pressure_backend(dev: "ZnsDevice", *, rate_mibs: float,
+                          duration_s: float = 60.0, bin_s: float = 1.0,
+                          seed: int = 0) -> PressureResult:
+    """ZNS side of the Fig. 6 scenario: flat writes, stable reads."""
+    if not isinstance(dev, ZnsDevice):
+        raise TypeError(f"pressure backend 'zns' needs a ZnsDevice, got "
+                        f"{type(dev).__name__}")
+    t, w = zns_write_pressure_series(rate_mibs=rate_mibs,
+                                     duration_s=duration_s, bin_s=bin_s,
+                                     seed=seed)
+    u = rate_mibs / (dev.spec.peak_write_bw_bytes / MiB)
+    mean, p95 = dev.read_latency_under_write_pressure_us(u)
+    return PressureResult(t_s=t, write_mibs=w, read_lat_mean_us=mean,
+                          read_lat_p95_us=p95)
 
 
 # ---------------------------------------------------------------------------
@@ -257,16 +330,221 @@ class ConvDevice:
         return self.model.write_amplification(utilization)
 
     def run_write_pressure(self, *, rate_mibs: float, duration_s: float = 60.0,
-                           utilization: float = 0.85, read_qd: int = 32,
-                           bin_s: float = 1.0) -> PressureResult:
-        r: ConvSimResult = self.model.simulate_write_pressure(
-            rate_mibs=rate_mibs, duration_s=duration_s,
-            utilization=utilization, read_qd=read_qd, bin_s=bin_s)
-        return PressureResult(t_s=r.t_s, write_mibs=r.write_mibs,
-                              read_lat_mean_us=r.read_lat_mean_us,
-                              read_lat_p95_us=r.read_lat_p95_us,
-                              read_mibs=r.read_mibs,
-                              write_amplification=r.write_amplification)
+                           bin_s: float = 1.0, backend: str = "conventional",
+                           **opts) -> PressureResult:
+        if backend not in _PRESSURE_BACKENDS:
+            raise KeyError(f"unknown pressure backend {backend!r}; "
+                           f"available: {available_pressure_backends()}")
+        return _PRESSURE_BACKENDS[backend](self, rate_mibs=rate_mibs,
+                                           duration_s=duration_s, bin_s=bin_s,
+                                           **opts)
 
     def __repr__(self) -> str:
         return f"ConvDevice({self.spec.name})"
+
+
+@register_pressure_backend("conventional")
+def _conv_pressure_backend(dev: "ConvDevice", *, rate_mibs: float,
+                           duration_s: float = 60.0, utilization: float = 0.85,
+                           read_qd: int = 32, bin_s: float = 1.0,
+                           seed: int = 0) -> PressureResult:
+    """FTL-GC baseline (Fig. 6a sawtooth + Obs#11 read inflation)."""
+    if not isinstance(dev, ConvDevice):
+        raise TypeError(f"pressure backend 'conventional' needs a "
+                        f"ConvDevice, got {type(dev).__name__}")
+    return dev.model.simulate_write_pressure(
+        rate_mibs=rate_mibs, duration_s=duration_s, utilization=utilization,
+        read_qd=read_qd, bin_s=bin_s)
+
+
+# ---------------------------------------------------------------------------
+# Fleet facade: N heterogeneous devices, one batched computation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetRunResult:
+    """Per-device :class:`RunResult`\\ s of one batched fleet run."""
+
+    results: tuple
+    backend: str
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i: int) -> RunResult:
+        return self.results[i]
+
+    def __iter__(self):
+        return iter(self.results)
+
+    @property
+    def completion_us(self) -> np.ndarray:
+        """Per-device makespan (max completion time, us; 0 if idle)."""
+        return np.array([float(r.sim.complete.max()) if len(r) else 0.0
+                         for r in self.results])
+
+    @property
+    def total_iops(self) -> float:
+        return float(sum(r.iops for r in self.results if len(r)))
+
+    @property
+    def total_bandwidth_bytes(self) -> float:
+        return float(sum(r.bandwidth_bytes for r in self.results if len(r)))
+
+    def latency_stats(self, op: Optional[OpType] = None, *,
+                      from_issue: bool = False) -> LatencyStats:
+        """Fleet-pooled latency percentiles across all devices."""
+        samples = []
+        for r in self.results:
+            if not len(r):
+                continue
+            lat = r.sim.latency_from(r.trace.issue) if from_issue \
+                else r.sim.in_device_latency
+            if op is not None:
+                lat = lat[r.trace.op == int(op)]
+            samples.append(lat)
+        pool = np.concatenate(samples) if samples else np.zeros(0)
+        if len(pool) == 0:
+            raise ValueError("no matching requests in this fleet run")
+        return LatencyStats.from_samples(pool)
+
+
+class DeviceFleet:
+    """N device sessions stacked along a leading device axis.
+
+    Members may be heterogeneous in both geometry (``ZNSDeviceSpec``) and
+    latency model (``LatencyParams`` profile — e.g. the §IV emulator
+    profiles).  ``run`` shards a workload across the members and solves
+    all devices' serialized chains with batched max-plus scans
+    (`repro.core.fleet`): a 32-device sweep is one device-axis-parallel
+    computation, not 32 sequential simulations.
+
+        fleet = DeviceFleet.homogeneous(16)
+        res = fleet.run(wl, policy="replicate")       # one WorkloadSpec
+        res[3].latency_stats(OpType.READ).p99_us      # per-device result
+
+    Accepted member forms: ``ZnsDevice``, ``ZNSDeviceSpec``,
+    ``LatencyParams``, ``(spec, params)``, or an emulator-profile name.
+    """
+
+    def __init__(self, members: Sequence):
+        devices = []
+        for m in members:
+            devices.append(self._as_device(m))
+        if not devices:
+            raise ValueError("DeviceFleet needs at least one member")
+        self.devices: tuple = tuple(devices)
+
+    @staticmethod
+    def _as_device(m) -> ZnsDevice:
+        if isinstance(m, ZnsDevice):
+            return m
+        if isinstance(m, ZNSDeviceSpec):
+            return ZnsDevice(m)
+        if isinstance(m, LatencyParams):
+            spec = ZNSDeviceSpec()
+            return ZnsDevice(spec, lat=LatencyModel(spec, m))
+        if isinstance(m, str):
+            from .emulator_models import EMULATOR_PROFILES
+            spec = ZNSDeviceSpec()
+            return ZnsDevice(spec, lat=LatencyModel(spec,
+                                                    EMULATOR_PROFILES[m]))
+        if isinstance(m, tuple) and len(m) == 2:
+            spec, params = m
+            return ZnsDevice(spec, lat=LatencyModel(spec, params))
+        raise TypeError(f"cannot build a fleet member from {type(m)}")
+
+    @classmethod
+    def homogeneous(cls, n: int, spec: Optional[ZNSDeviceSpec] = None,
+                    params: Optional[LatencyParams] = None) -> "DeviceFleet":
+        spec = spec if spec is not None else ZNSDeviceSpec()
+        return cls([(spec, params) if params is not None else spec
+                    for _ in range(n)])
+
+    @classmethod
+    def from_profiles(cls, names: Sequence[str],
+                      spec: Optional[ZNSDeviceSpec] = None) -> "DeviceFleet":
+        """A fleet of emulator-profile devices (femu/nvmevirt/ours)."""
+        from .emulator_models import EMULATOR_PROFILES
+        spec = spec if spec is not None else ZNSDeviceSpec()
+        return cls([(spec, EMULATOR_PROFILES[n]) for n in names])
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __getitem__(self, i: int) -> ZnsDevice:
+        return self.devices[i]
+
+    @property
+    def specs(self) -> tuple:
+        return tuple(d.spec for d in self.devices)
+
+    def stacked_params(self) -> LatencyParams:
+        """All members' latency pytrees stacked on a leading device axis."""
+        return stack_latency_params([d.params for d in self.devices])
+
+    # -- simulation ----------------------------------------------------------
+    def _lower(self, workload, policy: str) -> List[Trace]:
+        if isinstance(workload, WorkloadSpec):
+            shards = workload.shard(self.n, policy=policy)
+        elif isinstance(workload, Trace):
+            shards = [workload] * self.n          # replicate a built trace
+        else:
+            shards = list(workload)
+            if len(shards) != self.n:
+                raise ValueError(f"got {len(shards)} workloads for "
+                                 f"{self.n} devices")
+        return [w.build(allow_empty=True) if isinstance(w, WorkloadSpec)
+                else w for w in shards]
+
+    def run(self, workload, *, backend: str = "auto", seed: int = 0,
+            jitter: bool = True, policy: str = "round_robin",
+            **backend_opts) -> FleetRunResult:
+        """Simulate one workload per device; returns :class:`FleetRunResult`.
+
+        ``workload``: a single :class:`WorkloadSpec` (lowered per device
+        via ``shard(n, policy=...)``), a single :class:`Trace`
+        (replicated), or a sequence of per-device specs/traces.  Device
+        ``i`` uses ``seed + i``, so results match a Python loop of
+        single-device ``ZnsDevice.run(..., seed=seed + i)`` calls.
+        """
+        traces = self._lower(workload, policy)
+        total = sum(len(t) for t in traces)
+        name = _resolve_auto(total) if backend == "auto" else backend
+        if name not in _BACKENDS:
+            raise KeyError(f"unknown backend {name!r}; available: "
+                           f"{available_backends()} (or 'auto')")
+        # The device-axis-batched engine implements the built-in
+        # "vectorized" backend; a third-party replacement of that name is
+        # honored by falling back to the per-device loop.
+        if name == "vectorized" and _BACKENDS[name] is _vectorized_backend:
+            sims = simulate_fleet_vectorized(
+                traces, self.specs, [d.lat for d in self.devices],
+                seeds=[seed + i for i in range(self.n)], jitter=jitter,
+                **backend_opts)
+        else:
+            sims = [
+                _BACKENDS[name](traces[i], self.devices[i].spec,
+                                self.devices[i].lat, seed=seed + i,
+                                jitter=jitter, **backend_opts)
+                for i in range(self.n)
+            ]
+        results = tuple(RunResult(trace=traces[i], sim=sims[i], backend=name)
+                        for i in range(self.n))
+        return FleetRunResult(results=results, backend=name)
+
+    def sequential_completions(self, issues, svcs, segment_starts, *,
+                               backend: str = "auto") -> List[np.ndarray]:
+        """Batched per-device max-plus scans (ragged inputs allowed):
+        the fleet counterpart of :meth:`ZnsDevice.sequential_completions`,
+        one (B, L) kernel invocation instead of B sequential scans."""
+        return batched_sequential_completions(issues, svcs, segment_starts,
+                                              backend=backend)
+
+    def __repr__(self) -> str:
+        names = {d.spec.name for d in self.devices}
+        return f"DeviceFleet(n={self.n}, specs={sorted(names)})"

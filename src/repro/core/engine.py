@@ -38,7 +38,11 @@ from typing import Optional
 import numpy as np
 
 from . import calibration as C
-from .latency import LatencyModel
+from .latency import (
+    LatencyModel, LatencyParams, close_us as _close_us, finish_us as _finish_us,
+    io_service_us as _io_service_us, open_us as _open_us,
+    reset_inflation_factors, reset_us as _reset_us, resolve_params,
+)
 from .spec import KiB, MiB, LBAFormat, OpType, Stack, ZNSDeviceSpec
 
 US = 1.0
@@ -217,47 +221,48 @@ _POOL_OF_OP = {
 }
 
 
-def compute_service_times(trace: Trace, lat: Optional[LatencyModel] = None,
-                          *, seed: int = 0, jitter: bool = True,
-                          spec: ZNSDeviceSpec = ZNSDeviceSpec()) -> np.ndarray:
+def compute_service_times(trace: Trace, lat=None, *, seed: int = 0,
+                          jitter: bool = True) -> np.ndarray:
     """Per-request service times (us) for a trace.
 
-    Shared by every simulation backend so that the event and vectorized
-    engines draw *identical* jitter for the same seed: the rng stream is
-    consumed in a fixed order (resets, finishes, then I/O).
+    ``lat`` may be a :class:`LatencyModel` or a bare :class:`LatencyParams`
+    pytree.  Shared by every simulation backend so that the event and
+    vectorized engines draw *identical* jitter for the same seed: the rng
+    stream is consumed in a fixed order (resets, finishes, then I/O).
     Includes Obs#13 reset inflation from ``trace.io_ctx``.
     """
-    lat = lat or LatencyModel(spec)
+    params = resolve_params(lat)
     rng = np.random.default_rng(seed)
     n = len(trace)
     ops = trace.op
     svc = np.zeros(n, dtype=np.float64)
     io_mask = (ops == OpType.READ) | (ops == OpType.WRITE) | (ops == OpType.APPEND)
     if io_mask.any():
-        svc[io_mask] = lat.io_service_us(
-            ops[io_mask], trace.size[io_mask], trace.stack, trace.fmt)
+        svc[io_mask] = _io_service_us(
+            params, ops[io_mask], trace.size[io_mask], trace.stack, trace.fmt)
     rmask = ops == OpType.RESET
     if rmask.any():
-        base = lat.reset_us(trace.occupancy[rmask], trace.was_finished[rmask])
-        infl = np.ones(rmask.sum())
-        for i, ctx in enumerate(trace.io_ctx[rmask]):
-            if ctx >= 0:
-                infl[i] = C.RESET_INFLATION.get(OpType(int(ctx)), 1.0)
+        base = _reset_us(params, trace.occupancy[rmask],
+                         trace.was_finished[rmask])
+        infl = reset_inflation_factors(params, trace.io_ctx[rmask])
         if jitter:
+            sig = float(params.reset_tail_sigma)
             g = rng.standard_normal(rmask.sum())
-            base = base * np.exp(C.RESET_TAIL_SIGMA * g - C.RESET_TAIL_SIGMA ** 2 / 2)
+            base = base * np.exp(sig * g - sig ** 2 / 2)
         svc[rmask] = base * infl
     fmask = ops == OpType.FINISH
     if fmask.any():
-        base = lat.finish_us(trace.occupancy[fmask])
+        base = _finish_us(params, trace.occupancy[fmask])
         if jitter:
+            sig = float(params.reset_tail_sigma)
             g = rng.standard_normal(fmask.sum())
-            base = base * np.exp(C.RESET_TAIL_SIGMA * g - C.RESET_TAIL_SIGMA ** 2 / 2)
+            base = base * np.exp(sig * g - sig ** 2 / 2)
         svc[fmask] = base
-    svc[ops == OpType.OPEN] = lat.open_us()
-    svc[ops == OpType.CLOSE] = lat.close_us()
+    svc[ops == OpType.OPEN] = _open_us(params)
+    svc[ops == OpType.CLOSE] = _close_us(params)
     if jitter and io_mask.any():
-        sig = np.where(ops[io_mask] == OpType.READ, 0.15, 0.05)
+        sig = params.io_jitter_sigma[
+            np.clip(ops[io_mask].astype(np.int64), 0, 2)]
         g = rng.standard_normal(io_mask.sum())
         svc[io_mask] = svc[io_mask] * np.exp(sig * g - sig ** 2 / 2)
     return svc
@@ -281,6 +286,9 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
     n = len(trace)
     ops = trace.op
     svc = compute_service_times(trace, lat, seed=seed, jitter=jitter)
+    # Emulator profiles may route resets through the data path (violating
+    # Obs#12 structurally, as NVMeVirt's static NAND erase does).
+    meta_on_io_path = bool(resolve_params(lat).reset_on_io_path)
 
     # Pools.
     flash_free = np.zeros(spec.read_parallelism, dtype=np.float64)
@@ -328,6 +336,8 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
         if op == OpType.WRITE and z >= 0:
             ready = max(ready, zone_ready[z])   # single in-flight write/zone
         pool = _POOL_OF_OP[op]
+        if pool == 2 and meta_on_io_path:
+            pool = 0                            # contend with I/O (not Obs#12)
         if pool in (0, 1):  # READ / WRITE / APPEND share the flash pool
             s = int(np.argmin(flash_free))
             begin = max(ready, flash_free[s])
@@ -421,6 +431,71 @@ def zone_sequential_completions(issue, svc, segment_starts, *, backend="auto"):
     return out
 
 
+def _maxplus_scan_numpy_batched(issue, svc, seg):
+    """Batched segmented max-plus scan over (B, L) arrays.
+
+    Same doubling composition as :func:`_maxplus_scan_numpy` with the
+    shifts taken along the trailing axis, so the B rows advance in lock
+    step and segments never cross rows (each column-0 element starts with
+    an empty carry by construction of ``b``).
+    """
+    issue = np.asarray(issue, dtype=np.float64)
+    svc = np.asarray(svc, dtype=np.float64)
+    seg = np.asarray(seg, dtype=bool)
+    a = np.where(seg, -np.inf, svc)
+    b = issue + svc
+    bsz, n = a.shape
+    # longest head-to-head run, treating every row start as a head
+    heads = seg.copy()
+    if n:
+        heads[:, 0] = True
+    flat = np.flatnonzero(heads.ravel())
+    if len(flat):
+        bounds = np.concatenate([flat, [bsz * n]])
+        max_run = int(np.diff(bounds).max()) if len(bounds) > 1 else bsz * n
+        max_run = min(max_run, n)
+    else:
+        max_run = n
+    k = 1
+    while k < max_run:
+        np.maximum(b[:, :-k] + a[:, k:], b[:, k:], out=b[:, k:])
+        np.add(a[:, k:], a[:, :-k], out=a[:, k:])
+        k *= 2
+    return b
+
+
+def zone_sequential_completions_batched(issue, svc, segment_starts, *,
+                                        backend="auto"):
+    """Batched :func:`zone_sequential_completions` over (B, L) arrays.
+
+    Each row is an independent set of serialized segments (rows never
+    share a carry).  Backends mirror the 1-D dispatch: ``"pallas"`` forces
+    the TPU kernel's batch grid dimension, ``"numpy"`` the batched float64
+    doubling scan, ``"python"`` the per-row sequential oracle; ``"auto"``
+    uses Pallas on TPU (``jax.vmap``-style batch grid) and numpy elsewhere.
+    """
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        try:
+            from repro.kernels import ops as kops
+            import jax.numpy as jnp
+            out = kops.zns_event_scan_batched(
+                jnp.asarray(issue, dtype=jnp.float32),
+                jnp.asarray(svc, dtype=jnp.float32),
+                jnp.asarray(segment_starts, dtype=bool))
+            return np.asarray(out, dtype=np.float64)
+        except Exception:
+            if backend == "pallas":
+                raise
+    if backend != "python":
+        return _maxplus_scan_numpy_batched(issue, svc, segment_starts)
+    issue = np.asarray(issue, dtype=np.float64)
+    svc = np.asarray(svc, dtype=np.float64)
+    seg = np.asarray(segment_starts, dtype=bool)
+    return np.stack([zone_sequential_completions(issue[i], svc[i], seg[i],
+                                                 backend="python")
+                     for i in range(issue.shape[0])])
+
+
 _ON_TPU: Optional[bool] = None
 
 
@@ -469,6 +544,74 @@ def _chain_perm(member: np.ndarray, chain_id: np.ndarray):
     return perm, heads
 
 
+#: Gauss–Seidel application order of the chain families; shared by the
+#: single-device engine below and the batched DeviceFleet engine
+#: (repro.core.fleet), which sweeps the same kinds in the same order so a
+#: batched run converges through identical iterates per device.
+FAMILY_ORDER = ("thread", "zone_write", "meta", "mgmt", "io_pool",
+                "append_pool")
+
+
+def trace_chain_families(ops, zone, thread, qd, spec: ZNSDeviceSpec, *,
+                         meta_on_io_path: bool = False):
+    """Chain families of a trace already sorted by issue time.
+
+    Returns ``[(kind, perm, heads)]`` in :data:`FAMILY_ORDER`: ``perm``
+    indexes the sorted trace grouping chain members, ``heads`` marks chain
+    starts.  Exact chains: per-thread closed-loop lag-qd interleaves (qd
+    constant per thread), per-zone write serialization, and the
+    single-server metadata engine.  Server pools (flash/append/mgmt) are
+    lag-capacity FIFO chains — only added when the workload can actually
+    saturate them, and approximate unless the saturating ops have
+    near-homogeneous service times.  ``meta_on_io_path`` routes
+    RESET/FINISH through the flash pool instead of the metadata engine
+    (emulator profiles violating Obs#12).
+    """
+    n = len(ops)
+    io = (ops == OpType.READ) | (ops == OpType.WRITE) | (ops == OpType.APPEND)
+    wr = (ops == OpType.WRITE) & (zone >= 0)
+    ap = ops == OpType.APPEND
+    meta = (ops == OpType.RESET) | (ops == OpType.FINISH)
+    mgmt = (ops == OpType.OPEN) | (ops == OpType.CLOSE)
+    if meta_on_io_path:
+        io = io | meta
+        meta = np.zeros(n, dtype=bool)
+
+    def _conc_bound(member: np.ndarray) -> int:
+        """Upper bound on concurrent in-flight ops from ``member`` rows:
+        sum over threads of the thread's queue depth."""
+        t, q = thread[member], qd[member]
+        if t.size == 0:
+            return 0
+        per_thread = np.zeros(int(t.max()) + 1, dtype=np.int64)
+        np.maximum.at(per_thread, t, q)
+        return int(per_thread.sum())
+
+    tpos = _cumcount(thread)
+    families = [("thread", np.ones(n, dtype=bool),
+                 thread * (int(qd.max()) + 1) + tpos % qd)]
+    if wr.any():
+        families.append(("zone_write", wr, zone))
+    meta_lag = max(spec.reset_parallelism, 1)
+    if meta.any() and (meta_lag == 1 or _conc_bound(meta) > meta_lag):
+        families.append(("meta", meta,
+                         _cumcount(np.where(meta, 0, -1)) % meta_lag))
+    if mgmt.any() and _conc_bound(mgmt) > 2:
+        families.append(("mgmt", mgmt, _cumcount(np.where(mgmt, 0, -1)) % 2))
+    if io.any() and _conc_bound(io) > spec.read_parallelism:
+        families.append(("io_pool", io, _cumcount(np.where(io, 0, -1))
+                         % max(spec.read_parallelism, 1)))
+    if ap.any() and _conc_bound(ap) > spec.append_parallelism:
+        families.append(("append_pool", ap, _cumcount(np.where(ap, 0, -1))
+                         % max(spec.append_parallelism, 1)))
+    out = []
+    for kind, member, chain_id in families:
+        perm, heads = _chain_perm(member, chain_id)
+        if len(perm):
+            out.append((kind, perm, heads))
+    return out
+
+
 def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
                         lat: Optional[LatencyModel] = None, *, seed: int = 0,
                         jitter: bool = True, sweeps: int = 8,
@@ -511,47 +654,12 @@ def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
     issue = trace.issue[order]
     svc = svc_orig[order]
 
-    io = (ops == OpType.READ) | (ops == OpType.WRITE) | (ops == OpType.APPEND)
-    wr = (ops == OpType.WRITE) & (zone >= 0)
-    ap = ops == OpType.APPEND
-    meta = (ops == OpType.RESET) | (ops == OpType.FINISH)
-    mgmt = (ops == OpType.OPEN) | (ops == OpType.CLOSE)
-
-    def _conc_bound(member: np.ndarray) -> int:
-        """Upper bound on concurrent in-flight ops from ``member`` rows:
-        sum over threads of the thread's queue depth."""
-        t, q = thread[member], qd[member]
-        if t.size == 0:
-            return 0
-        per_thread = np.zeros(int(t.max()) + 1, dtype=np.int64)
-        np.maximum.at(per_thread, t, q)
-        return int(per_thread.sum())
-
-    # Chain families: (member mask, chain id).  Ids only need to be unique
-    # within a family; _chain_perm groups members by them.  Exact chains:
-    # per-thread closed-loop lag-qd interleaves (qd constant per thread),
-    # per-zone write serialization, and the single-server metadata engine.
-    # Server pools (flash/append/mgmt) are lag-capacity FIFO chains — only
-    # added when the workload can actually saturate them, and approximate
-    # unless the saturating ops have near-homogeneous service times.
-    tpos = _cumcount(thread)
-    families = [(np.ones(n, dtype=bool), thread * (int(qd.max()) + 1) + tpos % qd)]
-    if wr.any():
-        families.append((wr, zone))
-    meta_lag = max(spec.reset_parallelism, 1)
-    if meta.any() and (meta_lag == 1 or _conc_bound(meta) > meta_lag):
-        families.append((meta, _cumcount(np.where(meta, 0, -1)) % meta_lag))
-    if mgmt.any() and _conc_bound(mgmt) > 2:
-        families.append((mgmt, _cumcount(np.where(mgmt, 0, -1)) % 2))
-    if io.any() and _conc_bound(io) > spec.read_parallelism:
-        families.append((io, _cumcount(np.where(io, 0, -1))
-                         % max(spec.read_parallelism, 1)))
-    if ap.any() and _conc_bound(ap) > spec.append_parallelism:
-        families.append((ap, _cumcount(np.where(ap, 0, -1))
-                         % max(spec.append_parallelism, 1)))
+    # Chain families (see trace_chain_families): exact serialized chains +
+    # lag-capacity FIFO pool chains, shared with the batched fleet engine.
     chains = [(perm, heads, svc[perm])
-              for perm, heads in (_chain_perm(m, c) for m, c in families)
-              if len(perm)]
+              for _, perm, heads in trace_chain_families(
+                  ops, zone, thread, qd, spec,
+                  meta_on_io_path=bool(resolve_params(lat).reset_on_io_path))]
 
     comp = issue + svc       # lower bound: no queueing at all
     for _ in range(max(sweeps, 1)):

@@ -1,0 +1,160 @@
+"""Batched multi-device simulation engine behind ``DeviceFleet``.
+
+A fleet sweep (N devices x one workload each) used to be a Python loop of
+single-device runs.  This module runs the vectorized backend's
+chain-decomposed max-plus scans *batched across devices*: each device's
+trace is decomposed into the same serialized chain families as
+:func:`repro.core.engine.simulate_vectorized` (per-thread closed-loop
+lag-qd chains, per-zone write chains, metadata engine, lag-capacity pool
+chains), and every Gauss–Seidel sweep solves one family for *all* devices
+with a single (B, L) segmented max-plus scan —
+:func:`repro.core.engine.zone_sequential_completions_batched`, i.e. the
+Pallas kernel's batch grid dimension on TPU and the batched numpy doubling
+scan elsewhere.
+
+Per-device results are bit-compatible with single-device runs: service
+times draw from per-device seeds in the same rng order, chain families are
+identical, the batched scan computes the same per-segment compositions
+(padding rows only append isolated segments), and sweeps apply families in
+the same :data:`repro.core.engine.FAMILY_ORDER`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .engine import (
+    FAMILY_ORDER, SimResult, Trace, compute_service_times,
+    trace_chain_families, zone_sequential_completions_batched,
+)
+from .latency import resolve_params
+from .spec import ZNSDeviceSpec
+
+
+def _pad_rows(rows: List[np.ndarray], fill: float, dtype) -> np.ndarray:
+    """Stack variable-length 1-D arrays into a padded (R, L) matrix."""
+    L = max(len(r) for r in rows)
+    out = np.full((len(rows), L), fill, dtype=dtype)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+    return out
+
+
+def simulate_fleet_vectorized(traces: Sequence[Trace],
+                              specs: Sequence[ZNSDeviceSpec],
+                              lats: Sequence,
+                              *, seeds: Optional[Sequence[int]] = None,
+                              jitter: bool = True, sweeps: int = 8,
+                              scan_backend: str = "auto") -> List[SimResult]:
+    """Vectorized simulation of N heterogeneous devices at once.
+
+    ``lats[i]`` may be a :class:`LatencyModel` or bare
+    :class:`LatencyParams`.  ``seeds[i]`` defaults to ``i`` so device ``i``
+    draws the jitter stream of a single-device run with ``seed=i``.
+    Returns one :class:`SimResult` per device, equal (to float tolerance)
+    to a Python loop of per-device ``simulate_vectorized`` calls.
+    """
+    B = len(traces)
+    if not (len(specs) == len(lats) == B):
+        raise ValueError(f"fleet shape mismatch: {B} traces, {len(specs)} "
+                         f"specs, {len(lats)} latency models")
+    seeds = list(range(B)) if seeds is None else list(seeds)
+    params = [resolve_params(l) for l in lats]
+
+    # -- per-device prep: event order, service times, chain families --------
+    dev = []
+    for b in range(B):
+        tr = traces[b]
+        n = len(tr)
+        svc_orig = compute_service_times(tr, params[b], seed=seeds[b],
+                                         jitter=jitter)
+        if n == 0:
+            dev.append(dict(empty=True, svc_orig=svc_orig))
+            continue
+        order = np.argsort(tr.issue, kind="stable")
+        inv = np.empty(n, dtype=np.int64)
+        inv[order] = np.arange(n)
+        svc = svc_orig[order]
+        fams = dict()
+        for kind, perm, heads in trace_chain_families(
+                tr.op[order], tr.zone[order].astype(np.int64),
+                tr.thread[order].astype(np.int64),
+                np.maximum(tr.qd[order].astype(np.int64), 1),
+                specs[b],
+                meta_on_io_path=bool(params[b].reset_on_io_path)):
+            fams[kind] = (perm, heads)
+        dev.append(dict(n=n, inv=inv, svc=svc, svc_orig=svc_orig,
+                        comp=tr.issue[order] + svc, fams=fams))
+
+    # -- batched per-kind matrices (constant across sweeps) -----------------
+    batched = {}
+    for kind in FAMILY_ORDER:
+        members = [(b, *dev[b]["fams"][kind]) for b in range(B)
+                   if "fams" in dev[b] and kind in dev[b]["fams"]]
+        if not members:
+            continue
+        lens = [len(perm) for _, perm, _ in members]
+        svc_mat = _pad_rows([dev[b]["svc"][perm] for b, perm, _ in members],
+                            0.0, np.float64)
+        # padded tail: isolated empty segments at t=0, masked on scatter
+        head_mat = _pad_rows([heads for _, _, heads in members], True, bool)
+        batched[kind] = (members, lens, svc_mat, head_mat)
+
+    # -- Gauss–Seidel sweeps, one batched scan per family -------------------
+    for _ in range(max(sweeps, 1)):
+        moved = False
+        for kind in FAMILY_ORDER:
+            if kind not in batched:
+                continue
+            members, lens, svc_mat, head_mat = batched[kind]
+            cur = np.zeros_like(svc_mat)
+            for r, (b, perm, _) in enumerate(members):
+                cur[r, :lens[r]] = dev[b]["comp"][perm]
+            out = zone_sequential_completions_batched(
+                cur - svc_mat, svc_mat, head_mat, backend=scan_backend)
+            for r, (b, perm, _) in enumerate(members):
+                o, c = out[r, :lens[r]], cur[r, :lens[r]]
+                # anything beyond float noise counts as progress
+                if (o > c * (1.0 + 1e-12) + 1e-9).any():
+                    moved = True
+                    dev[b]["comp"][perm] = np.maximum(c, o)
+        if not moved:
+            break
+
+    # -- unpack per-device results ------------------------------------------
+    results = []
+    for b in range(B):
+        if dev[b].get("empty"):
+            z = np.zeros(0, dtype=np.float64)
+            results.append(SimResult(start=z, complete=z.copy(),
+                                     service=dev[b]["svc_orig"]))
+            continue
+        inv = dev[b]["inv"]
+        comp = dev[b]["comp"]
+        svc = dev[b]["svc"]
+        results.append(SimResult(start=(comp - svc)[inv].copy(),
+                                 complete=comp[inv].copy(),
+                                 service=dev[b]["svc_orig"]))
+    return results
+
+
+def batched_sequential_completions(issues: Sequence[np.ndarray],
+                                   svcs: Sequence[np.ndarray],
+                                   segs: Sequence[np.ndarray], *,
+                                   backend: str = "auto") -> List[np.ndarray]:
+    """Ragged batched max-plus scan: per-device 1-D arrays in, per-device
+    completion times out, computed as one (B, L) padded scan."""
+    if not (len(issues) == len(svcs) == len(segs)):
+        raise ValueError("ragged batch length mismatch")
+    if not issues:
+        return []
+    lens = [len(i) for i in issues]
+    issue_mat = _pad_rows([np.asarray(i, dtype=np.float64) for i in issues],
+                          0.0, np.float64)
+    svc_mat = _pad_rows([np.asarray(s, dtype=np.float64) for s in svcs],
+                        0.0, np.float64)
+    seg_mat = _pad_rows([np.asarray(s, dtype=bool) for s in segs], True, bool)
+    out = zone_sequential_completions_batched(issue_mat, svc_mat, seg_mat,
+                                              backend=backend)
+    return [out[i, :lens[i]] for i in range(len(lens))]

@@ -182,10 +182,59 @@ class WorkloadSpec:
                            occupancies=tuple(float(o) for o in occupancies),
                            n_per_level=n_per_level, pause_us=pause_us, **kw)
 
+    # -- fleet lowering ------------------------------------------------------
+    def shard(self, n_devices: int, *, policy: str = "round_robin"
+              ) -> Tuple["WorkloadSpec", ...]:
+        """Lower this workload onto ``n_devices`` fleet members.
+
+        Policies:
+
+        * ``"round_robin"`` — stream ``i`` goes to device ``i %
+          n_devices`` whole (the paper's layout: one closed-loop stream
+          per device); devices beyond the stream count sit idle.
+        * ``"replicate"`` — every device runs the full workload (emulator
+          A/B sweeps: same workload, different device/latency profiles).
+        * ``"split"`` — every stream's request count is divided evenly
+          across devices (bulk sweeps where a stream is a request budget,
+          not a thread identity); remainders go to the lowest devices.
+        """
+        if n_devices <= 0:
+            raise ValueError(f"n_devices must be positive, got {n_devices}")
+        if policy == "replicate":
+            return tuple(self for _ in range(n_devices))
+        if policy == "round_robin":
+            per: list = [() for _ in range(n_devices)]
+            for i, s in enumerate(self.streams):
+                per[i % n_devices] += (s,)
+            return tuple(dataclasses.replace(self, streams=st) for st in per)
+        if policy == "split":
+            shards = []
+            for d in range(n_devices):
+                st = []
+                for s in self.streams:
+                    # occupancy-sweep streams are sized by n_per_level (one
+                    # count per level), plain streams by n — split whichever
+                    # actually determines the request count.
+                    total = s.n_per_level if s.occupancies is not None else s.n
+                    n = total // n_devices + (1 if d < total % n_devices
+                                              else 0)
+                    if n == 0:
+                        continue
+                    if s.occupancies is not None:
+                        st.append(dataclasses.replace(s, n_per_level=n))
+                    else:
+                        st.append(dataclasses.replace(s, n=n))
+                shards.append(dataclasses.replace(self, streams=tuple(st)))
+            return tuple(shards)
+        raise ValueError(f"unknown shard policy {policy!r}; expected "
+                         f"round_robin | replicate | split")
+
     # -- lowering ------------------------------------------------------------
-    def build(self) -> Trace:
+    def build(self, *, allow_empty: bool = False) -> Trace:
         """Lower to a :class:`Trace` (struct-of-arrays request list)."""
         if not self.streams:
+            if allow_empty:
+                return _empty_trace(self.stack, self.fmt)
             raise ValueError("empty WorkloadSpec: add at least one stream")
         used = {s.thread for s in self.streams if s.thread is not None}
         auto = (t for t in range(len(self.streams) + len(used))
@@ -195,15 +244,24 @@ class WorkloadSpec:
             thread = s.thread if s.thread is not None else next(auto)
             tr = s.lower(thread)
             traces.append(tr)
-        return _concat(traces, self.stack, self.fmt)
+        return _concat(traces, self.stack, self.fmt,
+                       allow_empty=allow_empty)
 
     def __len__(self) -> int:
         return len(self.streams)
 
 
-def _concat(traces, stack: Stack, fmt: LBAFormat) -> Trace:
+def _empty_trace(stack: Stack, fmt: LBAFormat) -> Trace:
+    return Trace.build(op=np.zeros(0, dtype=np.int32), zone=None, size=None,
+                       issue=np.zeros(0), stack=stack, fmt=fmt)
+
+
+def _concat(traces, stack: Stack, fmt: LBAFormat, *,
+            allow_empty: bool = False) -> Trace:
     ts = [t for t in traces if len(t)]
     if not ts:
+        if allow_empty:
+            return _empty_trace(stack, fmt)
         raise ValueError("WorkloadSpec lowered to an empty trace")
     cat = lambda f: np.concatenate([getattr(t, f) for t in ts])
     return Trace(op=cat("op"), zone=cat("zone"), size=cat("size"),

@@ -20,6 +20,7 @@ from .linear_recurrence import linear_recurrence as _lr
 from .rmsnorm import rmsnorm as _rms
 from .ssd_chunk_scan import ssd_chunk_scan as _ssd
 from .zns_event_scan import zns_event_scan as _zns
+from .zns_event_scan import zns_event_scan_batched as _zns_batched
 
 
 def _default_impl() -> str:
@@ -74,3 +75,11 @@ def zns_event_scan(issue, svc, seg_start, *, impl: str | None = None):
     if impl == "xla":
         return ref.zns_event_scan_ref(issue, svc, seg_start)
     return _zns(issue, svc, seg_start, interpret=(impl == "interpret"))
+
+
+def zns_event_scan_batched(issue, svc, seg_start, *, impl: str | None = None):
+    """(B, N) device-batched max-plus scan (the DeviceFleet hot loop)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.zns_event_scan_batched_ref(issue, svc, seg_start)
+    return _zns_batched(issue, svc, seg_start, interpret=(impl == "interpret"))

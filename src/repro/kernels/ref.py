@@ -196,6 +196,11 @@ def zns_event_scan_ref(issue, svc, seg_start):
     return out
 
 
+def zns_event_scan_batched_ref(issue, svc, seg_start):
+    """Batched oracle: vmap of the 1-D scan over a leading device axis."""
+    return jax.vmap(zns_event_scan_ref)(issue, svc, seg_start)
+
+
 # ---------------------------------------------------------------------------
 # shared helper: affine scans as (a, b) pair composition
 # ---------------------------------------------------------------------------

@@ -28,26 +28,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(issue_ref, svc_ref, head_ref, out_ref, carry_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        carry_ref[0] = jnp.float32(NEG_INF)
-
-    s = issue_ref[...].astype(jnp.float32)
-    v = svc_ref[...].astype(jnp.float32)
-    head = head_ref[...]
+def _block_scan(s, v, head, carry_ref):
+    """Intra-block max-plus ladder + inter-block carry (shared by the 1-D
+    and batched kernels; the carry lives in SMEM and is updated in place).
+    """
     n = s.shape[0]
-
     # Elementwise affine maps in the max-plus semiring.
     a = jnp.where(head, jnp.float32(NEG_INF), v)   # segment heads drop carry
     b = s + v
 
     # Hillis–Steele inclusive scan over the block (log2(n) ladder steps).
-    # shift-by-k via iota select: positions < k keep identity (a=-inf? no —
-    # identity of composition is (a=0? ) ...) — composition identity is
-    # (a=0, b=-inf): f(c) = max(c + 0, -inf) = c.
+    # shift-by-k via iota select: positions < k keep the composition
+    # identity (a=0, b=-inf): f(c) = max(c + 0, -inf) = c.
     idx = jax.lax.iota(jnp.int32, n)
     k = 1
     while k < n:
@@ -59,8 +51,67 @@ def _kernel(issue_ref, svc_ref, head_ref, out_ref, carry_ref):
 
     # Apply the inter-block carry: c_i = max(carry + A_i, B_i).
     c = jnp.maximum(carry_ref[0] + a, b)
-    out_ref[...] = c
     carry_ref[0] = c[n - 1]
+    return c
+
+
+def _kernel(issue_ref, svc_ref, head_ref, out_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = jnp.float32(NEG_INF)
+
+    out_ref[...] = _block_scan(issue_ref[...].astype(jnp.float32),
+                               svc_ref[...].astype(jnp.float32),
+                               head_ref[...], carry_ref)
+
+
+def _kernel_batched(issue_ref, svc_ref, head_ref, out_ref, carry_ref):
+    # Grid is (batch, blocks); the block axis is minor (sequential on TPU),
+    # so the SMEM carry threads through one device row at a time and is
+    # re-initialized at each row's first block.
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = jnp.float32(NEG_INF)
+
+    out_ref[0, :] = _block_scan(issue_ref[0, :].astype(jnp.float32),
+                                svc_ref[0, :].astype(jnp.float32),
+                                head_ref[0, :], carry_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def zns_event_scan_batched(issue, svc, seg_start, *, block: int = 1024,
+                           interpret: bool = True):
+    """Batched completion times over a device axis: (B, N) inputs.
+
+    The device-fleet counterpart of :func:`zns_event_scan` — one kernel
+    launch scans every device's serialized chains by adding a leading
+    batch grid dimension (rows are independent: each row's carry starts
+    fresh, exactly like ``jax.vmap`` of the 1-D scan).
+    """
+    bsz, n = issue.shape
+    npad = max((n + block - 1) // block * block, block)
+    pad = npad - n
+    issue_p = jnp.pad(issue.astype(jnp.float32), ((0, 0), (0, pad)))
+    svc_p = jnp.pad(svc.astype(jnp.float32), ((0, 0), (0, pad)))
+    head_p = jnp.pad(seg_start.astype(bool), ((0, 0), (0, pad)),
+                     constant_values=True)   # padded tail = its own segment
+
+    grid = (bsz, npad // block)
+    spec = pl.BlockSpec((1, block), lambda b, i: (b, i))
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, npad), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(issue_p, svc_p, head_p)
+    return out[:, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -31,7 +31,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import KiB, MiB, OpType, Stack, ZNSDeviceSpec, ZnsDevice
+from repro.core import DeviceFleet, KiB, MiB, OpType, Stack, ZNSDeviceSpec, \
+    ZnsDevice
 from repro.core.state_machine import ZoneError
 
 
@@ -114,14 +115,16 @@ class ZnsHostDevice:
         raise ZoneError("device full: no writable zones (run gc())")
 
     # -- timing (R2/R4) ---------------------------------------------------------
-    def simulate_payload_write(self, nbytes: int) -> tuple[float, int]:
-        """Modeled seconds to append ``nbytes`` via the per-zone max-plus
-        scan (Pallas kernel path) at QD=append_qd.  Returns (s, n_appends)."""
+    def payload_scan_args(self, nbytes: int
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(issue, svc, seg) of the payload-append chain for ``nbytes``.
+
+        Appends run at QD=append_qd against the device-level throughput
+        cap (R4): appends of >=32 KiB run at the bandwidth limit; the
+        max-plus scan over these arrays captures per-request serialization
+        at the saturated service rate.
+        """
         n_appends = max(int(np.ceil(nbytes / self.stripe)), 1)
-        svc = float(self.lat.io_service_us(OpType.APPEND, self.stripe))
-        # Device-level throughput cap (R4): appends of >=32 KiB run at the
-        # bandwidth limit; the scan below captures per-request serialization
-        # at the saturated service rate.
         eff_rate = self.tm.steady_state(
             OpType.APPEND, self.stripe, qd=self.append_qd,
             zones=self.concurrent_zones).bandwidth_bytes
@@ -129,9 +132,18 @@ class ZnsHostDevice:
         issue = np.arange(n_appends, dtype=np.float64) * (svc_eff / self.append_qd)
         seg = np.zeros(n_appends, dtype=bool)
         seg[0] = True
-        done = self.device.sequential_completions(
-            issue, np.full(n_appends, svc_eff / self.append_qd), seg)
-        return float(done[-1]) / 1e6, n_appends
+        return issue, np.full(n_appends, svc_eff / self.append_qd), seg
+
+    def simulate_payload_write(self, nbytes: int) -> tuple[float, int]:
+        """Modeled seconds to append ``nbytes`` via the per-zone max-plus
+        scan (Pallas kernel path) at QD=append_qd.  Returns (s, n_appends).
+
+        Single-device shim; the checkpoint store batches all hosts'
+        chains through one :class:`DeviceFleet` call instead.
+        """
+        issue, svc, seg = self.payload_scan_args(nbytes)
+        done = self.device.sequential_completions(issue, svc, seg)
+        return float(done[-1]) / 1e6, len(issue)
 
     def apply_writes(self, entries: list[WritePlanEntry]) -> None:
         for e in entries:
@@ -189,6 +201,9 @@ class ZonedCheckpointStore:
                           concurrent_zones=concurrent_zones)
             for h in range(n_hosts)
         ]
+        # All hosts' payload-write simulations run as one batched fleet
+        # computation (device-axis max-plus scans) instead of a host loop.
+        self.fleet = DeviceFleet([d.device for d in self.devices])
         os.makedirs(root, exist_ok=True)
 
     # -- sharding ---------------------------------------------------------------
@@ -232,7 +247,9 @@ class ZonedCheckpointStore:
         reports = []
         manifest = {"step": step, "hosts": {}, "meta": extra_meta or {},
                     "nleaves": self._nleaves}
-        host_times = []
+        # Persist shards + plan zone placement per host (real filesystem +
+        # zone-state work), collecting each host's payload-append chain.
+        host_bytes, scan_issue, scan_svc, scan_seg = [], [], [], []
         for h, shard in enumerate(shards):
             path = os.path.join(ckpt_dir + ".tmp", f"host_{h:05d}.npz")
             np.savez(path, **shard)
@@ -240,19 +257,28 @@ class ZonedCheckpointStore:
             dev = self.devices[h]
             entries = dev.plan(nbytes)
             dev.apply_writes(entries)
-            sim_s, n_app = dev.simulate_payload_write(nbytes)
-            man_us = dev.manifest_write_us()
-            digest = _digest(path)
+            issue, svc, seg = dev.payload_scan_args(nbytes)
+            scan_issue.append(issue)
+            scan_svc.append(svc)
+            scan_seg.append(seg)
+            host_bytes.append(nbytes)
             manifest["hosts"][str(h)] = {
                 "file": os.path.basename(path), "bytes": nbytes,
-                "sha256": digest,
+                "sha256": _digest(path),
                 "zones": [dataclasses.asdict(e) for e in entries],
             }
-            host_times.append(sim_s)
+        # One batched fleet computation models every host's device time
+        # (device-axis-parallel max-plus scans; R2/R4 timing).
+        done = self.fleet.sequential_completions(scan_issue, scan_svc,
+                                                 scan_seg)
+        host_times = [float(d[-1]) / 1e6 for d in done]
+        for h, (nbytes, sim_s) in enumerate(zip(host_bytes, host_times)):
+            dev = self.devices[h]
             reports.append(HostWriteReport(
-                host=h, nbytes=nbytes, n_appends=n_app,
-                zones_used=[e.zone for e in entries], sim_seconds=sim_s,
-                manifest_us=man_us,
+                host=h, nbytes=nbytes, n_appends=len(scan_issue[h]),
+                zones_used=[e["zone"] for e in
+                            manifest["hosts"][str(h)]["zones"]],
+                sim_seconds=sim_s, manifest_us=dev.manifest_write_us(),
                 bandwidth_mibs=nbytes / max(sim_s, 1e-9) / MiB))
         # Straggler mitigation: hosts slower than factor x median get a
         # backup write on the next host (redundancy), bounding the tail.

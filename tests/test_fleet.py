@@ -1,0 +1,390 @@
+"""DeviceFleet batched simulation: equivalence with per-device loops
+(hypothesis property + 16-device acceptance case), workload sharding,
+parameter-pytree profiles, simulated §IV fidelity, batched scans, and the
+backend-registry hardening + RunResult memoization satellites."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceFleet, KiB, LatencyModel, LatencyParams,
+    OpType, RunResult, WorkloadSpec, ZnsDevice, ZNSDeviceSpec,
+    available_backends, register_backend, stack_latency_params,
+    unregister_backend, unstack_latency_params,
+    zone_sequential_completions, zone_sequential_completions_batched,
+)
+from repro.core.device import _resolve_backend
+from repro.core.emulator_models import (
+    ALL_MODELS, EMULATOR_PROFILES, FIDELITY_MATRIX, simulated_fidelity,
+)
+
+SPEC_VARIANTS = (
+    ZNSDeviceSpec(),
+    ZNSDeviceSpec(append_parallelism=4),
+    ZNSDeviceSpec(num_zones=512, max_open_zones=12),
+)
+PROFILE_NAMES = ("ours", "nvmevirt", "femu")
+
+
+def _members(n):
+    return [(SPEC_VARIANTS[i % len(SPEC_VARIANTS)],
+             EMULATOR_PROFILES[PROFILE_NAMES[i % len(PROFILE_NAMES)]])
+            for i in range(n)]
+
+
+def _mixed(scale, *, with_mgmt=True):
+    wl = (WorkloadSpec()
+          .writes(n=6 * scale, qd=4, zone=0)
+          .reads(n=6 * scale, qd=8, zone=100, nzones=50)
+          .appends(n=4 * scale, qd=2, zone=200))
+    if with_mgmt:
+        wl = (wl.resets(n=max(scale // 2, 1), occupancy=1.0, nzones=64,
+                        io_ctx=OpType.READ)
+              .finishes(n=max(scale // 10, 1), occupancy=0.3)
+              .opens(n=2).closes(n=2))
+    return wl
+
+
+def _assert_fleet_equals_loop(members, workloads, backend, *, seed=0,
+                              jitter=False):
+    fleet = DeviceFleet(members)
+    fres = fleet.run(workloads, backend=backend, seed=seed, jitter=jitter)
+    assert fres.backend == backend
+    for i, (spec, params) in enumerate(members):
+        dev = ZnsDevice(spec, lat=LatencyModel(spec, params))
+        wl = workloads[i] if isinstance(workloads, (list, tuple)) \
+            else workloads
+        ref = dev.run(wl, backend=backend, seed=seed + i, jitter=jitter)
+        np.testing.assert_array_equal(fres[i].sim.service, ref.sim.service)
+        np.testing.assert_allclose(fres[i].sim.complete, ref.sim.complete,
+                                   rtol=1e-9, atol=1e-6)
+        np.testing.assert_allclose(fres[i].sim.start, ref.sim.start,
+                                   rtol=1e-9, atol=1e-6)
+    return fres
+
+
+# -- acceptance: 16 heterogeneous devices, all op types, both backends ---------
+@pytest.mark.parametrize("backend", ["event", "vectorized"])
+def test_fleet_16_heterogeneous_matches_loop(backend):
+    members = _members(16)
+    wls = [_mixed(20 + 3 * i) for i in range(16)]
+    _assert_fleet_equals_loop(members, wls, backend, seed=3, jitter=True)
+
+
+def test_fleet_obs12_obs13_couplings_preserved():
+    # Obs#13: inflated resets on the 'ours' member; Obs#12: the same I/O
+    # stream is undisturbed by concurrent resets in a fleet run.
+    members = [(ZNSDeviceSpec(), EMULATOR_PROFILES["ours"])] * 2
+    io = WorkloadSpec().writes(n=800, qd=4, zone=100)
+    both = (WorkloadSpec()
+            .resets(n=60, occupancy=1.0, nzones=50, io_ctx=OpType.WRITE,
+                    thread=9)
+            .writes(n=800, qd=4, zone=100))
+    fleet = DeviceFleet(members)
+    quiet, loud = fleet.run([io, both], backend="vectorized", jitter=False)
+    wmask = loud.trace.op == int(OpType.WRITE)
+    np.testing.assert_allclose(loud.sim.complete[wmask], quiet.sim.complete,
+                               rtol=1e-12)   # Obs#12 (seeds differ: jitter off)
+    iso = fleet.run([WorkloadSpec().resets(n=60, occupancy=1.0, nzones=50)] * 2,
+                    backend="vectorized", jitter=False)[0]
+    ratio = (loud.latency_stats(OpType.RESET).mean_us
+             / iso.latency_stats(OpType.RESET).mean_us)
+    assert ratio == pytest.approx(1.7842, rel=1e-3)   # Obs#13 anchor
+
+
+# -- hypothesis property: fleet == loop over random heterogeneous fleets -------
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 5), st.integers(0, 1000), st.booleans(),
+           st.sampled_from(["event", "vectorized"]))
+    @settings(max_examples=12, deadline=None)
+    def test_fleet_equals_loop_property(n_devices, seed, jitter, backend):
+        rng = np.random.default_rng(seed)
+        members = [(SPEC_VARIANTS[rng.integers(len(SPEC_VARIANTS))],
+                    EMULATOR_PROFILES[PROFILE_NAMES[rng.integers(3)]])
+                   for _ in range(n_devices)]
+        wls = [_mixed(int(rng.integers(2, 12)),
+                      with_mgmt=bool(rng.integers(2)))
+               for _ in range(n_devices)]
+        _assert_fleet_equals_loop(members, wls, backend, seed=seed % 97,
+                                  jitter=jitter)
+
+
+# -- workload sharding ---------------------------------------------------------
+def test_shard_round_robin_assigns_whole_streams():
+    wl = _mixed(10)
+    shards = wl.shard(3, policy="round_robin")
+    assert len(shards) == 3
+    assert sum(len(s) for s in shards) == len(wl)
+    ops = [s.streams[0].op for s in shards]
+    assert ops == [OpType.WRITE, OpType.READ, OpType.APPEND]
+
+
+def test_shard_replicate_and_split():
+    wl = WorkloadSpec().writes(n=103, qd=2)
+    for s in wl.shard(4, policy="replicate"):
+        assert s.streams[0].n == 103
+    split = wl.shard(4, policy="split")
+    assert [s.streams[0].n for s in split] == [26, 26, 26, 25]
+
+
+def test_shard_split_preserves_sweep_request_counts():
+    wl = WorkloadSpec().reset_sweep((0.25, 1.0), n_per_level=10, pause_us=0)
+    total = len(wl.build())
+    shards = wl.shard(4, policy="split")
+    assert sum(len(s.build(allow_empty=True)) for s in shards) == total
+    assert [s.streams[0].n_per_level for s in shards] == [3, 3, 2, 2]
+
+
+def test_shard_idle_devices_get_empty_specs():
+    wl = WorkloadSpec().writes(n=50)
+    shards = wl.shard(3, policy="round_robin")
+    assert [len(s) for s in shards] == [1, 0, 0]
+    fres = DeviceFleet.homogeneous(3).run(wl, backend="event")
+    assert [len(r) for r in fres] == [50, 0, 0]
+    assert fres.completion_us[1] == 0.0
+
+
+def test_shard_bad_policy_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        WorkloadSpec().writes(n=4).shard(2, policy="zigzag")
+    with pytest.raises(ValueError, match="positive"):
+        WorkloadSpec().writes(n=4).shard(0)
+
+
+# -- parameter pytrees ---------------------------------------------------------
+def test_stack_unstack_latency_params_roundtrip():
+    ps = [EMULATOR_PROFILES[n] for n in PROFILE_NAMES]
+    stacked = stack_latency_params(ps)
+    assert stacked.io_svc_us.shape == (3,) + ps[0].io_svc_us.shape
+    for i, p in enumerate(ps):
+        back = unstack_latency_params(stacked, i)
+        for name, val in p.fields():
+            np.testing.assert_array_equal(getattr(back, name), val)
+
+
+def test_fleet_stacked_params_leading_axis():
+    fleet = DeviceFleet.from_profiles(PROFILE_NAMES)
+    stacked = fleet.stacked_params()
+    assert stacked.reset_us_table.shape[0] == 3
+
+
+def test_latency_model_wraps_params():
+    lm = LatencyModel()
+    assert isinstance(lm.params, LatencyParams)
+    assert float(lm.io_service_us(OpType.WRITE, 4 * KiB)) == \
+        pytest.approx(11.36, abs=0.01)
+    assert ZnsDevice().params is ZnsDevice().lat.params
+
+
+def test_emulator_shims_delegate_to_profiles():
+    from repro.core.latency import io_service_us
+    for name, model in ALL_MODELS.items():
+        p = EMULATOR_PROFILES[name]
+        np.testing.assert_allclose(
+            np.asarray(model.io_service_us(OpType.WRITE, 8 * KiB)),
+            np.asarray(io_service_us(p, OpType.WRITE, 8 * KiB)))
+
+
+# -- §IV fidelity from simulation ----------------------------------------------
+@pytest.mark.parametrize("name", PROFILE_NAMES)
+def test_fidelity_matrix_derived_from_simulation(name):
+    assert simulated_fidelity(name) == FIDELITY_MATRIX[name]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", PROFILE_NAMES)
+def test_fidelity_matrix_derived_on_vectorized_backend(name):
+    assert simulated_fidelity(name, backend="vectorized") == \
+        FIDELITY_MATRIX[name]
+
+
+def test_profiles_run_through_batched_path():
+    fleet = DeviceFleet.from_profiles(PROFILE_NAMES)
+    res = fleet.run(_mixed(10), backend="vectorized", policy="replicate",
+                    jitter=False)
+    ours, nvmevirt, femu = res                # PROFILE_NAMES order
+    # FEMU is DRAM-fast; NVMeVirt models reads correctly but resets flat.
+    assert femu.latency_stats(OpType.READ).mean_us < 3.0
+    assert nvmevirt.latency_stats(OpType.READ).mean_us == pytest.approx(
+        ours.latency_stats(OpType.READ).mean_us, rel=0.05)
+    assert nvmevirt.latency_stats(OpType.RESET).p95_us == pytest.approx(
+        3500.0, rel=1e-6)
+    assert ours.latency_stats(OpType.RESET).mean_us > 10_000
+
+
+# -- batched scans -------------------------------------------------------------
+def test_batched_scan_matches_python_oracle():
+    rng = np.random.default_rng(1)
+    B, n = 7, 513
+    issue = np.sort(rng.uniform(0, 1e5, (B, n)), axis=1)
+    svc = rng.uniform(1, 300, (B, n))
+    seg = rng.uniform(size=(B, n)) < 0.03
+    seg[:, 0] = True
+    out = zone_sequential_completions_batched(issue, svc, seg,
+                                              backend="numpy")
+    want = zone_sequential_completions_batched(issue, svc, seg,
+                                               backend="python")
+    np.testing.assert_allclose(out, want, rtol=1e-12)
+
+
+def test_batched_scan_rows_match_1d_scan():
+    rng = np.random.default_rng(2)
+    B, n = 4, 1000
+    issue = np.sort(rng.uniform(0, 1e4, (B, n)), axis=1)
+    svc = rng.uniform(0.5, 40, (B, n))
+    seg = rng.uniform(size=(B, n)) < 0.05
+    out = zone_sequential_completions_batched(issue, svc, seg,
+                                              backend="numpy")
+    for b in range(B):
+        np.testing.assert_allclose(
+            out[b], zone_sequential_completions(issue[b], svc[b], seg[b],
+                                                backend="numpy"), rtol=1e-12)
+
+
+def test_fleet_sequential_completions_ragged():
+    fleet = DeviceFleet.homogeneous(3)
+    issues = [np.arange(n, dtype=float) * 10 for n in (5, 9, 2)]
+    svcs = [np.full(len(i), 3.0) for i in issues]
+    segs = [np.r_[True, np.zeros(len(i) - 1, bool)] for i in issues]
+    outs = fleet.sequential_completions(issues, svcs, segs)
+    for i, o in enumerate(outs):
+        assert len(o) == len(issues[i])
+        np.testing.assert_allclose(
+            o, zone_sequential_completions(issues[i], svcs[i], segs[i],
+                                           backend="numpy"))
+
+
+# -- satellite: backend registry hardening -------------------------------------
+def test_register_backend_collision_warns():
+    def fake(trace, spec, lat, *, seed=0, jitter=True, **_):
+        raise AssertionError("never called")
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            register_backend("collide-test", fake)
+            assert not w
+            register_backend("collide-test", fake)       # same fn: silent
+            assert not w
+            register_backend("collide-test", lambda *a, **k: None)
+            assert len(w) == 1 and "already registered" in str(w[0].message)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            register_backend("collide-test", fake, replace=True)
+            assert not w
+    finally:
+        unregister_backend("collide-test")
+    assert "collide-test" not in available_backends()
+
+
+def test_resolve_auto_tolerates_mutated_registry():
+    from repro.core.device import _BACKENDS
+    tr = WorkloadSpec().writes(n=4).build()
+    big = WorkloadSpec().writes(n=9000).build()
+    saved = dict(_BACKENDS)
+    try:
+        del _BACKENDS["vectorized"]
+        assert _resolve_backend("auto", big) == "event"
+        _BACKENDS.clear()
+        _BACKENDS["thirdparty"] = saved["event"]
+        assert _resolve_backend("auto", tr) == "thirdparty"
+        _BACKENDS.clear()
+        with pytest.raises(KeyError, match="no simulation backends"):
+            _resolve_backend("auto", tr)
+    finally:
+        _BACKENDS.clear()
+        _BACKENDS.update(saved)
+    assert ZnsDevice().run(tr, backend="auto").backend == "event"
+
+
+# -- satellite: RunResult stats memoization ------------------------------------
+def test_latency_stats_memoized_per_key():
+    res = ZnsDevice().run(WorkloadSpec().writes(n=200, qd=2).reads(n=100),
+                          jitter=False)
+    a = res.latency_stats(OpType.WRITE)
+    assert res.latency_stats(OpType.WRITE) is a          # cached object
+    assert res.latency_stats(OpType.WRITE, from_issue=True) is not a
+    assert res.latency_stats() is res.latency_stats()
+    assert res.per_op_stats()[OpType.WRITE] is a         # shares the cache
+    with pytest.raises(ValueError, match="no APPEND"):
+        res.latency_stats(OpType.APPEND)
+
+
+def test_run_result_cache_excluded_from_repr():
+    res = ZnsDevice().run(WorkloadSpec().writes(n=8), jitter=False)
+    res.latency_stats()
+    assert isinstance(res, RunResult)
+    assert "_stats_cache" not in repr(res)
+
+
+# -- review regressions --------------------------------------------------------
+def test_latency_params_eq_and_hash():
+    from repro.core import zn540_params
+    a, b = zn540_params(), zn540_params()
+    assert a == b and hash(a) == hash(b)
+    assert a != EMULATOR_PROFILES["femu"]
+    assert LatencyModel() == LatencyModel()
+    assert {LatencyModel(): 1}[LatencyModel()] == 1   # dict-keyable
+
+
+def test_pressure_backend_device_type_checked():
+    from repro.core import ConvDevice
+    with pytest.raises(TypeError, match="needs a ConvDevice"):
+        ZnsDevice().run_write_pressure(rate_mibs=1.0, backend="conventional")
+    with pytest.raises(TypeError, match="needs a ZnsDevice"):
+        ConvDevice().run_write_pressure(rate_mibs=1.0, backend="zns")
+
+
+def test_fleet_honors_replaced_vectorized_backend():
+    from repro.core import SimResult
+    calls = []
+
+    def fake(trace, spec, lat, *, seed=0, jitter=True, **_):
+        calls.append(seed)
+        z = np.zeros(len(trace))
+        return SimResult(start=z, complete=z.copy(), service=z.copy())
+
+    from repro.core.device import _BACKENDS
+    saved = _BACKENDS["vectorized"]
+    try:
+        register_backend("vectorized", fake, replace=True)
+        fleet = DeviceFleet.homogeneous(3)
+        res = fleet.run(WorkloadSpec().writes(n=30), backend="vectorized",
+                        policy="replicate")
+        assert calls == [0, 1, 2]          # per-device loop of the override
+        assert res.backend == "vectorized"
+    finally:
+        register_backend("vectorized", saved, replace=True)
+
+
+# -- pressure backends ---------------------------------------------------------
+def test_pressure_backends_share_result_type():
+    from repro.core import ConvDevice, PressureResult
+    from repro.core.device import available_pressure_backends
+    assert {"zns", "conventional"} <= set(available_pressure_backends())
+    zns = ZnsDevice().run_write_pressure(rate_mibs=800.0, duration_s=5)
+    conv = ConvDevice().run_write_pressure(rate_mibs=800.0, duration_s=5)
+    assert isinstance(zns, PressureResult)
+    assert isinstance(conv, PressureResult)
+    assert conv.write_amplification >= 1.0
+    with pytest.raises(KeyError, match="pressure backend"):
+        ZnsDevice().run_write_pressure(rate_mibs=1.0, backend="nope")
+
+
+# -- fleet aggregates ----------------------------------------------------------
+def test_fleet_run_result_aggregates():
+    fleet = DeviceFleet.homogeneous(4)
+    res = fleet.run(WorkloadSpec().writes(n=500, qd=4),
+                    policy="replicate", backend="event", jitter=False)
+    assert len(res) == 4
+    assert res.total_iops == pytest.approx(4 * res[0].iops, rel=1e-6)
+    pooled = res.latency_stats(OpType.WRITE)
+    assert pooled.n == 4 * 500
+    assert (res.completion_us > 0).all()
