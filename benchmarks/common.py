@@ -27,3 +27,26 @@ def fmt_rows(rows) -> str:
     for name, us, derived in rows:
         lines.append(f"{name},{us:.3f},{derived}")
     return "\n".join(lines)
+
+
+def rows_from_experiments(prefix: str, keys, *, backend: str = "vectorized"):
+    """Rows for a figure module that is a thin shim over observation
+    registry entries (`repro.experiments`): one batched fleet run of the
+    named experiments, then one row per extracted metric and per check.
+
+    The timing row ``<prefix>/experiments_run`` carries the wall time of
+    the whole batched sweep.
+    """
+    from repro.experiments import ExperimentRunner
+
+    runner = ExperimentRunner(keys, backend=backend)
+    results, us = timed(runner.run, repeats=1)
+    rows = [(f"{prefix}/experiments_run", us,
+             f"experiments={len(results)};backend={backend}")]
+    for r in results:
+        for k, v in sorted(r.metrics.items()):
+            rows.append((f"{prefix}/{r.name}/{k}", 0.0, f"{v:.4g}"))
+        for c in r.checks:
+            rows.append((f"{prefix}/{r.name}/check/{c.name}", 0.0,
+                         f"ok={bool(c.ok)}"))
+    return rows

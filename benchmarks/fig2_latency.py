@@ -1,37 +1,15 @@
 """Fig. 2: append/write I/O latency across storage stacks & LBA formats.
 
-Paper anchors: write 11.36 us (SPDK/4KiB), 12.62 (kernel none),
+Thin shim over the observation registry (`repro.experiments`): Obs#1
+(LBA format), Obs#2 (storage stack), and Obs#4 (append vs write) carry
+the Fig. 2 anchors — write 11.36 us (SPDK/4KiB), 12.62 (kernel none),
 14.47 (mq-deadline); append 14.02 us (SPDK/8KiB); 512B format up to 2x
-slower (Obs#1/#2/#4).
+slower.  Figures, CI checks, and docs all derive from the same entries.
 """
 from __future__ import annotations
 
-from repro.core import KiB, LBAFormat, OpType, Stack, ZnsDevice
-
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
-    dev = ZnsDevice()
-    rows = []
-    # Fig 2a: 512B vs 4KiB formats, request size = block size
-    for stack in (Stack.SPDK, Stack.KERNEL_NONE, Stack.KERNEL_MQ_DEADLINE):
-        for fmt, size in ((LBAFormat.LBA_512, 512), (LBAFormat.LBA_4K, 4 * KiB)):
-            for op in (OpType.WRITE, OpType.APPEND):
-                (lat,), us = timed(
-                    lambda: (float(dev.io_latency_us(op, size, stack=stack,
-                                                     fmt=fmt)),))
-                rows.append((
-                    f"fig2a/{op.name.lower()}/{stack.name.lower()}/{fmt.name}",
-                    us, f"latency_us={lat:.2f}"))
-    # Fig 2b: best request sizes (write 4KiB / append 8KiB) per format
-    for fmt in (LBAFormat.LBA_512, LBAFormat.LBA_4K):
-        w = float(dev.io_latency_us(OpType.WRITE, 4 * KiB, fmt=fmt))
-        a = float(dev.io_latency_us(OpType.APPEND, 8 * KiB, fmt=fmt))
-        rows.append((f"fig2b/write4k/{fmt.name}", 0.0, f"latency_us={w:.2f}"))
-        rows.append((f"fig2b/append8k/{fmt.name}", 0.0, f"latency_us={a:.2f}"))
-        if fmt == LBAFormat.LBA_4K:
-            diff = (a - w) / w * 100
-            rows.append(("fig2b/append_vs_write_gap", 0.0,
-                         f"pct={diff:.2f} (paper: 23.42)"))
-    return rows
+    return rows_from_experiments("fig2", ["obs1", "obs2", "obs4"])

@@ -1,24 +1,13 @@
 """Fig. 3: QD=1 throughput (KIOPS) vs request size for write/append.
 
-Paper anchors: write 85 KIOPS @ 4/8 KiB; append 66 -> 69 KIOPS @ 4 -> 8
-KiB; >=32 KiB requests approach the ~1.2 GiB/s device limit (Obs#3).
+Thin shim over the Obs#3 registry entry (`repro.experiments`): write 85
+KIOPS @ 4/8 KiB; append 66 -> 69 KIOPS @ 4 -> 8 KiB; >=32 KiB requests
+approach the ~1.2 GiB/s device limit.
 """
 from __future__ import annotations
 
-from repro.core import KiB, MiB, OpType, ZnsDevice
-
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
-    dev = ZnsDevice()
-    rows = []
-    for op in (OpType.WRITE, OpType.APPEND):
-        for size_k in (4, 8, 16, 32, 64, 128):
-            (res,), us = timed(
-                lambda op=op, size_k=size_k:
-                (dev.steady_state(op, size_k * KiB),))
-            rows.append((
-                f"fig3/{op.name.lower()}/{size_k}KiB", us,
-                f"kiops={res.iops/1e3:.1f};mibs={res.bandwidth_bytes/MiB:.0f}"))
-    return rows
+    return rows_from_experiments("fig3", ["obs3"])

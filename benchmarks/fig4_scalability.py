@@ -1,45 +1,14 @@
 """Fig. 4: intra-zone (QD) vs inter-zone (zones) scalability.
 
-Paper anchors (Obs#5–#8): read 424 KIOPS @QD128; write(mq-deadline)
-293 KIOPS @QD32 intra-zone; inter-zone write saturates 186 KIOPS
-(726.74 MiB/s at 4 KiB); append ~132 KIOPS at concurrency 4 regardless
-of layout; >=8 KiB requests reach the ~1.2 GiB/s device limit with 2-4
-concurrent zones.
+Thin shim over the Obs#5/#6/#7 registry entries (`repro.experiments`):
+read 424 KIOPS @QD128; write(mq-deadline) 293 KIOPS @QD32 intra-zone;
+inter-zone write saturates 186 KIOPS; append ~132 KIOPS at concurrency
+4 regardless of layout.
 """
 from __future__ import annotations
 
-from repro.core import KiB, MiB, OpType, Stack, ZnsDevice
-
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
-    dev = ZnsDevice()
-    rows = []
-    # Fig 4a: intra-zone, 4 KiB
-    for qd in (1, 2, 4, 8, 16, 32, 64, 128):
-        r = dev.steady_state(OpType.READ, 4 * KiB, qd=qd)
-        a = dev.steady_state(OpType.APPEND, 4 * KiB, qd=qd)
-        w = dev.steady_state(OpType.WRITE, 4 * KiB, qd=qd,
-                            stack=Stack.KERNEL_MQ_DEADLINE)
-        rows.append((f"fig4a/intra/qd{qd}", 0.0,
-                     f"read={r.iops/1e3:.0f}K;write_mq={w.iops/1e3:.0f}K;"
-                     f"append={a.iops/1e3:.0f}K"))
-    # Fig 4b: inter-zone, 4 KiB, QD1 per zone
-    for zones in (1, 2, 4, 8, 14):
-        r = dev.steady_state(OpType.READ, 4 * KiB, zones=zones)
-        a = dev.steady_state(OpType.APPEND, 4 * KiB, zones=zones)
-        w = dev.steady_state(OpType.WRITE, 4 * KiB, zones=zones)
-        rows.append((f"fig4b/inter/z{zones}", 0.0,
-                     f"read={r.iops/1e3:.0f}K;write={w.iops/1e3:.0f}K;"
-                     f"append={a.iops/1e3:.0f}K"))
-    # Fig 4c: bandwidth, larger requests
-    for size_k in (4, 8, 16):
-        for conc in (1, 2, 4, 8):
-            a = dev.steady_state(OpType.APPEND, size_k * KiB, qd=conc)
-            w = dev.steady_state(OpType.WRITE, size_k * KiB, zones=conc)
-            rows.append((
-                f"fig4c/{size_k}KiB/conc{conc}", 0.0,
-                f"append_intra={a.bandwidth_bytes/MiB:.0f}MiB/s;"
-                f"write_inter={w.bandwidth_bytes/MiB:.0f}MiB/s"))
-    return rows
+    return rows_from_experiments("fig4", ["obs5", "obs6", "obs7"])

@@ -1,58 +1,15 @@
-"""Fig. 5: reset/finish latency vs zone occupancy (Obs#9/#10).
+"""Fig. 5: zone state-machine costs (Obs#9/#10).
 
-Paper anchors: reset 11.60 ms @50%, 16.19 ms @100%; finished-zone reset
-26.58% cheaper @50%; finish 907.51 ms @<0.1% -> 3.07 ms @100%; open
-9.56 us / close 11.01 us; implicit-open penalties 2.02/2.83 us.
+Thin shim over the Obs#9 (open/close transitions) and Obs#10
+(occupancy-dependent reset/finish) registry entries
+(`repro.experiments`): reset 11.60 ms @50% / 16.19 ms @100%,
+finished-zone reset 26.58% cheaper, finish 907.51 ms @<0.1% -> 3.07 ms
+@100%, open 9.56 us / close 11.01 us; implicit penalties 2.02/2.83 us.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import OpType, WorkloadSpec, ZnsDevice
-
-from .common import timed
-
-
-OCCS = (0.0, 0.0005, 0.0625, 0.125, 0.25, 0.5, 1.0)
+from .common import rows_from_experiments
 
 
 def run():
-    dev = ZnsDevice()
-    lm = dev.lat
-    rows = []
-    rows.append(("fig5/open", 0.0, f"latency_us={lm.open_us():.2f}"))
-    rows.append(("fig5/close", 0.0, f"latency_us={lm.close_us():.2f}"))
-    rows.append(("fig5/implicit_write_penalty", 0.0,
-                 f"us={lm.implicit_open_penalty_us(OpType.WRITE):.2f}"))
-    rows.append(("fig5/implicit_append_penalty", 0.0,
-                 f"us={lm.implicit_open_penalty_us(OpType.APPEND):.2f}"))
-    # Fig 5a: reset latency sweep via the device session
-    wl = WorkloadSpec().reset_sweep(OCCS, n_per_level=40)
-    (res,), us = timed(lambda: (dev.run(wl, backend="event", seed=1),),
-                       repeats=1)
-    tr = res.trace
-    lat = res.sim.in_device_latency / 1e3
-    for occ in OCCS:
-        sel = np.isclose(tr.occupancy, occ) & (tr.op == OpType.RESET)
-        rows.append((f"fig5a/reset/occ{occ:g}", us / len(tr),
-                     f"ms={float(np.mean(lat[sel])):.2f}"))
-    # finished-then-reset variant
-    res2 = dev.run(WorkloadSpec().reset_sweep(OCCS, n_per_level=40,
-                                              finish_first=True),
-                   backend="event", seed=2)
-    tr2 = res2.trace
-    lat2 = res2.sim.in_device_latency / 1e3
-    sel = (tr2.op == OpType.RESET) & np.isclose(tr2.occupancy, 0.5)
-    rows.append(("fig5a/reset_finished/occ0.5", 0.0,
-                 f"ms={float(np.mean(lat2[sel])):.2f} (26.58% below plain)"))
-    # Fig 5b: finish latency sweep
-    foccs = (0.001, 0.0625, 0.125, 0.25, 0.5, 0.999)
-    res3 = dev.run(WorkloadSpec().finish_sweep(foccs, n_per_level=40),
-                   backend="event", seed=3)
-    tr3 = res3.trace
-    lat3 = res3.sim.in_device_latency / 1e3
-    for occ in foccs:
-        sel = np.isclose(tr3.occupancy, occ) & (tr3.op == OpType.FINISH)
-        rows.append((f"fig5b/finish/occ{occ:g}", 0.0,
-                     f"ms={float(np.mean(lat3[sel])):.2f}"))
-    return rows
+    return rows_from_experiments("fig5", ["obs9", "obs10"])

@@ -1,30 +1,15 @@
 """Fig. 6: write/read throughput stability under write pressure —
-conventional SSD (FTL GC) vs ZNS (host GC) (Obs#11).
+conventional SSD (FTL GC) vs ZNS (host GC).
 
-Paper anchors: conventional write throughput fluctuates a-few-MiB/s..
-~1,200 MiB/s at full-rate writes while ZNS stays flat; QD1 4 KiB read
-p95 under full-rate writes: 299.89 ms (conv) vs 98.04 ms (ZNS) vs
-81.41 us idle.
+Thin shim over the Obs#11 registry entry (`repro.experiments`):
+conventional write throughput sawtooths under FTL GC while ZNS stays
+flat; QD1 4 KiB read p95 under full-rate writes is 299.89 ms (conv) vs
+98.04 ms (ZNS) vs 81.41 us idle.
 """
 from __future__ import annotations
 
-from repro.core import ConvDevice, ZnsDevice
-from repro.core.calibration import PEAK_WRITE_BW_MIBS
-
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
-    rows = []
-    conv = ConvDevice()
-    zns = ZnsDevice()
-    for rate in (0.0, 250.0, 750.0, PEAK_WRITE_BW_MIBS):
-        (c,), us = timed(lambda rate=rate: (conv.run_write_pressure(
-            rate_mibs=rate, duration_s=60),), repeats=1)
-        z = zns.run_write_pressure(rate_mibs=rate, duration_s=60)
-        rows.append((
-            f"fig6/rate{rate:g}MiBs", us,
-            f"conv_write_cv={c.write_cv:.2f};zns_write_cv={z.write_cv:.2f};"
-            f"conv_read_p95_ms={c.read_lat_p95_us/1e3:.2f};"
-            f"zns_read_p95_ms={z.read_lat_p95_us/1e3:.2f}"))
-    return rows
+    return rows_from_experiments("fig6", ["obs11"])

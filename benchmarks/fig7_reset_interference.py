@@ -1,31 +1,13 @@
-"""Fig. 7: p95 reset latency under concurrent read/write/append (Obs#12/13).
+"""Fig. 7: reset/I-O interference (Obs#12/#13).
 
-Paper anchors: 17.94 ms isolated -> 28.00 (read, +56.11%), 32.00
-(write, +78.42%), 31.48 ms (append, +75.50%); resets do not perturb I/O.
+Thin shim over the Obs#12 (resets never delay I/O) and Obs#13
+(concurrent I/O inflates reset latency: +56.11% read, +78.42% write,
++75.50% append) registry entries (`repro.experiments`).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import OpType, ZnsDevice
-from repro.core.workloads import reset_interference
-
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
-    dev = ZnsDevice()
-    rows = []
-    for io_op, label in ((None, "isolated"), (OpType.READ, "read"),
-                         (OpType.WRITE, "write"), (OpType.APPEND, "append")):
-        tr = reset_interference(io_op, n_resets=300)
-        (res,), us = timed(lambda tr=tr: (dev.run(tr, backend="event",
-                                                  seed=7),), repeats=1)
-        p95 = res.latency_stats(OpType.RESET).p95_us / 1e3
-        derived = f"reset_p95_ms={p95:.2f}"
-        if io_op is not None:
-            iomask = tr.op != OpType.RESET
-            io_lat = float(np.mean(res.sim.service[iomask]))
-            derived += f";io_svc_us={io_lat:.2f}"
-        rows.append((f"fig7/reset_under_{label}", us, derived))
-    return rows
+    return rows_from_experiments("fig7", ["obs12", "obs13"])

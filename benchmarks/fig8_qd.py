@@ -1,25 +1,27 @@
 """Fig. 8 (appendix): throughput/latency trade-off vs queue depth for
 append (SPDK, intra-zone) and write (io_uring + mq-deadline, intra-zone).
 
-Paper claims: append latency grows slower than write latency until a
-threshold (~QD4); past it the trends match; appends should be issued at
-low QD for latency.
+Shim over the Obs#6 (append saturates at concurrency 4) and Obs#8
+(large requests saturate bandwidth) registry entries
+(`repro.experiments`), plus the figure's closed-form QD grid from the
+same ``ZnsDevice`` session: append latency grows slower than write
+latency until ~QD4, so appends should be issued at low QD for latency.
 """
 from __future__ import annotations
 
 from repro.core import KiB, OpType, Stack, ZnsDevice
 
-from .common import timed
+from .common import rows_from_experiments
 
 
 def run():
+    rows = rows_from_experiments("fig8", ["obs6", "obs8"])
     dev = ZnsDevice()
-    rows = []
     for size_k in (4, 16, 32):
         for qd in (1, 2, 4, 8, 16):
             a = dev.steady_state(OpType.APPEND, size_k * KiB, qd=qd)
             w = dev.steady_state(OpType.WRITE, size_k * KiB, qd=qd,
-                                stack=Stack.KERNEL_MQ_DEADLINE)
+                                 stack=Stack.KERNEL_MQ_DEADLINE)
             rows.append((
                 f"fig8/{size_k}KiB/qd{qd}", 0.0,
                 f"append_kiops={a.iops/1e3:.0f};append_lat_us={a.mean_latency_us:.1f};"

@@ -1,50 +1,39 @@
-"""Table I: the five key insights, validated quantitatively against the
-model (each row states the paper's claim and the model's number).
-Also emits the §IV emulator-fidelity matrix.
+"""Table I: the five key insights, each derived from its observation
+registry entry (`repro.experiments`) so the table, the figures, and the
+docs share one source of truth.  Also emits the §IV emulator-fidelity
+matrix (registry-independent: it compares latency *profiles*).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import KiB, MiB, OpType, Stack, ZnsDevice
+from repro.core import KiB, OpType
 from repro.core.emulator_models import ALL_MODELS, FIDELITY_MATRIX
-from repro.core.workloads import reset_interference
+from repro.experiments import ExperimentRunner
 
 
 def run():
-    dev = ZnsDevice()
-    lm = dev.lat
     rows = []
-    # Insight 1: write up to 23% lower latency than append
-    w = float(dev.io_latency_us(OpType.WRITE, 4 * KiB))
-    a = float(dev.io_latency_us(OpType.APPEND, 8 * KiB))
+    res = {r.obs: r for r in ExperimentRunner(
+        ["obs4", "obs7", "obs10", "obs11", "obs13"]).run()}
+    # Insight 1: write up to 23% lower latency than append (Obs#4)
     rows.append(("table1/append_vs_write", 0.0,
-                 f"gap_pct={(a - w) / a * 100:.2f} (paper<=23.42)"))
-    # Insight 2: prefer intra-zone scalability
-    intra = dev.steady_state(OpType.WRITE, 4 * KiB, qd=32,
-                             stack=Stack.KERNEL_MQ_DEADLINE).iops
-    inter = dev.steady_state(OpType.WRITE, 4 * KiB, zones=14).iops
+                 f"gap_pct={res[4].metrics['gap_pct']:.2f} (paper<=23.42)"))
+    # Insight 2: prefer intra-zone scalability (Obs#7)
     rows.append(("table1/intra_vs_inter_write", 0.0,
-                 f"intra_kiops={intra/1e3:.0f};inter_kiops={inter/1e3:.0f}"))
-    # Insight 3: finish most expensive (hundreds of ms)
-    f0 = float(dev.finish_latency_us(0.001)) / 1e3
+                 f"intra_kiops={res[7].metrics['write_intra_mq_kiops']:.0f};"
+                 f"inter_kiops={res[7].metrics['write_inter_kiops']:.0f}"))
+    # Insight 3: finish most expensive (hundreds of ms) (Obs#10)
     rows.append(("table1/finish_cost", 0.0,
-                 f"finish_ms_at_0pct={f0:.1f} (paper 907.51)"))
-    # Insight 4: ZNS ~3x higher read throughput under concurrent I/O
-    #   (from the Obs#11 p95 anchors: 299.89 / 98.04 = 3.06x)
-    from repro.core.calibration import (
-        CONV_READ_P95_UNDER_WRITES_MS, ZNS_READ_P95_UNDER_WRITES_MS)
+                 f"finish_ms_at_0pct={res[10].metrics['finish_ms_low']:.1f} "
+                 f"(paper 907.51)"))
+    # Insight 4: ZNS ~3x higher read throughput under concurrent I/O (Obs#11)
     rows.append(("table1/zns_read_advantage", 0.0,
-                 f"x={CONV_READ_P95_UNDER_WRITES_MS / ZNS_READ_P95_UNDER_WRITES_MS:.2f}"))
-    # Insight 5: reset latency +<=78% under I/O; resets don't hurt I/O
-    res = dev.run(reset_interference(OpType.WRITE, n_resets=200),
-                  backend="event", seed=11)
-    p95_w = res.latency_stats(OpType.RESET).p95_us / 1e3
-    res0 = dev.run(reset_interference(None, n_resets=200),
-                   backend="event", seed=11)
-    p95_0 = res0.latency_stats().p95_us / 1e3
+                 f"x={res[11].metrics['zns_read_advantage']:.2f}"))
+    # Insight 5: reset latency +<=78% under I/O; resets don't hurt I/O (Obs#13)
     rows.append(("table1/reset_inflation", 0.0,
-                 f"pct={(p95_w / p95_0 - 1) * 100:.1f} (paper 78.42)"))
+                 f"pct={res[13].metrics['write_inflation_pct']:.1f} "
+                 f"(paper 78.42)"))
     # §IV emulator fidelity matrix
     for name, obs in FIDELITY_MATRIX.items():
         ok = sum(obs.values())

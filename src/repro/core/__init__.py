@@ -18,7 +18,10 @@ from .engine import (  # noqa: F401
     zone_sequential_completions, zone_sequential_completions_batched,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
-from .metrics import LatencyStats, bandwidth_bytes, iops, throughput_timeseries  # noqa: F401
+from .metrics import (  # noqa: F401
+    LatencyStats, available_metrics, bandwidth_bytes, extract_metrics, iops,
+    register_metric, throughput_timeseries, unregister_metric,
+)
 from .workload import StreamSpec, WorkloadSpec  # noqa: F401
 from .fleet import batched_sequential_completions, simulate_fleet_vectorized  # noqa: F401
 from .device import (  # noqa: F401

@@ -47,7 +47,7 @@ from .engine import (
 )
 from .fleet import batched_sequential_completions, simulate_fleet_vectorized
 from .latency import LatencyModel, LatencyParams, stack_latency_params
-from .metrics import LatencyStats, bandwidth_bytes, iops, \
+from .metrics import LatencyStats, bandwidth_bytes, extract_metrics, iops, \
     throughput_timeseries
 from .spec import (
     ConvDeviceSpec, LBAFormat, MiB, OpType, Stack, ZNSDeviceSpec,
@@ -64,7 +64,19 @@ AUTO_VECTORIZED_MIN = 8192
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class RunResult:
-    """Per-request simulation output + figure-ready reductions."""
+    """Per-request simulation output + figure-ready reductions.
+
+    Example::
+
+        >>> from repro.core import KiB, WorkloadSpec, ZnsDevice
+        >>> dev = ZnsDevice()
+        >>> res = dev.run(WorkloadSpec().writes(n=100, size=4 * KiB),
+        ...               backend="event", jitter=False)
+        >>> len(res), res.backend
+        (100, 'event')
+        >>> round(res.latency_stats().mean_us, 2)   # QD1 -> service time
+        11.36
+    """
 
     trace: Trace
     sim: SimResult
@@ -112,6 +124,22 @@ class RunResult:
         return throughput_timeseries(self.sim.complete, self.trace.size,
                                      bin_s=bin_s)
 
+    def summary(self, metrics: Optional[Sequence[str]] = None
+                ) -> Dict[str, float]:
+        """Named-metric snapshot via the extractor registry
+        (:func:`repro.core.metrics.register_metric`); the experiment
+        runner's JSON artifacts are built from these.
+
+        Example::
+
+            >>> from repro.core import KiB, WorkloadSpec, ZnsDevice
+            >>> res = ZnsDevice().run(WorkloadSpec().writes(n=10, size=4*KiB),
+            ...                       backend="event", jitter=False)
+            >>> res.summary(["n_requests"])
+            {'n_requests': 10.0}
+        """
+        return extract_metrics(self, metrics)
+
     def __len__(self) -> int:
         return len(self.trace)
 
@@ -146,7 +174,21 @@ def register_backend(name: str, fn: Optional[BackendFn] = None, *,
                      replace: bool = False):
     """Register a simulation backend ``fn(trace, spec, lat, *, seed,
     jitter, **opts) -> SimResult``; usable as a decorator.  Registering an
-    existing name warns (``replace=True`` silences)."""
+    existing name warns (``replace=True`` silences).
+
+    Example::
+
+        >>> from repro.core import (available_backends, register_backend,
+        ...                         unregister_backend)
+        >>> @register_backend("null-engine")
+        ... def _null(trace, spec, lat, *, seed=0, jitter=True, **opts):
+        ...     raise NotImplementedError
+        >>> "null-engine" in available_backends()
+        True
+        >>> unregister_backend("null-engine")
+        >>> "null-engine" in available_backends()
+        False
+    """
     return _register_into(_BACKENDS, "backend", name, fn, replace)
 
 
@@ -215,6 +257,15 @@ class ZnsDevice:
     This is the facade the rest of the repo binds to — benchmarks, the
     checkpoint store, and examples all speak ``ZnsDevice`` instead of
     wiring ``ThroughputModel``/``simulate()``/``Trace`` by hand.
+
+    Example::
+
+        >>> from repro.core import KiB, OpType, ZnsDevice
+        >>> dev = ZnsDevice()                      # ZN540 by default
+        >>> round(float(dev.io_latency_us(OpType.WRITE, 4 * KiB)), 2)
+        11.36
+        >>> round(dev.steady_state(OpType.APPEND, 4 * KiB, qd=4).iops / 1e3)
+        132
     """
 
     def __init__(self, spec: Optional[ZNSDeviceSpec] = None, *,
@@ -407,6 +458,17 @@ class FleetRunResult:
             raise ValueError("no matching requests in this fleet run")
         return LatencyStats.from_samples(pool)
 
+    def summary(self, metrics: Optional[Sequence[str]] = None) -> Dict:
+        """Fleet aggregates + one metric snapshot per device (the
+        per-device dicts come from :meth:`RunResult.summary`)."""
+        return {
+            "n_devices": len(self.results),
+            "backend": self.backend,
+            "total_iops": self.total_iops,
+            "total_bandwidth_bytes": self.total_bandwidth_bytes,
+            "devices": [r.summary(metrics) for r in self.results],
+        }
+
 
 class DeviceFleet:
     """N device sessions stacked along a leading device axis.
@@ -418,12 +480,18 @@ class DeviceFleet:
     (`repro.core.fleet`): a 32-device sweep is one device-axis-parallel
     computation, not 32 sequential simulations.
 
-        fleet = DeviceFleet.homogeneous(16)
-        res = fleet.run(wl, policy="replicate")       # one WorkloadSpec
-        res[3].latency_stats(OpType.READ).p99_us      # per-device result
-
     Accepted member forms: ``ZnsDevice``, ``ZNSDeviceSpec``,
     ``LatencyParams``, ``(spec, params)``, or an emulator-profile name.
+
+    Example::
+
+        >>> from repro.core import DeviceFleet, KiB, WorkloadSpec
+        >>> fleet = DeviceFleet.homogeneous(2)
+        >>> wl = WorkloadSpec().writes(n=64, size=4 * KiB)
+        >>> res = fleet.run(wl, policy="replicate", backend="vectorized",
+        ...                 jitter=False)
+        >>> len(res), [len(r) for r in res]
+        (2, [64, 64])
     """
 
     def __init__(self, members: Sequence):
@@ -502,8 +570,8 @@ class DeviceFleet:
                 else w for w in shards]
 
     def run(self, workload, *, backend: str = "auto", seed: int = 0,
-            jitter: bool = True, policy: str = "round_robin",
-            **backend_opts) -> FleetRunResult:
+            seeds: Optional[Sequence[int]] = None, jitter: bool = True,
+            policy: str = "round_robin", **backend_opts) -> FleetRunResult:
         """Simulate one workload per device; returns :class:`FleetRunResult`.
 
         ``workload``: a single :class:`WorkloadSpec` (lowered per device
@@ -511,8 +579,15 @@ class DeviceFleet:
         (replicated), or a sequence of per-device specs/traces.  Device
         ``i`` uses ``seed + i``, so results match a Python loop of
         single-device ``ZnsDevice.run(..., seed=seed + i)`` calls.
+        ``seeds`` overrides that with an explicit per-device list (the
+        experiment runner stacks sweep points from unrelated experiments
+        into one fleet call and pins each point's seed).
         """
         traces = self._lower(workload, policy)
+        if seeds is None:
+            seeds = [seed + i for i in range(self.n)]
+        elif len(seeds) != self.n:
+            raise ValueError(f"got {len(seeds)} seeds for {self.n} devices")
         total = sum(len(t) for t in traces)
         name = _resolve_auto(total) if backend == "auto" else backend
         if name not in _BACKENDS:
@@ -524,12 +599,11 @@ class DeviceFleet:
         if name == "vectorized" and _BACKENDS[name] is _vectorized_backend:
             sims = simulate_fleet_vectorized(
                 traces, self.specs, [d.lat for d in self.devices],
-                seeds=[seed + i for i in range(self.n)], jitter=jitter,
-                **backend_opts)
+                seeds=list(seeds), jitter=jitter, **backend_opts)
         else:
             sims = [
                 _BACKENDS[name](traces[i], self.devices[i].spec,
-                                self.devices[i].lat, seed=seed + i,
+                                self.devices[i].lat, seed=seeds[i],
                                 jitter=jitter, **backend_opts)
                 for i in range(self.n)
             ]

@@ -41,6 +41,35 @@ def _pad_rows(rows: List[np.ndarray], fill: float, dtype) -> np.ndarray:
     return out
 
 
+#: Rows whose lengths differ by more than this factor go to separate
+#: padded batches (see :func:`length_buckets`).
+BUCKET_RATIO = 4.0
+
+
+def length_buckets(lens: Sequence[int], *, ratio: float = BUCKET_RATIO
+                   ) -> List[List[int]]:
+    """Group row indices so each padded batch wastes bounded work.
+
+    Sweep-point stacking across experiments (``repro.experiments``) mixes
+    chains of wildly different lengths in one fleet call — a 40-request
+    occupancy sweep next to a 100k-request I/O trace.  Padding all rows
+    to the global max makes the scan do O(R * Lmax) work; bucketing rows
+    whose max/min length ratio stays under ``ratio`` keeps the padding
+    overhead a constant factor while still batching similar-length rows.
+    Returns index lists, each sorted, covering ``range(len(lens))``.
+    """
+    order = sorted(range(len(lens)), key=lambda i: (lens[i], i))
+    buckets: List[List[int]] = []
+    base = None
+    for i in order:
+        if base is not None and lens[i] <= base * ratio:
+            buckets[-1].append(i)
+        else:
+            buckets.append([i])
+            base = max(lens[i], 1)
+    return [sorted(b) for b in buckets]
+
+
 def simulate_fleet_vectorized(traces: Sequence[Trace],
                               specs: Sequence[ZNSDeviceSpec],
                               lats: Sequence,
@@ -88,37 +117,42 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
                         comp=tr.issue[order] + svc, fams=fams))
 
     # -- batched per-kind matrices (constant across sweeps) -----------------
+    # Rows are length-bucketed so stacking short mgmt sweeps next to long
+    # I/O traces (heterogeneous experiment batches) doesn't pad every row
+    # to the global max chain length.
     batched = {}
     for kind in FAMILY_ORDER:
         members = [(b, *dev[b]["fams"][kind]) for b in range(B)
                    if "fams" in dev[b] and kind in dev[b]["fams"]]
         if not members:
             continue
-        lens = [len(perm) for _, perm, _ in members]
-        svc_mat = _pad_rows([dev[b]["svc"][perm] for b, perm, _ in members],
-                            0.0, np.float64)
-        # padded tail: isolated empty segments at t=0, masked on scatter
-        head_mat = _pad_rows([heads for _, _, heads in members], True, bool)
-        batched[kind] = (members, lens, svc_mat, head_mat)
+        groups = []
+        for idx in length_buckets([len(perm) for _, perm, _ in members]):
+            sub = [members[i] for i in idx]
+            lens = [len(perm) for _, perm, _ in sub]
+            svc_mat = _pad_rows([dev[b]["svc"][perm] for b, perm, _ in sub],
+                                0.0, np.float64)
+            # padded tail: isolated empty segments at t=0, masked on scatter
+            head_mat = _pad_rows([heads for _, _, heads in sub], True, bool)
+            groups.append((sub, lens, svc_mat, head_mat))
+        batched[kind] = groups
 
-    # -- Gauss–Seidel sweeps, one batched scan per family -------------------
+    # -- Gauss–Seidel sweeps, one batched scan per family bucket ------------
     for _ in range(max(sweeps, 1)):
         moved = False
         for kind in FAMILY_ORDER:
-            if kind not in batched:
-                continue
-            members, lens, svc_mat, head_mat = batched[kind]
-            cur = np.zeros_like(svc_mat)
-            for r, (b, perm, _) in enumerate(members):
-                cur[r, :lens[r]] = dev[b]["comp"][perm]
-            out = zone_sequential_completions_batched(
-                cur - svc_mat, svc_mat, head_mat, backend=scan_backend)
-            for r, (b, perm, _) in enumerate(members):
-                o, c = out[r, :lens[r]], cur[r, :lens[r]]
-                # anything beyond float noise counts as progress
-                if (o > c * (1.0 + 1e-12) + 1e-9).any():
-                    moved = True
-                    dev[b]["comp"][perm] = np.maximum(c, o)
+            for members, lens, svc_mat, head_mat in batched.get(kind, ()):
+                cur = np.zeros_like(svc_mat)
+                for r, (b, perm, _) in enumerate(members):
+                    cur[r, :lens[r]] = dev[b]["comp"][perm]
+                out = zone_sequential_completions_batched(
+                    cur - svc_mat, svc_mat, head_mat, backend=scan_backend)
+                for r, (b, perm, _) in enumerate(members):
+                    o, c = out[r, :lens[r]], cur[r, :lens[r]]
+                    # anything beyond float noise counts as progress
+                    if (o > c * (1.0 + 1e-12) + 1e-9).any():
+                        moved = True
+                        dev[b]["comp"][perm] = np.maximum(c, o)
         if not moved:
             break
 

@@ -47,6 +47,16 @@ class LatencyParams:
     Equality is element-wise (ndarray fields break the generated
     ``__eq__``/``__hash__``, so both are provided explicitly — a
     :class:`LatencyModel` stays comparable and dict-keyable).
+
+    Example (pure functions over the calibrated ZN540 values)::
+
+        >>> from repro.core import DEFAULT_LATENCY_PARAMS, KiB, OpType
+        >>> from repro.core.latency import io_service_us, reset_us
+        >>> round(float(io_service_us(DEFAULT_LATENCY_PARAMS,
+        ...                           OpType.WRITE, 4 * KiB)), 2)
+        11.36
+        >>> round(float(reset_us(DEFAULT_LATENCY_PARAMS, 0.5)))
+        11600
     """
 
     # -- data-path ops: service = interp(size) [+ format/stack terms] -------

@@ -1,13 +1,40 @@
-"""Throughput/latency reducers used by the benchmark harness (§III-B)."""
+"""Throughput/latency reducers used by the benchmark harness (§III-B),
+plus the named metric-extractor registry behind
+:meth:`repro.core.RunResult.summary` and the experiment runner
+(:mod:`repro.experiments`).
+
+Example (registering a custom extractor)::
+
+    >>> from repro.core.metrics import (available_metrics, register_metric,
+    ...                                 unregister_metric)
+    >>> @register_metric("span_s", replace=True)
+    ... def _span_s(result):
+    ...     c = result.sim.complete
+    ...     return float(c.max() - c.min()) / 1e6 if len(c) else 0.0
+    >>> "span_s" in available_metrics()
+    True
+    >>> unregister_metric("span_s")
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class LatencyStats:
+    """mean/percentile latency summary (microseconds) of one sample set.
+
+    Example::
+
+        >>> from repro.core import LatencyStats
+        >>> LatencyStats.from_samples([10.0, 20.0, 30.0]).mean_us
+        20.0
+    """
+
     mean_us: float
     p50_us: float
     p95_us: float
@@ -24,8 +51,10 @@ class LatencyStats:
 
 
 def iops(complete_us, n: int = None) -> float:
-    """Operations per second over the busy interval."""
+    """Operations per second over the busy interval (0.0 for empty runs)."""
     c = np.asarray(complete_us, dtype=np.float64)
+    if len(c) == 0:
+        return 0.0
     n = n if n is not None else len(c)
     span = c.max() - c.min()
     if span <= 0:
@@ -34,7 +63,10 @@ def iops(complete_us, n: int = None) -> float:
 
 
 def bandwidth_bytes(complete_us, sizes) -> float:
+    """Bytes per second over the busy interval (0.0 for empty runs)."""
     c = np.asarray(complete_us, dtype=np.float64)
+    if len(c) == 0:
+        return 0.0
     span = (c.max() - c.min()) / 1e6
     if span <= 0:
         return float("inf")
@@ -51,3 +83,92 @@ def throughput_timeseries(complete_us, sizes, *, bin_s: float = 1.0):
     acc = np.zeros(nbins)
     np.add.at(acc, idx, sizes)
     return t0 + np.arange(nbins) * bin_s, acc / bin_s / (1024 ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Metric-extractor registry
+# ---------------------------------------------------------------------------
+#: An extractor maps a finished run (anything shaped like
+#: :class:`repro.core.RunResult`: ``.trace``, ``.sim``, ``.latency_stats()``)
+#: to one scalar.  Registered extractors drive ``RunResult.summary()`` and
+#: the per-experiment JSON artifacts of :mod:`repro.experiments`.
+MetricFn = Callable[[object], float]
+_METRICS: Dict[str, MetricFn] = {}
+
+
+def register_metric(name: str, fn: Optional[MetricFn] = None, *,
+                    replace: bool = False):
+    """Register a named metric extractor; usable as a decorator.
+
+    Registering an existing name warns unless ``replace=True`` (mirrors
+    :func:`repro.core.register_backend` semantics).
+    """
+    def _register(f):
+        if not replace and name in _METRICS and _METRICS[name] is not f:
+            warnings.warn(
+                f"metric {name!r} is already registered; replacing it. "
+                f"Pass replace=True to silence this warning.",
+                RuntimeWarning, stacklevel=3)
+        _METRICS[name] = f
+        return f
+    return _register(fn) if fn is not None else _register
+
+
+def unregister_metric(name: str) -> None:
+    _METRICS.pop(name, None)
+
+
+def available_metrics() -> tuple:
+    return tuple(sorted(_METRICS))
+
+
+def extract_metrics(result, names: Optional[Sequence[str]] = None
+                    ) -> Dict[str, float]:
+    """Evaluate registered extractors on a run result -> ``{name: value}``.
+
+    ``names=None`` evaluates every registered extractor; unknown names
+    raise ``KeyError``.
+    """
+    if names is None:
+        names = available_metrics()
+    out = {}
+    for name in names:
+        if name not in _METRICS:
+            raise KeyError(f"unknown metric {name!r}; available: "
+                           f"{available_metrics()}")
+        out[name] = float(_METRICS[name](result))
+    return out
+
+
+@register_metric("n_requests")
+def _m_n(result) -> float:
+    return float(len(result.trace))
+
+
+@register_metric("iops")
+def _m_iops(result) -> float:
+    return iops(result.sim.complete)
+
+
+@register_metric("bandwidth_mibs")
+def _m_bw(result) -> float:
+    return bandwidth_bytes(result.sim.complete, result.trace.size) / (1024 ** 2)
+
+
+@register_metric("makespan_us")
+def _m_makespan(result) -> float:
+    c = result.sim.complete
+    return float(c.max()) if len(c) else 0.0
+
+
+def _lat_metric(field):
+    def fn(result) -> float:
+        if not len(result.trace):
+            return 0.0
+        return getattr(result.latency_stats(), field)
+    return fn
+
+
+for _f in ("mean_us", "p50_us", "p95_us", "p99_us"):
+    register_metric(f"lat_{_f}", _lat_metric(_f))
+del _f

@@ -112,12 +112,25 @@ class WorkloadSpec:
     Every builder method returns a *new* spec (chainable, immutable).
     ``stack``/``fmt`` apply to the whole workload (a :class:`Trace` is
     homogeneous in both, matching the paper's per-experiment setup).
+
+    Example::
+
+        >>> from repro.core import KiB, WorkloadSpec
+        >>> wl = (WorkloadSpec()
+        ...       .writes(n=4, size=4 * KiB, qd=2)
+        ...       .resets(n=1, occupancy=1.0))
+        >>> len(wl.streams), len(wl.build())
+        (2, 5)
     """
 
     streams: Tuple[StreamSpec, ...] = ()
     stack: Stack = Stack.SPDK
     fmt: LBAFormat = LBAFormat.LBA_4K
     phase_us: float = 0.0
+    # Set on shards returned by :meth:`shard`: a remainder shard with no
+    # streams (more devices than streams/requests) lowers to an empty
+    # trace instead of raising at ``build()``.
+    empty_ok: bool = False
 
     # -- configuration ------------------------------------------------------
     def on_stack(self, stack: Stack) -> "WorkloadSpec":
@@ -206,7 +219,8 @@ class WorkloadSpec:
             per: list = [() for _ in range(n_devices)]
             for i, s in enumerate(self.streams):
                 per[i % n_devices] += (s,)
-            return tuple(dataclasses.replace(self, streams=st) for st in per)
+            return tuple(dataclasses.replace(self, streams=st, empty_ok=True)
+                         for st in per)
         if policy == "split":
             shards = []
             for d in range(n_devices):
@@ -224,14 +238,30 @@ class WorkloadSpec:
                         st.append(dataclasses.replace(s, n_per_level=n))
                     else:
                         st.append(dataclasses.replace(s, n=n))
-                shards.append(dataclasses.replace(self, streams=tuple(st)))
+                shards.append(dataclasses.replace(self, streams=tuple(st),
+                                                  empty_ok=True))
             return tuple(shards)
         raise ValueError(f"unknown shard policy {policy!r}; expected "
                          f"round_robin | replicate | split")
 
     # -- lowering ------------------------------------------------------------
     def build(self, *, allow_empty: bool = False) -> Trace:
-        """Lower to a :class:`Trace` (struct-of-arrays request list)."""
+        """Lower to a :class:`Trace` (struct-of-arrays request list).
+
+        An empty spec raises unless ``allow_empty=True`` or the spec is a
+        fleet shard (:meth:`shard` may hand idle devices zero streams or
+        zero requests when ``n_devices`` exceeds the stream/request
+        count — those shards lower to empty traces).
+
+        Example::
+
+            >>> from repro.core import KiB, WorkloadSpec
+            >>> shards = WorkloadSpec().writes(n=3, size=4*KiB).shard(
+            ...     5, policy="split")
+            >>> [len(s.build()) for s in shards]    # devices 3-4 idle
+            [1, 1, 1, 0, 0]
+        """
+        allow_empty = allow_empty or self.empty_ok
         if not self.streams:
             if allow_empty:
                 return _empty_trace(self.stack, self.fmt)

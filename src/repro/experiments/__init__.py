@@ -1,0 +1,29 @@
+"""Observation registry + fleet-batched experiment runner.
+
+The paper's contribution is 13 key observations about ZNS SSD behavior;
+this package makes each one an executable :class:`Experiment` (device
+spec + latency profile + workload sweep + metric extractors + a
+``check`` asserting the qualitative claim) and runs any subset of them
+as **one** batched :class:`repro.core.DeviceFleet` computation.
+
+    python -m repro.experiments run --all        # all 13, one fleet sweep
+    python -m repro.experiments list             # what's registered
+
+    >>> from repro.experiments import ExperimentRunner, get_experiment
+    >>> res = ExperimentRunner(["obs13"]).run()[0]
+    >>> res.passed, round(res.metrics["write_inflation_pct"], 2)
+    (True, 78.42)
+
+`docs/observations.md` maps every observation to its registry entry,
+model knobs, and tests; ``benchmarks/fig2..fig8`` + ``table1`` are thin
+shims over these entries.
+"""
+from .registry import (  # noqa: F401
+    Check, Experiment, SweepPoint, all_experiments, get_experiment,
+    register_experiment, resolve_experiments, unregister_experiment,
+)
+from .runner import (  # noqa: F401
+    DEFAULT_OUT_DIR, ExperimentContext, ExperimentResult, ExperimentRunner,
+    render_report,
+)
+from . import observations  # noqa: F401  (populates the registry)

@@ -1,0 +1,81 @@
+"""CLI for the observation registry.
+
+    python -m repro.experiments run --all [--backend vectorized]
+    python -m repro.experiments run --only obs4,obs10 --out results/exp
+    python -m repro.experiments list
+
+``run`` executes the selected experiments as one fleet-batched sweep,
+writes per-experiment JSON + a markdown report (cross-linking
+docs/observations.md), prints a summary table, and exits non-zero if any
+check fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .registry import all_experiments
+from .runner import DEFAULT_OUT_DIR, ExperimentRunner
+
+
+def _cmd_list() -> int:
+    for exp in all_experiments():
+        print(f"obs{exp.obs:02d}  {exp.name:32s} {exp.figure:10s} "
+              f"{len(exp.points)} points  — {exp.title}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    keys = None if args.all else [k for k in args.only.split(",") if k]
+    if keys is not None and not keys:
+        print("run: pass --all or --only obs4,obs10,...", file=sys.stderr)
+        return 2
+    try:
+        runner = ExperimentRunner(keys, backend=args.backend,
+                                  jitter=args.jitter, seed=args.seed)
+    except KeyError as e:
+        print(f"run: {e.args[0]}", file=sys.stderr)
+        return 2
+    results = runner.run()
+    paths = runner.write_artifacts(results, out_dir=args.out)
+    width = max((len(r.name) for r in results), default=4)
+    for r in results:
+        ok = sum(c.ok for c in r.checks)
+        status = "pass" if r.passed else "FAIL"
+        print(f"obs{r.obs:02d}  {r.name:{width}s}  {ok}/{len(r.checks)} "
+              f"checks  {status}")
+        if not r.passed or args.verbose:
+            for c in r.checks:
+                print(f"        {c}")
+    n_pass = sum(r.passed for r in results)
+    print(f"\n{n_pass}/{len(results)} experiments passed "
+          f"(backend={args.backend}); report: {paths['report']}")
+    return 0 if n_pass == len(results) else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="list registered experiments")
+    run = sub.add_parser("run", help="run experiments (one batched sweep)")
+    run.add_argument("--all", action="store_true",
+                     help="run every registered experiment")
+    run.add_argument("--only", default="",
+                     help="comma-separated names/numbers (obs4,obs10,...)")
+    run.add_argument("--backend", default="vectorized",
+                     choices=("event", "vectorized", "auto"))
+    run.add_argument("--out", default=DEFAULT_OUT_DIR,
+                     help=f"artifact directory (default {DEFAULT_OUT_DIR})")
+    run.add_argument("--seed", type=int, default=0)
+    run.add_argument("--jitter", action="store_true",
+                     help="enable stochastic service-time jitter "
+                          "(checks are calibrated for jitter off)")
+    run.add_argument("--verbose", action="store_true",
+                     help="print every check, not just failures")
+    args = ap.parse_args(argv)
+    return _cmd_list() if args.cmd == "list" else _cmd_run(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -203,3 +203,83 @@ def test_scan_numpy_matches_python_oracle():
     out_np = zone_sequential_completions(issue, svc, seg, backend="numpy")
     out_py = zone_sequential_completions(issue, svc, seg, backend="python")
     np.testing.assert_allclose(out_np, out_py, rtol=1e-12)
+
+
+# -- backend registry hygiene ----------------------------------------------------
+def test_register_backend_collision_warns_and_unregister_roundtrip():
+    from repro.core import unregister_backend
+
+    def impl_a(trace, spec, lat, **kw):
+        raise NotImplementedError
+
+    def impl_b(trace, spec, lat, **kw):
+        raise NotImplementedError
+
+    register_backend("collide-test", impl_a)
+    try:
+        with pytest.warns(RuntimeWarning, match="already registered"):
+            register_backend("collide-test", impl_b)
+        # replace=True and same-function re-registration stay silent
+        import warnings as _warnings
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            register_backend("collide-test", impl_a, replace=True)
+            register_backend("collide-test", impl_a)
+        assert "collide-test" in available_backends()
+    finally:
+        unregister_backend("collide-test")
+    assert "collide-test" not in available_backends()
+    unregister_backend("collide-test")            # idempotent
+    with pytest.raises(KeyError, match="unknown backend"):
+        ZnsDevice().run(WorkloadSpec().writes(n=4), backend="collide-test")
+
+
+def test_register_backend_decorator_collision_warns():
+    from repro.core import unregister_backend
+
+    @register_backend("collide-deco")
+    def first(trace, spec, lat, **kw):
+        raise NotImplementedError
+
+    try:
+        with pytest.warns(RuntimeWarning, match="already registered"):
+            @register_backend("collide-deco")
+            def second(trace, spec, lat, **kw):
+                raise NotImplementedError
+    finally:
+        unregister_backend("collide-deco")
+
+
+# -- metric-extractor registry ---------------------------------------------------
+def test_metric_registry_roundtrip_and_summary():
+    from repro.core import (available_metrics, extract_metrics,
+                            register_metric, unregister_metric)
+
+    res = ZnsDevice().run(WorkloadSpec().writes(n=32), backend="event",
+                          jitter=False)
+    base = res.summary()
+    assert base["n_requests"] == 32.0
+    assert base["iops"] > 0 and base["lat_p99_us"] >= base["lat_p50_us"]
+
+    register_metric("answer", lambda r: 42.0)
+    try:
+        assert res.summary(["answer"]) == {"answer": 42.0}
+        with pytest.warns(RuntimeWarning, match="already registered"):
+            register_metric("answer", lambda r: 43.0)
+    finally:
+        unregister_metric("answer")
+    assert "answer" not in available_metrics()
+    with pytest.raises(KeyError, match="unknown metric"):
+        extract_metrics(res, ["answer"])
+
+
+def test_metrics_safe_on_empty_runs():
+    from repro.core import DeviceFleet
+    fleet = DeviceFleet.homogeneous(3)
+    res = fleet.run(WorkloadSpec().writes(n=1), policy="split",
+                    backend="event", jitter=False)
+    empty = res[2]
+    assert len(empty) == 0
+    assert empty.iops == 0.0 and empty.bandwidth_bytes == 0.0
+    assert empty.summary(["iops", "lat_mean_us", "makespan_us"]) == \
+        {"iops": 0.0, "lat_mean_us": 0.0, "makespan_us": 0.0}

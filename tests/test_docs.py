@@ -1,0 +1,80 @@
+"""Docs tree integrity: intra-repo markdown links resolve, docstring
+examples run (doctest), and docs/observations.md stays in sync with the
+observation registry.  CI's ``docs`` job runs exactly this module.
+"""
+import doctest
+import importlib
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+MD_FILES = sorted(p for p in REPO.glob("**/*.md")
+                  if not any(part.startswith(".") or part in
+                             ("node_modules", "results", "related")
+                             for part in p.relative_to(REPO).parts))
+
+#: Public modules whose docstring examples must be runnable.
+DOCTEST_MODULES = (
+    "repro.core.device",
+    "repro.core.workload",
+    "repro.core.latency",
+    "repro.core.metrics",
+    "repro.experiments",
+    "repro.experiments.registry",
+    "repro.experiments.runner",
+)
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_markdown_corpus_nonempty():
+    names = {p.name for p in MD_FILES}
+    assert {"README.md", "architecture.md", "observations.md",
+            "api.md"} <= names
+
+
+@pytest.mark.parametrize("md", MD_FILES, ids=lambda p: str(p.relative_to(REPO)))
+def test_intra_repo_markdown_links_resolve(md):
+    broken = []
+    for target in _LINK.findall(md.read_text(encoding="utf-8")):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).resolve().exists():
+            broken.append(target)
+    assert not broken, f"{md}: broken relative links {broken}"
+
+
+@pytest.mark.parametrize("module", DOCTEST_MODULES)
+def test_docstring_examples_run(module):
+    mod = importlib.import_module(module)
+    res = doctest.testmod(mod, verbose=False,
+                          optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert res.attempted > 0, f"{module}: no doctest examples found"
+    assert res.failed == 0, f"{module}: {res.failed} doctest failures"
+
+
+def test_observations_doc_in_sync_with_registry():
+    from repro.experiments import all_experiments
+    text = (REPO / "docs" / "observations.md").read_text(encoding="utf-8")
+    for exp in all_experiments():
+        assert exp.name in text, \
+            f"docs/observations.md is missing registry entry {exp.name}"
+        for knob in exp.knobs:
+            assert knob in text, \
+                f"docs/observations.md is missing {exp.name} knob {knob}"
+        for t in exp.tests:
+            assert t.split("::")[-1] in text, \
+                f"docs/observations.md is missing {exp.name} test {t}"
+    assert f"| #{len(all_experiments())} |" in text
+
+
+def test_readme_quickstart_mentions_experiments_cli():
+    text = (REPO / "README.md").read_text(encoding="utf-8")
+    assert "python -m repro.experiments run --all" in text
+    assert "docs/observations.md" in text

@@ -1,0 +1,189 @@
+"""Observation registry + fleet-batched experiment runner.
+
+Acceptance: all 13 observation experiments execute as ONE fleet-batched
+sweep and every ``check()`` passes on both simulation backends.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import KiB, WorkloadSpec
+from repro.experiments import (
+    Check, Experiment, ExperimentRunner, SweepPoint, all_experiments,
+    get_experiment, register_experiment, render_report, unregister_experiment,
+)
+from repro.experiments.__main__ import main as cli_main
+
+
+# -- registry ------------------------------------------------------------------
+def test_registry_has_all_13_observations():
+    exps = all_experiments()
+    assert [e.obs for e in exps] == list(range(1, 14))
+    assert len({e.name for e in exps}) == 13
+
+
+def test_get_experiment_lookup_forms():
+    e = get_experiment("obs04_append_vs_write")
+    assert get_experiment(4) is e
+    assert get_experiment("obs4") is e
+    assert get_experiment("obs04") is e
+    assert get_experiment("append_vs_write") is e      # unique substring
+    with pytest.raises(KeyError, match="unknown experiment"):
+        get_experiment("obs_nope")
+    with pytest.raises(KeyError, match="no experiment"):
+        get_experiment(99)
+
+
+def _dummy_experiment(name="dummy_exp", obs=1):
+    return Experiment(
+        name=name, obs=obs, title="t", claim="c", figure="f",
+        points=(SweepPoint("p", WorkloadSpec().writes(n=4, size=4 * KiB)),),
+        extract=lambda ctx: {"n": float(len(ctx["p"]))},
+        check=lambda m: (Check("has_requests", m["n"] == 4.0, f"n={m['n']}"),))
+
+
+def test_register_experiment_collision_warns_and_unregister_roundtrip():
+    exp = _dummy_experiment()
+    register_experiment(exp)
+    try:
+        with pytest.warns(RuntimeWarning, match="already registered"):
+            register_experiment(_dummy_experiment())
+        # replace=True and re-registering the current object stay silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            current = register_experiment(_dummy_experiment(), replace=True)
+            register_experiment(current)
+    finally:
+        unregister_experiment("dummy_exp")
+    with pytest.raises(KeyError):
+        get_experiment("dummy_exp")
+    unregister_experiment("dummy_exp")  # idempotent
+
+
+def test_experiment_validation():
+    with pytest.raises(ValueError, match="obs must be"):
+        _dummy_experiment(obs=14)
+    bad = _dummy_experiment()
+    with pytest.raises(ValueError, match="duplicate sweep-point labels"):
+        Experiment(name="x", obs=1, title="t", claim="c", figure="f",
+                   points=bad.points + bad.points,
+                   extract=bad.extract, check=bad.check)
+
+
+# -- the acceptance criterion --------------------------------------------------
+@pytest.mark.parametrize("backend", ["vectorized", "event"])
+def test_all_13_checks_pass_on_backend(backend):
+    results = ExperimentRunner(backend=backend).run()
+    assert len(results) == 13
+    failures = [str(c) for r in results for c in r.checks if not c.ok]
+    assert not failures, failures
+    assert all(r.backend == backend for r in results)
+    # one fleet-batched sweep covers every sweep point
+    assert sum(r.n_requests for r in results) > 50_000
+
+
+def test_runner_subset_and_custom_seed():
+    res = ExperimentRunner(["obs4", 9], backend="event", seed=3).run()
+    assert [r.obs for r in res] == [4, 9]
+    assert all(r.passed for r in res)
+
+
+def test_runner_deterministic_across_backends():
+    a = ExperimentRunner(["obs13"], backend="event").run()[0]
+    b = ExperimentRunner(["obs13"], backend="vectorized").run()[0]
+    for k in a.metrics:
+        assert a.metrics[k] == pytest.approx(b.metrics[k], rel=1e-9), k
+
+
+# -- artifacts -----------------------------------------------------------------
+def test_artifacts_json_and_report(tmp_path):
+    runner = ExperimentRunner(["obs4", "obs13"])
+    results = runner.run()
+    paths = runner.write_artifacts(results, out_dir=str(tmp_path))
+    data = json.loads((tmp_path / "obs04_append_vs_write.json").read_text())
+    assert data["obs"] == 4 and data["passed"] is True
+    assert data["metrics"]["gap_pct"] == pytest.approx(23.42, abs=0.5)
+    assert data["knobs"] and data["tests"] and data["claim"]
+    report = (tmp_path / "report.md").read_text()
+    assert "observations.md" in report        # cross-links the docs tree
+    assert "obs13_reset_inflation" in report
+    assert paths["report"].endswith("report.md")
+
+
+def test_report_links_docs_tree_relative(tmp_path):
+    # when the artifact dir lives inside the repo, the report's docs link
+    # resolves relative to it
+    out = tmp_path / "repo" / "results" / "experiments"
+    out.mkdir(parents=True)
+    docs = tmp_path / "repo" / "docs"
+    docs.mkdir()
+    (docs / "observations.md").write_text("# map\n")
+    results = ExperimentRunner(["obs4"]).run()
+    report = render_report(results, out_dir=str(out))
+    assert "../../docs/observations.md" in report
+
+
+# -- CLI -----------------------------------------------------------------------
+def test_cli_run_and_list(tmp_path, capsys):
+    assert cli_main(["list"]) == 0
+    assert "obs04_append_vs_write" in capsys.readouterr().out
+    rc = cli_main(["run", "--only", "obs4,obs9", "--backend", "event",
+                   "--out", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "2/2 experiments passed" in out
+    assert (tmp_path / "report.md").exists()
+    assert (tmp_path / "obs09_transitions.json").exists()
+
+
+def test_cli_requires_selection(capsys):
+    assert cli_main(["run"]) == 2
+    # an effectively-empty --only (stray comma / empty shell var) is
+    # rejected too, not silently "0/0 passed"
+    assert cli_main(["run", "--only", ","]) == 2
+
+
+def test_cli_unknown_key_clean_error(capsys):
+    assert cli_main(["run", "--only", "obs99"]) == 2
+    assert "no experiment" in capsys.readouterr().err
+    assert cli_main(["run", "--only", "obs_nope"]) == 2
+    assert "unknown experiment" in capsys.readouterr().err
+
+
+def test_cli_reports_failure_nonzero(tmp_path):
+    bad = Experiment(
+        name="always_fails", obs=1, title="t", claim="c", figure="f",
+        points=(SweepPoint("p", WorkloadSpec().writes(n=4, size=4 * KiB)),),
+        extract=lambda ctx: {"n": float(len(ctx["p"]))},
+        check=lambda m: (Check("nope", False, "forced failure"),))
+    register_experiment(bad)
+    try:
+        assert cli_main(["run", "--only", "always_fails",
+                         "--out", str(tmp_path)]) == 1
+        data = json.loads((tmp_path / "always_fails.json").read_text())
+        assert data["passed"] is False
+    finally:
+        unregister_experiment("always_fails")
+
+
+# -- fleet stacking details ----------------------------------------------------
+def test_obs12_points_share_seed_in_batched_run():
+    # quiet/loud completions compare exactly because the runner pins both
+    # points to the same seed inside the heterogeneous fleet batch
+    res = ExperimentRunner(["obs12"]).run()[0]
+    assert res.metrics["max_read_shift_us"] == 0.0
+
+
+def test_length_buckets_bound_padding_waste():
+    from repro.core.fleet import length_buckets
+    lens = [40, 45, 30_000, 90, 24_000, 120]
+    buckets = length_buckets(lens)
+    assert sorted(i for b in buckets for i in b) == list(range(len(lens)))
+    for b in buckets:
+        vals = [lens[i] for i in b]
+        assert max(vals) <= 4.0 * max(min(vals), 1)
+    assert length_buckets([]) == []
+    assert length_buckets([0, 0, 3]) == [[0, 1, 2]]   # zeros clamp to base 1
+    assert length_buckets([0, 0, 5]) == [[0, 1], [2]]

@@ -388,3 +388,59 @@ def test_fleet_run_result_aggregates():
     pooled = res.latency_stats(OpType.WRITE)
     assert pooled.n == 4 * 500
     assert (res.completion_us > 0).all()
+
+
+# -- shard edge cases (more devices than streams/requests) ---------------------
+def test_shard_split_more_devices_than_requests_builds_cleanly():
+    wl = WorkloadSpec().writes(n=3, qd=1)
+    shards = wl.shard(8, policy="split")
+    assert len(shards) == 8
+    # remainder shards are empty but still buildable (no allow_empty needed)
+    assert [len(s.build()) for s in shards] == [1, 1, 1, 0, 0, 0, 0, 0]
+    fres = DeviceFleet.homogeneous(8).run(wl, policy="split", backend="event",
+                                          jitter=False)
+    assert [len(r) for r in fres] == [1, 1, 1, 0, 0, 0, 0, 0]
+    assert fres.total_iops >= 0.0
+
+
+def test_shard_round_robin_empty_shards_build_cleanly():
+    shards = WorkloadSpec().writes(n=50).shard(4, policy="round_robin")
+    assert [len(s.build()) for s in shards] == [50, 0, 0, 0]
+
+
+def test_shard_split_zero_length_remainder_of_sweep_streams():
+    wl = WorkloadSpec().reset_sweep((0.5, 1.0), n_per_level=3, pause_us=0)
+    shards = wl.shard(8, policy="split")
+    built = [s.build() for s in shards]
+    # 3 requests per occupancy level split across 8 devices: 3 devices get
+    # one request per level, the rest lower to empty traces
+    assert [len(t) for t in built] == [2, 2, 2, 0, 0, 0, 0, 0]
+    total = sum(len(t) for t in built)
+    assert total == len(wl.build())
+
+
+def test_shard_split_drops_zero_n_streams_but_keeps_totals():
+    wl = WorkloadSpec().writes(n=0).reads(n=5)
+    shards = wl.shard(3, policy="split")
+    assert sum(len(s.build()) for s in shards) == 5
+    assert all(all(st.n > 0 for st in s.streams) for s in shards)
+
+
+def test_unsharded_empty_spec_still_raises():
+    with pytest.raises(ValueError, match="empty WorkloadSpec"):
+        WorkloadSpec().build()
+
+
+def test_fleet_run_with_explicit_seeds_matches_loop():
+    wl = WorkloadSpec().writes(n=200, qd=2)
+    seeds = [11, 29, 47]
+    fleet = DeviceFleet.homogeneous(3)
+    fres = fleet.run(wl, policy="replicate", backend="vectorized",
+                     seeds=seeds, jitter=True)
+    for i, seed in enumerate(seeds):
+        solo = ZnsDevice().run(wl, backend="vectorized", seed=seed,
+                               jitter=True)
+        np.testing.assert_allclose(fres[i].sim.complete, solo.sim.complete,
+                                   rtol=1e-9, atol=1e-6)
+    with pytest.raises(ValueError, match="seeds"):
+        fleet.run(wl, policy="replicate", seeds=[1, 2])
