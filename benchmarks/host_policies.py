@@ -1,0 +1,53 @@
+"""Host placement-policy comparison: every (scenario, policy) combo as
+ONE fleet-batched simulation, ranked per scenario.
+
+``python -m benchmarks.run --only host_policies [--quick]``
+
+Rows: per combination — makespan, user bandwidth, write amplification,
+reclaim throughput; plus one ``rank`` row per scenario (best policy
+first, by makespan with WA tiebreak) and a gate asserting the expected
+qualitative structure (circular-log reclaims at WA 1.0 under the
+fill-don't-finish policies; mixed-lifetime scenarios pay WA > 1).
+"""
+from __future__ import annotations
+
+from .common import Row, timed
+
+
+def run(quick: bool = False) -> list:
+    from repro.host import compare_policies, rank_policies
+
+    scale = 0.5 if quick else 1.0
+    backend = "vectorized"
+    rows, us = timed(
+        lambda: compare_policies(backend=backend, scale=scale), repeats=1)
+    out: list = [("host_policies/compare_run", us,
+                  f"combos={len(rows)};backend={backend};scale={scale}")]
+    for r in rows:
+        name = f"host_policies/{r['scenario']}/{r['policy']}"
+        out.append((name + "/makespan", r["makespan_s"] * 1e6,
+                    f"{r['user_bandwidth_mibs']:.1f}MiB/s"))
+        out.append((name + "/write_amp", 0.0,
+                    f"{r['write_amplification']:.3f}"))
+        out.append((name + "/reclaim", 0.0,
+                    f"{r['reclaim_mibs']:.1f}MiB/s;"
+                    f"zones_reset={int(r['zones_reset'])}"))
+    ranking = rank_policies(rows)
+    for scen, order in ranking.items():
+        out.append((f"host_policies/{scen}/rank", 0.0, ">".join(order)))
+    # Gates: the qualitative structure the docs/host.md table promises.
+    circ = [r for r in rows if r["scenario"] == "circular-log"]
+    wa_ok = all(r["write_amplification"] == 1.0 for r in circ
+                if r["zones_reset"] > 0)
+    mixed = [r for r in rows if r["scenario"] in ("lsm", "cache")]
+    mixed_ok = all(r["write_amplification"] > 1.0 for r in mixed)
+    out.append(("host_policies/gate_circular_wa1", 0.0,
+                "ok" if wa_ok else "=FAIL"))
+    out.append(("host_policies/gate_mixed_wa_gt1", 0.0,
+                "ok" if mixed_ok else "=FAIL"))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import fmt_rows
+    print(fmt_rows(run()))

@@ -150,11 +150,17 @@ class ZoneManager:
         zi.was_finished = False
         return occ, finished
 
-    def write(self, z: int, nbytes: int, *, append: bool = False) -> int:
+    def write(self, z: int, nbytes: int, *, append: bool = False,
+              at: Optional[int] = None) -> int:
         """Advance the write pointer; returns the LBA (bytes) written at.
 
         For ``append`` the returned LBA is what the device reports on
-        completion (§II-B); for ``write`` the host must already know it.
+        completion (§II-B); for ``write`` the host must already know it —
+        passing ``at`` (a byte offset within the zone) asserts that
+        knowledge: a regular write whose offset is not the current write
+        pointer is rejected (NVMe "Zone Invalid Write"), exactly as the
+        ZNS conformance suites probe it.  ``at`` on an append is ignored
+        (the device chooses the location).
         """
         zi = self.zones[z]
         op = OpType.APPEND if append else OpType.WRITE
@@ -162,6 +168,11 @@ class ZoneManager:
             raise ZoneError(f"{op.name} on zone {z} in state {zi.state.name}")
         if nbytes <= 0:
             raise ZoneError("write of <= 0 bytes")
+        if not append and at is not None and at != zi.write_pointer:
+            raise ZoneError(
+                f"zone {z} invalid write: offset {at} != write pointer "
+                f"{zi.write_pointer}"
+            )
         if zi.write_pointer + nbytes > self.spec.zone_cap_bytes:
             raise ZoneError(
                 f"zone {z} overflow: wp={zi.write_pointer} + {nbytes} "
@@ -174,6 +185,25 @@ class ZoneManager:
         if zi.write_pointer == self.spec.zone_cap_bytes:
             zi.state = ZoneState.FULL
         return lba
+
+    def read(self, z: int, offset: int = 0, nbytes: int = 1) -> None:
+        """Legality check for a read of ``nbytes`` at byte ``offset``.
+
+        Reads are legal from every non-OFFLINE state but must not cross
+        the zone's LBA boundary (the ZN540 does not report the
+        cross-zone-read capability bit; conformance suites assert the
+        boundary error)."""
+        zi = self.zones[z]
+        if zi.state == ZoneState.OFFLINE:
+            raise ZoneError(f"read on OFFLINE zone {z}")
+        if nbytes <= 0:
+            raise ZoneError("read of <= 0 bytes")
+        if offset < 0 or offset + nbytes > self.spec.zone_size_bytes:
+            raise ZoneError(
+                f"zone {z} boundary error: read [{offset}, "
+                f"{offset + nbytes}) crosses zone size "
+                f"{self.spec.zone_size_bytes}"
+            )
 
     def read_ok(self, z: int) -> bool:
         return self.zones[z].state != ZoneState.OFFLINE

@@ -1,21 +1,31 @@
-"""CLI for the observation registry.
+"""CLI for the observation registry + host-scenario sweeps.
 
     python -m repro.experiments run --all [--backend vectorized]
     python -m repro.experiments run --only obs4,obs10 --out results/exp
     python -m repro.experiments list
+    python -m repro.experiments host [--scenarios lsm,cache]
+                                     [--policies greedy-open,striped]
 
 ``run`` executes the selected experiments as one fleet-batched sweep,
 writes per-experiment JSON + a markdown report (cross-linking
 docs/observations.md), prints a summary table, and exits non-zero if any
-check fails.
+check fails.  ``host`` runs the application-scenario x placement-policy
+matrix (`repro.host`) the same way — every combination is one member of
+a single :class:`repro.core.DeviceFleet` call — and prints the
+per-scenario policy ranking (see docs/host.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 from .registry import all_experiments
 from .runner import DEFAULT_OUT_DIR, ExperimentRunner
+
+#: Artifact directory of the ``host`` subcommand.
+HOST_OUT_DIR = os.path.join("results", "host")
 
 
 def _cmd_list() -> int:
@@ -53,11 +63,65 @@ def _cmd_run(args) -> int:
     return 0 if n_pass == len(results) else 1
 
 
+def _cmd_host(args) -> int:
+    from repro.host import (
+        available_placement_policies, available_scenarios, compare_policies,
+        rank_policies,
+    )
+
+    scenarios = [s for s in args.scenarios.split(",") if s] or None
+    policies = [p for p in args.policies.split(",") if p] or None
+    if args.list:
+        for s in available_scenarios():
+            print(f"scenario  {s}")
+        for p in available_placement_policies():
+            print(f"policy    {p}")
+        return 0
+    try:
+        rows = compare_policies(scenarios, policies, backend=args.backend,
+                                seed=args.seed, scale=args.scale)
+    except KeyError as e:
+        print(f"host: {e.args[0]}", file=sys.stderr)
+        return 2
+    os.makedirs(args.out, exist_ok=True)
+    out_path = os.path.join(args.out, "host_policies.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+    width = max(len(r["policy"]) for r in rows)
+    for r in rows:
+        print(f"{r['scenario']:14s} {r['policy']:{width}s} "
+              f"makespan={r['makespan_s'] * 1e3:9.2f}ms "
+              f"WA={r['write_amplification']:.3f} "
+              f"reclaim={r['reclaim_mibs']:8.1f}MiB/s "
+              f"({r['n_requests']} reqs)")
+    print()
+    for scen, order in rank_policies(rows).items():
+        print(f"{scen:14s} best-first: {' > '.join(order)}")
+    print(f"\n{len(rows)} combinations in one fleet run "
+          f"(backend={args.backend}); results: {out_path}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.experiments",
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     sub.add_parser("list", help="list registered experiments")
+    host = sub.add_parser(
+        "host", help="host-scenario x placement-policy sweep (repro.host)")
+    host.add_argument("--scenarios", default="",
+                      help="comma-separated scenario names (default: all)")
+    host.add_argument("--policies", default="",
+                      help="comma-separated placement policies (default: all)")
+    host.add_argument("--backend", default="vectorized",
+                      choices=("event", "vectorized", "auto"))
+    host.add_argument("--scale", type=float, default=1.0,
+                      help="scenario size multiplier")
+    host.add_argument("--seed", type=int, default=0)
+    host.add_argument("--out", default=HOST_OUT_DIR,
+                      help=f"artifact directory (default {HOST_OUT_DIR})")
+    host.add_argument("--list", action="store_true",
+                      help="list scenarios/policies instead of running")
     run = sub.add_parser("run", help="run experiments (one batched sweep)")
     run.add_argument("--all", action="store_true",
                      help="run every registered experiment")
@@ -74,7 +138,11 @@ def main(argv=None) -> int:
     run.add_argument("--verbose", action="store_true",
                      help="print every check, not just failures")
     args = ap.parse_args(argv)
-    return _cmd_list() if args.cmd == "list" else _cmd_run(args)
+    if args.cmd == "list":
+        return _cmd_list()
+    if args.cmd == "host":
+        return _cmd_host(args)
+    return _cmd_run(args)
 
 
 if __name__ == "__main__":

@@ -23,10 +23,10 @@ Example::
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import LatencyParams, WorkloadSpec, ZNSDeviceSpec
+from repro.core.registry import Registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,25 +95,19 @@ class Experiment:
                              f"{labels}")
 
 
-_REGISTRY: Dict[str, Experiment] = {}
+_REGISTRY: Registry = Registry("experiment")
 
 
 def register_experiment(exp: Experiment, *, replace: bool = False
                         ) -> Experiment:
-    """Add an experiment to the registry (warns on name collisions,
-    mirroring :func:`repro.core.register_backend`)."""
-    if not replace and exp.name in _REGISTRY \
-            and _REGISTRY[exp.name] is not exp:
-        warnings.warn(
-            f"experiment {exp.name!r} is already registered; replacing it. "
-            f"Pass replace=True to silence this warning.",
-            RuntimeWarning, stacklevel=2)
-    _REGISTRY[exp.name] = exp
-    return exp
+    """Add an experiment to the registry (warns on name collisions via
+    the shared :class:`repro.core.registry.Registry`, mirroring
+    :func:`repro.core.register_backend`)."""
+    return _REGISTRY.register(exp.name, exp, replace=replace)
 
 
 def unregister_experiment(name: str) -> None:
-    _REGISTRY.pop(name, None)
+    _REGISTRY.unregister(name)
 
 
 def get_experiment(key) -> Experiment:

@@ -1,0 +1,38 @@
+"""Host storage-stack layer: zone allocation, reclaim scheduling, and
+log-structured volumes over the calibrated ZNS device model.
+
+The paper closes with guidelines for ZNS *application* developers; this
+package is where those guidelines become executable host policy:
+
+* :class:`ZoneAllocator` — pluggable placement policies
+  (``greedy-open`` / ``striped`` / ``lifetime-binned``,
+  :func:`register_placement_policy`) bounded by the device's
+  max-open/max-active limits, following fill-don't-finish (R3).
+* :class:`ReclaimScheduler` — host GC as reset traffic concurrent with
+  foreground I/O: occupancy-dependent reset costs (Obs#10), Obs#13
+  inflation charged to reclaim throughput (never the write path,
+  Obs#12), write-amplification accounting for relocation.
+* :class:`LogStructuredVolume` — object writes/reads/deletes/GC on one
+  device, compiled to :class:`repro.core.WorkloadSpec`\\ s so whole app
+  scenarios simulate batched on either backend.
+* scenarios — ``lsm`` / ``circular-log`` / ``cache`` generators
+  (:func:`register_scenario`) + :func:`compare_policies`, which runs
+  every (scenario, policy) combination as one
+  :class:`repro.core.DeviceFleet` call.
+* :mod:`repro.host.conformance` — replay/differential validation of zone
+  op sequences (imperative manager vs vectorized table semantics).
+
+    from repro.host import LogStructuredVolume, compare_policies
+    rows = compare_policies(["lsm"], backend="vectorized")
+"""
+from .allocator import (  # noqa: F401
+    Extent, StreamHint, ZoneAllocator, available_placement_policies,
+    register_placement_policy, unregister_placement_policy,
+)
+from .reclaim import ReclaimReport, ReclaimScheduler  # noqa: F401
+from .volume import HostObject, HostRunResult, LogStructuredVolume  # noqa: F401
+from .scenarios import (  # noqa: F401
+    HOST_SCENARIO_SPEC, ScenarioBuild, available_scenarios, build_scenario,
+    compare_policies, rank_policies, register_scenario, unregister_scenario,
+)
+from . import conformance  # noqa: F401

@@ -40,6 +40,8 @@ def make_reshard_plan(old_hosts, new_hosts, *, model_parallel: int = 16,
                       chips_per_host: int = 4) -> ReshardPlan:
     old_hosts = tuple(sorted(old_hosts))
     new_hosts = tuple(sorted(new_hosts))
+    if not new_hosts:
+        raise ValueError("cannot reshard onto an empty healthy host set")
     n = len(new_hosts)
     data_shards = {h: (i, n) for i, h in enumerate(new_hosts)}
     # old shard ids were 0..len(old)-1; round-robin them over new hosts

@@ -33,14 +33,11 @@ import numpy as np
 
 from repro.core import DeviceFleet, KiB, MiB, OpType, Stack, ZNSDeviceSpec, \
     ZnsDevice
-from repro.core.state_machine import ZoneError
+from repro.host import Extent, ReclaimScheduler, ZoneAllocator
 
-
-@dataclasses.dataclass
-class WritePlanEntry:
-    zone: int
-    offset: int          # byte offset within the zone
-    nbytes: int
+#: A write-plan entry IS a host-layer extent (zone, offset, nbytes); the
+#: alias survives for manifest/readers of the pre-host-layer API.
+WritePlanEntry = Extent
 
 
 @dataclasses.dataclass
@@ -55,15 +52,19 @@ class HostWriteReport:
 
 
 class ZnsHostDevice:
-    """One host's ZNS device session: zone accounting + calibrated timing.
+    """One host's ZNS device session: a client of the host storage
+    layer (`repro.host`) + calibrated timing.
 
-    Owns a :class:`repro.core.ZnsDevice` handle; ``zm``/``lat``/``tm``
-    remain as aliases into it for existing callers.
+    Placement and reclaim policy live behind :class:`ZoneAllocator`
+    (``greedy-open`` = the paper's R3 bin-packing) and
+    :class:`ReclaimScheduler` (R5 concurrent resets, Obs#13 charged to
+    reclaim); ``zm``/``lat``/``tm`` remain as aliases for existing
+    callers.
     """
 
     def __init__(self, host: int, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
                  *, stripe_bytes: int = 1 * MiB, append_qd: int = 4,
-                 concurrent_zones: int = 1):
+                 concurrent_zones: int = 1, policy: str = "greedy-open"):
         self.host = host
         self.device = ZnsDevice(spec)
         self.spec = self.device.spec
@@ -76,43 +77,27 @@ class ZnsHostDevice:
         # zone 0 reserved: metadata/manifest zone (R1 writes at QD1)
         self.meta_zone = 0
         self.zm.open(self.meta_zone)
-        self._next_zone = 1
+        self.allocator = ZoneAllocator(zones=self.zm, policy=policy,
+                                       reserved=(self.meta_zone,),
+                                       stripe_bytes=stripe_bytes)
+        self.reclaim = ReclaimScheduler(self.device,
+                                        allocator=self.allocator,
+                                        io_ctx=OpType.APPEND,
+                                        relocation_stripe=stripe_bytes,
+                                        relocation_qd=append_qd)
         self.clock_us = 0.0
-        self.reset_backlog: list[int] = []
+
+    @property
+    def reset_backlog(self) -> list:
+        return self.reclaim.backlog
 
     # -- placement (R2/R3) ---------------------------------------------------
     def plan(self, nbytes: int) -> list[WritePlanEntry]:
-        """Bin-pack a payload into zones, filling each to capacity.
-
-        Planning uses a shadow of write pointers so multi-zone payloads
-        reserve consecutive zones without mutating device state.
-        """
-        cap = self.spec.zone_cap_bytes
-        shadow: dict[int, int] = {}
-        entries = []
-        remaining = nbytes
-        while remaining > 0:
-            z = self._alloc_zone(shadow)
-            wp = shadow.get(z, self.zm.write_pointer(z))
-            take = min(remaining, cap - wp)
-            entries.append(WritePlanEntry(z, wp, take))
-            shadow[z] = wp + take
-            remaining -= take
-        return entries
-
-    def _alloc_zone(self, shadow: Optional[dict] = None) -> int:
-        """First zone (reusing partially-filled open zones — R3) with
-        remaining capacity under the plan shadow."""
-        shadow = shadow or {}
-        cap = self.spec.zone_cap_bytes
-        for z in range(1, self.spec.num_zones):
-            st = self.zm.state(z).name
-            wp = shadow.get(z, self.zm.write_pointer(z))
-            writable = st in ("IMPLICIT_OPEN", "EXPLICIT_OPEN", "CLOSED") \
-                or (st == "EMPTY")
-            if writable and wp < cap:
-                return z
-        raise ZoneError("device full: no writable zones (run gc())")
+        """Bin-pack a payload into zones, filling each to capacity (R3),
+        via the host layer's ``greedy-open`` placement policy.  Planning
+        shadows write pointers, so multi-zone payloads reserve zones
+        without mutating device state."""
+        return self.allocator.plan(nbytes, stream=self.host)
 
     # -- timing (R2/R4) ---------------------------------------------------------
     def payload_scan_args(self, nbytes: int
@@ -146,13 +131,9 @@ class ZnsHostDevice:
         return float(done[-1]) / 1e6, len(issue)
 
     def apply_writes(self, entries: list[WritePlanEntry]) -> None:
-        for e in entries:
-            # appends in stripe units; ZoneManager enforces the state machine
-            remaining = e.nbytes
-            while remaining > 0:
-                take = min(remaining, self.stripe)
-                self.zm.write(e.zone, take, append=True)
-                remaining -= take
+        """Commit planned extents through the allocator (the zone state
+        machine enforces legality and limits)."""
+        self.allocator.commit(entries, append=True)
 
     def manifest_write_us(self, nbytes: int = 4 * KiB) -> float:
         return float(self.lat.io_service_us(OpType.WRITE, nbytes,
@@ -160,21 +141,14 @@ class ZnsHostDevice:
 
     # -- reclaim (R5) -----------------------------------------------------------
     def schedule_reset(self, zones: list[int]) -> None:
-        self.reset_backlog.extend(zones)
+        self.reclaim.schedule(zones)
 
     def run_gc(self, *, concurrent_io: bool = True) -> float:
-        """Reset backlog zones; returns modeled seconds.  Concurrent I/O
-        inflates reset latency (Obs#13) but resets never delay writes
-        (Obs#12), so this cost is reclaim-throughput only."""
-        total_us = 0.0
-        for z in self.reset_backlog:
-            occ, finished = self.zm.reset(z)
-            us = float(self.lat.reset_us(occ, finished))
-            if concurrent_io:
-                us *= self.lat.reset_inflation([OpType.APPEND])
-            total_us += us
-        self.reset_backlog = []
-        return total_us / 1e6
+        """Drain the reclaim backlog; returns modeled seconds.
+        Concurrent I/O inflates reset latency (Obs#13) but resets never
+        delay writes (Obs#12), so this cost is reclaim-throughput only —
+        see :class:`repro.host.ReclaimScheduler`."""
+        return self.reclaim.drain(concurrent_io=concurrent_io).seconds
 
 
 class ZonedCheckpointStore:

@@ -1,0 +1,133 @@
+"""Shared test fixtures + hypothesis strategies for the ZNS model suite.
+
+Plain helpers (spec variants, mixed workloads, fleet members) are
+importable without hypothesis; the strategy factories are defined only
+when hypothesis is present (``HAVE_HYPOTHESIS`` guards them, matching
+the suite's importorskip convention).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    KiB, MiB, OpType, Trace, WorkloadSpec, ZNSDeviceSpec,
+)
+from repro.core.emulator_models import EMULATOR_PROFILES
+
+try:
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+# ---------------------------------------------------------------------------
+# Plain (hypothesis-free) helpers
+# ---------------------------------------------------------------------------
+#: Heterogeneous device geometries exercised by the fleet suites.
+SPEC_VARIANTS = (
+    ZNSDeviceSpec(),
+    ZNSDeviceSpec(append_parallelism=4),
+    ZNSDeviceSpec(num_zones=512, max_open_zones=12),
+)
+
+#: §IV latency profiles, in fidelity order.
+PROFILE_NAMES = ("ours", "nvmevirt", "femu")
+
+#: Small geometry for state-machine / allocator tests (fast fills).
+SMALL_SPEC = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                           num_zones=32, max_open_zones=4,
+                           max_active_zones=6)
+
+
+def fleet_members(n: int):
+    """n heterogeneous (spec, params) members cycling the variants."""
+    return [(SPEC_VARIANTS[i % len(SPEC_VARIANTS)],
+             EMULATOR_PROFILES[PROFILE_NAMES[i % len(PROFILE_NAMES)]])
+            for i in range(n)]
+
+
+def mixed_workload(scale: int, *, with_mgmt: bool = True) -> WorkloadSpec:
+    """The suite's canonical mixed workload: writes + reads + appends,
+    optionally with the full management-op complement."""
+    wl = (WorkloadSpec()
+          .writes(n=6 * scale, qd=4, zone=0)
+          .reads(n=6 * scale, qd=8, zone=100, nzones=50)
+          .appends(n=4 * scale, qd=2, zone=200))
+    if with_mgmt:
+        wl = (wl.resets(n=max(scale // 2, 1), occupancy=1.0, nzones=64,
+                        io_ctx=OpType.READ)
+              .finishes(n=max(scale // 10, 1), occupancy=0.3)
+              .opens(n=2).closes(n=2))
+    return wl
+
+
+def random_io_trace(n: int, qd: int, seed: int, *,
+                    n_zones: int = 10, n_threads: int = 4) -> Trace:
+    """Random mixed READ/WRITE/APPEND trace (engine-invariant tests)."""
+    rng = np.random.default_rng(seed)
+    ops = rng.choice([int(OpType.READ), int(OpType.WRITE),
+                      int(OpType.APPEND)], size=n)
+    return Trace.build(
+        op=ops, zone=rng.integers(0, n_zones, n),
+        size=rng.choice([4 * KiB, 8 * KiB, 32 * KiB], n),
+        issue=np.sort(rng.uniform(0, 1e5, n)),
+        thread=rng.integers(0, n_threads, n), qd=np.full(n, qd))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis strategies
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    def io_trace_args():
+        """(n, qd, seed) triples for :func:`random_io_trace`."""
+        return st.tuples(st.integers(1, 200), st.integers(1, 8),
+                         st.integers(0, 3))
+
+    @st.composite
+    def small_zns_specs(draw):
+        """Small randomized geometries with ZNS-consistent invariants
+        (cap <= size, active >= open, few zones so fills are cheap)."""
+        max_open = draw(st.integers(2, 6))
+        return ZNSDeviceSpec(
+            zone_size_bytes=1 << 20,
+            zone_cap_bytes=draw(st.sampled_from([1 << 18, 1 << 19])),
+            num_zones=draw(st.integers(8, 48)),
+            max_open_zones=max_open,
+            max_active_zones=max_open + draw(st.integers(0, 4)),
+        )
+
+    def latency_profiles():
+        """Calibrated parameter pytrees (§IV emulator profiles)."""
+        return st.sampled_from([EMULATOR_PROFILES[n] for n in PROFILE_NAMES])
+
+    def fleet_specs():
+        """Fleet-grade device geometries (ZN540-scale variants)."""
+        return st.sampled_from(SPEC_VARIANTS)
+
+    @st.composite
+    def mixed_workload_specs(draw, max_scale: int = 12,
+                             with_mgmt: bool | None = None):
+        """Randomly scaled :func:`mixed_workload` specs."""
+        scale = draw(st.integers(2, max_scale))
+        mgmt = draw(st.booleans()) if with_mgmt is None else with_mgmt
+        return mixed_workload(scale, with_mgmt=mgmt)
+
+    @st.composite
+    def allocation_requests(draw, spec: ZNSDeviceSpec):
+        """A feasible list of (nbytes, stream, lifetime) allocations:
+        total stays under half the device capacity so every policy can
+        place them without reclaim."""
+        cap = spec.zone_cap_bytes
+        budget = spec.capacity_bytes // 2
+        n = draw(st.integers(1, 24))
+        out = []
+        total = 0
+        for _ in range(n):
+            nbytes = draw(st.integers(1, 2 * cap))
+            if total + nbytes > budget:
+                break
+            total += nbytes
+            out.append((nbytes, draw(st.integers(0, 3)),
+                        draw(st.one_of(st.none(), st.integers(0, 5)))))
+        return out if out else [(cap // 2, 0, None)]

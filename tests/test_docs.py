@@ -25,6 +25,7 @@ DOCTEST_MODULES = (
     "repro.experiments",
     "repro.experiments.registry",
     "repro.experiments.runner",
+    "repro.host.scenarios",
 )
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -1,4 +1,5 @@
-"""Event-engine invariants (hypothesis) + steady-state model sanity."""
+"""Event-engine invariants (hypothesis, via the shared ``strategies``
+module) + steady-state model sanity."""
 import numpy as np
 import pytest
 
@@ -7,22 +8,17 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (
-    KiB, OpType, Stack, ThroughputModel, Trace, simulate,
+    KiB, OpType, Stack, ThroughputModel, simulate,
 )
 from repro.core.engine import zone_sequential_completions
+from strategies import io_trace_args, random_io_trace
 
 
-@given(st.integers(1, 200), st.integers(1, 8), st.integers(0, 3))
+@given(io_trace_args())
 @settings(max_examples=25, deadline=None)
-def test_engine_conservation_and_ordering(n, qd, seed):
-    rng = np.random.default_rng(seed)
-    ops = rng.choice([int(OpType.READ), int(OpType.WRITE),
-                      int(OpType.APPEND)], size=n)
-    tr = Trace.build(
-        op=ops, zone=rng.integers(0, 10, n),
-        size=rng.choice([4 * KiB, 8 * KiB, 32 * KiB], n),
-        issue=np.sort(rng.uniform(0, 1e5, n)),
-        thread=rng.integers(0, 4, n), qd=np.full(n, qd))
+def test_engine_conservation_and_ordering(args):
+    n, qd, seed = args
+    tr = random_io_trace(n, qd, seed)
     res = simulate(tr, seed=seed)
     # completion after start, start after issue is NOT guaranteed (closed
     # loop gates on ring), but start is never negative and svc > 0

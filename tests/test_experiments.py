@@ -138,6 +138,21 @@ def test_cli_run_and_list(tmp_path, capsys):
     assert (tmp_path / "obs09_transitions.json").exists()
 
 
+def test_cli_host_scenarios(tmp_path, capsys):
+    assert cli_main(["host", "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "scenario  lsm" in out and "policy    striped" in out
+    rc = cli_main(["host", "--scenarios", "circular-log", "--scale", "0.5",
+                   "--backend", "event", "--out", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "best-first" in out
+    rows = json.loads((tmp_path / "host_policies.json").read_text())
+    assert {r["policy"] for r in rows} >= {"greedy-open", "striped"}
+    assert all(r["scenario"] == "circular-log" for r in rows)
+    assert cli_main(["host", "--scenarios", "nope"]) == 2
+
+
 def test_cli_requires_selection(capsys):
     assert cli_main(["run"]) == 2
     # an effectively-empty --only (stray comma / empty shell var) is

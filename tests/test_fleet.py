@@ -18,32 +18,10 @@ from repro.core.device import _resolve_backend
 from repro.core.emulator_models import (
     ALL_MODELS, EMULATOR_PROFILES, FIDELITY_MATRIX, simulated_fidelity,
 )
-
-SPEC_VARIANTS = (
-    ZNSDeviceSpec(),
-    ZNSDeviceSpec(append_parallelism=4),
-    ZNSDeviceSpec(num_zones=512, max_open_zones=12),
+from strategies import (
+    PROFILE_NAMES, SPEC_VARIANTS, fleet_members as _members,
+    mixed_workload as _mixed,
 )
-PROFILE_NAMES = ("ours", "nvmevirt", "femu")
-
-
-def _members(n):
-    return [(SPEC_VARIANTS[i % len(SPEC_VARIANTS)],
-             EMULATOR_PROFILES[PROFILE_NAMES[i % len(PROFILE_NAMES)]])
-            for i in range(n)]
-
-
-def _mixed(scale, *, with_mgmt=True):
-    wl = (WorkloadSpec()
-          .writes(n=6 * scale, qd=4, zone=0)
-          .reads(n=6 * scale, qd=8, zone=100, nzones=50)
-          .appends(n=4 * scale, qd=2, zone=200))
-    if with_mgmt:
-        wl = (wl.resets(n=max(scale // 2, 1), occupancy=1.0, nzones=64,
-                        io_ctx=OpType.READ)
-              .finishes(n=max(scale // 10, 1), occupancy=0.3)
-              .opens(n=2).closes(n=2))
-    return wl
 
 
 def _assert_fleet_equals_loop(members, workloads, backend, *, seed=0,
@@ -94,25 +72,24 @@ def test_fleet_obs12_obs13_couplings_preserved():
 
 
 # -- hypothesis property: fleet == loop over random heterogeneous fleets -------
-try:
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from strategies import HAVE_HYPOTHESIS
 
 if HAVE_HYPOTHESIS:
-    @given(st.integers(1, 5), st.integers(0, 1000), st.booleans(),
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    from strategies import fleet_specs, latency_profiles, \
+        mixed_workload_specs
+
+    @given(st.lists(st.tuples(fleet_specs(), latency_profiles(),
+                              mixed_workload_specs()),
+                    min_size=1, max_size=5),
+           st.integers(0, 1000), st.booleans(),
            st.sampled_from(["event", "vectorized"]))
     @settings(max_examples=12, deadline=None)
-    def test_fleet_equals_loop_property(n_devices, seed, jitter, backend):
-        rng = np.random.default_rng(seed)
-        members = [(SPEC_VARIANTS[rng.integers(len(SPEC_VARIANTS))],
-                    EMULATOR_PROFILES[PROFILE_NAMES[rng.integers(3)]])
-                   for _ in range(n_devices)]
-        wls = [_mixed(int(rng.integers(2, 12)),
-                      with_mgmt=bool(rng.integers(2)))
-               for _ in range(n_devices)]
+    def test_fleet_equals_loop_property(devices, seed, jitter, backend):
+        members = [(spec, params) for spec, params, _ in devices]
+        wls = [wl for _, _, wl in devices]
         _assert_fleet_equals_loop(members, wls, backend, seed=seed % 97,
                                   jitter=jitter)
 

@@ -1,0 +1,400 @@
+"""Host storage-stack layer: allocator policies (placement invariants,
+limit respect, fill-don't-finish), reclaim scheduling (Obs#13 charging,
+WA accounting), the LogStructuredVolume facade, scenario registry, and
+the fleet-batched policy comparison."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    KiB, MiB, OpType, WorkloadSpec, ZnsDevice, ZoneError, ZoneState,
+    ZNSDeviceSpec,
+)
+from repro.host import (
+    Extent, HOST_SCENARIO_SPEC, LogStructuredVolume, ReclaimScheduler,
+    ZoneAllocator, available_placement_policies, available_scenarios,
+    build_scenario, compare_policies, rank_policies,
+    register_placement_policy, register_scenario, unregister_placement_policy,
+    unregister_scenario,
+)
+from strategies import HAVE_HYPOTHESIS, SMALL_SPEC
+
+POLICIES = ("greedy-open", "striped", "lifetime-binned")
+
+
+# ---------------------------------------------------------------------------
+# ZoneAllocator
+# ---------------------------------------------------------------------------
+def test_builtin_policies_registered():
+    assert set(POLICIES) <= set(available_placement_policies())
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_bytes_placed_equals_bytes_requested(policy):
+    alloc = ZoneAllocator(SMALL_SPEC, policy=policy)
+    for nbytes in (1, 4 * KiB, SMALL_SPEC.zone_cap_bytes,
+                   int(2.5 * SMALL_SPEC.zone_cap_bytes)):
+        extents = alloc.allocate(nbytes, stream=1, lifetime=0)
+        assert sum(e.nbytes for e in extents) == nbytes
+        for e in extents:
+            assert 0 <= e.offset and e.end <= SMALL_SPEC.zone_cap_bytes
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_limits_never_exceeded(policy):
+    alloc = ZoneAllocator(SMALL_SPEC, policy=policy, stripe_width=8,
+                          lifetime_bins=8)
+    # many small allocations across many streams/lifetimes
+    for i in range(40):
+        alloc.allocate(96 * KiB, stream=i % 5, lifetime=i % 8)
+        assert alloc.open_count <= SMALL_SPEC.max_open_zones
+        assert alloc.active_count <= SMALL_SPEC.max_active_zones
+
+
+def test_greedy_open_fills_partial_zone_first():
+    alloc = ZoneAllocator(SMALL_SPEC, policy="greedy-open")
+    first = alloc.allocate(SMALL_SPEC.zone_cap_bytes // 2)
+    second = alloc.allocate(SMALL_SPEC.zone_cap_bytes // 4)
+    assert second[0].zone == first[0].zone            # R3: reuse, don't open
+    assert second[0].offset == first[0].end
+    # filling to cap yields FULL, never a FINISH
+    alloc.allocate(SMALL_SPEC.zone_cap_bytes)
+    assert alloc.zm.state(first[0].zone) == ZoneState.FULL
+    assert not alloc.zm.zones[first[0].zone].was_finished
+
+
+def test_striped_policy_rotates_zones():
+    alloc = ZoneAllocator(SMALL_SPEC, policy="striped",
+                          stripe_bytes=16 * KiB, stripe_width=3)
+    extents = alloc.allocate(96 * KiB)
+    zones = [e.zone for e in extents]
+    assert len(set(zones)) == 3                       # spread over the ring
+    assert all(e.nbytes <= 16 * KiB for e in extents)
+
+
+def test_lifetime_binned_separates_lifetimes():
+    alloc = ZoneAllocator(SMALL_SPEC, policy="lifetime-binned",
+                          lifetime_bins=4)
+    a = alloc.allocate(64 * KiB, lifetime=0)
+    b = alloc.allocate(64 * KiB, lifetime=1)
+    a2 = alloc.allocate(64 * KiB, lifetime=0)
+    assert a[0].zone != b[0].zone                     # bins get own zones
+    assert a2[0].zone == a[0].zone                    # bin affinity sticks
+
+
+def test_lifetime_binned_respects_limits_with_many_bins():
+    spec = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                         num_zones=32, max_open_zones=2, max_active_zones=2)
+    alloc = ZoneAllocator(spec, policy="lifetime-binned", lifetime_bins=8)
+    for lt in range(8):
+        alloc.allocate(32 * KiB, lifetime=lt)
+        assert alloc.open_count <= spec.max_open_zones
+        assert alloc.active_count <= spec.max_active_zones
+
+
+def test_reserved_zones_never_used():
+    alloc = ZoneAllocator(SMALL_SPEC, policy="greedy-open", reserved=(0, 1))
+    extents = alloc.allocate(3 * SMALL_SPEC.zone_cap_bytes)
+    assert all(e.zone >= 2 for e in extents)
+
+
+def test_device_full_raises_zone_error():
+    spec = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                         num_zones=4, max_open_zones=2, max_active_zones=2)
+    alloc = ZoneAllocator(spec, policy="greedy-open")
+    alloc.allocate(4 * spec.zone_cap_bytes)           # fill everything
+    with pytest.raises(ZoneError, match="device full"):
+        alloc.allocate(4 * KiB)
+
+
+def test_commit_rejects_stale_plans():
+    alloc = ZoneAllocator(SMALL_SPEC)
+    plan = alloc.plan(8 * KiB)
+    alloc.allocate(4 * KiB)                           # moves the wp
+    with pytest.raises(ZoneError, match="stale plan"):
+        alloc.commit(plan)
+
+
+def test_register_placement_policy_collision_warns():
+    def fake(alloc, view, hint, remaining):
+        raise AssertionError("never called")
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            register_placement_policy("collide-pol", fake)
+            assert not w
+            register_placement_policy("collide-pol",
+                                      lambda *a, **k: None)
+            assert len(w) == 1 and "already registered" in str(w[0].message)
+    finally:
+        unregister_placement_policy("collide-pol")
+    assert "collide-pol" not in available_placement_policies()
+
+
+# ---------------------------------------------------------------------------
+# ReclaimScheduler
+# ---------------------------------------------------------------------------
+def _device():
+    return ZnsDevice(SMALL_SPEC)
+
+
+def test_reclaim_charges_obs13_inflation():
+    dev = _device()
+    dev.zones.write(0, SMALL_SPEC.zone_cap_bytes)
+    quiet = ReclaimScheduler(ZnsDevice(SMALL_SPEC), io_ctx=OpType.APPEND)
+    quiet.zm.write(0, SMALL_SPEC.zone_cap_bytes)
+    loud = ReclaimScheduler(dev, io_ctx=OpType.APPEND)
+    quiet.schedule([0]); loud.schedule([0])
+    iso = quiet.drain(concurrent_io=False)
+    conc = loud.drain(concurrent_io=True)
+    infl = float(dev.lat.reset_inflation([OpType.APPEND]))
+    assert infl > 1.5                                  # Obs#13: +78%-class
+    assert conc.seconds == pytest.approx(iso.seconds * infl, rel=1e-9)
+    assert conc.write_amplification == 1.0             # pure reset, no moves
+
+
+def test_reclaim_relocation_accounts_write_amplification():
+    dev = _device()
+    alloc = ZoneAllocator(zones=dev.zones, policy="greedy-open")
+    sched = ReclaimScheduler(dev, allocator=alloc, io_ctx=OpType.APPEND,
+                             relocation_stripe=64 * KiB)
+    ext = alloc.allocate(SMALL_SPEC.zone_cap_bytes)    # zone full
+    sched.account(ext)
+    victim = ext[0].zone
+    sched.invalidate([Extent(victim, 0, SMALL_SPEC.zone_cap_bytes // 2)])
+    sched.schedule([victim])
+    rep = sched.drain()
+    assert rep.zones_reset == 1
+    assert rep.relocated_bytes == SMALL_SPEC.zone_cap_bytes // 2
+    assert rep.write_amplification == pytest.approx(1.5, rel=1e-6)
+    assert rep.reclaim_mibs > 0
+
+
+def test_pick_victims_prefers_least_valid():
+    dev = _device()
+    sched = ReclaimScheduler(dev)
+    for z, frac in ((0, 1.0), (1, 1.0), (2, 1.0)):
+        dev.zones.write(z, int(SMALL_SPEC.zone_cap_bytes * frac))
+    sched.account([Extent(0, 0, SMALL_SPEC.zone_cap_bytes)])
+    sched.account([Extent(2, 0, 4 * KiB)])
+    # zone 1 holds no valid bytes, zone 2 a little, zone 0 everything
+    assert sched.pick_victims(2) == [1, 2]
+    assert sched.backlog == [1, 2]
+    sched.schedule([1])                                # dedup
+    assert sched.backlog == [1, 2]
+
+
+def test_scheduled_zones_frozen_out_of_placement():
+    dev = _device()
+    alloc = ZoneAllocator(zones=dev.zones, policy="greedy-open")
+    sched = ReclaimScheduler(dev, allocator=alloc)
+    ext = alloc.allocate(4 * KiB)
+    z = ext[0].zone
+    sched.schedule([z])
+    assert alloc.plan(4 * KiB)[0].zone != z            # frozen
+    sched.drain()
+    assert alloc.plan(4 * KiB)[0].zone == z            # thawed after reset
+
+
+def test_reclaim_workload_compiles_resets_with_io_ctx():
+    dev = _device()
+    sched = ReclaimScheduler(dev, io_ctx=OpType.WRITE)
+    dev.zones.write(3, SMALL_SPEC.zone_cap_bytes // 2)
+    sched.schedule([3])
+    wl = sched.reclaim_workload()
+    tr = wl.build()
+    assert (tr.op == int(OpType.RESET)).sum() == 1
+    assert tr.occupancy[0] == pytest.approx(0.5)
+    assert tr.io_ctx[0] == int(OpType.WRITE)
+    assert sched.backlog == [3]                        # compile != drain
+
+
+# ---------------------------------------------------------------------------
+# LogStructuredVolume
+# ---------------------------------------------------------------------------
+def test_volume_roundtrip_and_compile():
+    vol = LogStructuredVolume(SMALL_SPEC, stripe_bytes=64 * KiB,
+                              append_qd=2)
+    vol.write("a", 128 * KiB, stream=0)
+    vol.write("b", 256 * KiB, stream=1)
+    vol.read("a")
+    vol.delete("a")
+    wl = vol.compile()
+    tr = wl.build()
+    n_app = int((tr.op == int(OpType.APPEND)).sum())
+    assert n_app == (128 + 256) * KiB // (64 * KiB)
+    assert (tr.op == int(OpType.READ)).sum() > 0
+    res = vol.run(backend="event")
+    assert res.user_bytes == (128 + 256) * KiB
+    assert res.write_amplification == 1.0
+    assert res.makespan_s > 0
+
+
+def test_volume_rejects_duplicate_keys():
+    vol = LogStructuredVolume(SMALL_SPEC)
+    vol.write("k", 4 * KiB)
+    with pytest.raises(ZoneError, match="already exists"):
+        vol.write("k", 4 * KiB)
+
+
+def test_volume_collect_relocates_survivors():
+    vol = LogStructuredVolume(SMALL_SPEC, stripe_bytes=64 * KiB)
+    cap = SMALL_SPEC.zone_cap_bytes
+    vol.write("dead", cap // 2, stream=0)
+    vol.write("live", cap // 2, stream=0)              # same zone, fills it
+    zone = vol.objects["live"].extents[0].zone
+    vol.delete("dead")
+    rep = vol.collect(1, max_valid_frac=0.6)
+    assert rep.zones_reset == 1
+    assert rep.relocated_bytes == cap // 2             # live half moved
+    assert all(e.zone != zone for e in vol.objects["live"].extents)
+    vol.read("live")                                   # still readable
+
+
+def test_volume_wa_gt_one_shows_in_compiled_trace():
+    vol = LogStructuredVolume(SMALL_SPEC, stripe_bytes=64 * KiB)
+    cap = SMALL_SPEC.zone_cap_bytes
+    vol.write("dead", cap // 2)
+    vol.write("live", cap // 2)
+    vol.delete("dead")
+    vol.collect(1, max_valid_frac=0.6)
+    tr = vol.compile().build()
+    append_bytes = int(tr.size[tr.op == int(OpType.APPEND)].sum())
+    assert append_bytes == vol.user_bytes + cap // 2   # relocation appended
+    assert (tr.op == int(OpType.RESET)).sum() == 1
+
+
+def test_collect_aborts_cleanly_when_device_too_full_to_relocate():
+    # Review regression: a failed mid-GC relocation must not corrupt
+    # validity accounting, strand frozen zones, or model live data as
+    # destroyed by a later drain.
+    spec = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                         num_zones=4, max_open_zones=4, max_active_zones=4)
+    vol = LogStructuredVolume(spec, stripe_bytes=64 * KiB)
+    cap = spec.zone_cap_bytes
+    for i in range(8):                      # fill all 4 zones half-live
+        vol.write(f"o{i}", cap // 2, stream=0)
+    for i in range(0, 8, 2):
+        vol.delete(f"o{i}")
+    with pytest.raises(ZoneError, match="device full"):
+        vol.collect(1)
+    # victims thawed, backlog empty, survivors' extents + validity intact
+    assert vol.allocator.frozen == set()
+    assert vol.reclaim.backlog == []
+    live = vol.objects["o1"]
+    z = live.extents[0].zone
+    assert vol.reclaim.valid_bytes(z) >= live.nbytes
+    rep = vol.reclaim.drain()               # nothing scheduled: no-op
+    assert rep.zones_reset == 0
+
+
+def test_plan_never_proposes_closed_zone_reopen_over_open_limit():
+    # Review regression: CLOSED->open transitions count against the
+    # open limit during planning, so commit() can't half-apply a plan.
+    spec = ZNSDeviceSpec(zone_size_bytes=1 << 20, zone_cap_bytes=1 << 19,
+                         num_zones=8, max_open_zones=2, max_active_zones=4)
+    alloc = ZoneAllocator(spec, policy="greedy-open")
+    alloc.zm.write(0, 4 * KiB)
+    alloc.zm.close(0)                       # CLOSED, partially written
+    alloc.zm.open(1)
+    alloc.zm.open(2)                        # at the open limit
+    plan = alloc.plan(4 * KiB)
+    assert plan[0].zone != 0                # reopening 0 would violate
+    alloc.commit(plan)                      # and commit proves it legal
+    assert alloc.open_count <= spec.max_open_zones
+
+
+# ---------------------------------------------------------------------------
+# Scenarios + policy comparison
+# ---------------------------------------------------------------------------
+def test_scenarios_registered():
+    assert set(("lsm", "circular-log", "cache")) <= set(available_scenarios())
+
+
+def test_scenario_registry_collision_warns_and_unregisters():
+    def fake(vol, rng, scale):
+        pass
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            register_scenario("collide-scen", fake)
+            assert not w
+            register_scenario("collide-scen", lambda *a: None)
+            assert len(w) == 1 and "already registered" in str(w[0].message)
+    finally:
+        unregister_scenario("collide-scen")
+    assert "collide-scen" not in available_scenarios()
+
+
+def test_build_scenario_deterministic_per_seed():
+    a = build_scenario("cache", policy="striped", seed=7)
+    b = build_scenario("cache", policy="striped", seed=7)
+    c = build_scenario("cache", policy="striped", seed=8)
+    assert a.stats == b.stats
+    np.testing.assert_array_equal(a.workload.build().size,
+                                  b.workload.build().size)
+    assert a.stats != c.stats
+
+
+def test_circular_log_has_unit_write_amplification():
+    for policy in POLICIES:
+        b = build_scenario("circular-log", policy=policy)
+        assert b.stats["write_amplification"] == 1.0
+
+
+def test_cache_scenario_relocates():
+    b = build_scenario("cache", policy="greedy-open")
+    assert b.stats["write_amplification"] > 1.0
+    assert b.stats["zones_reset"] > 0
+
+
+def test_compare_policies_one_fleet_run_and_ranking():
+    rows = compare_policies(["circular-log"], backend="event", scale=0.5)
+    assert len(rows) == len(available_placement_policies())
+    assert all(r["scenario"] == "circular-log" for r in rows)
+    assert all(r["makespan_s"] > 0 for r in rows)
+    ranking = rank_policies(rows)
+    assert set(ranking) == {"circular-log"}
+    assert sorted(ranking["circular-log"]) == \
+        sorted(available_placement_policies())
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): allocator invariants under random load
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    from strategies import allocation_requests, small_zns_specs
+
+    @given(st.data(), st.sampled_from(POLICIES))
+    @settings(max_examples=30, deadline=None)
+    def test_allocator_invariants_property(data, policy):
+        spec = data.draw(small_zns_specs())
+        reqs = data.draw(allocation_requests(spec))
+        alloc = ZoneAllocator(spec, policy=policy)
+        for nbytes, stream, lifetime in reqs:
+            extents = alloc.allocate(nbytes, stream=stream,
+                                     lifetime=lifetime)
+            # bytes placed == bytes requested, inside zone capacity
+            assert sum(e.nbytes for e in extents) == nbytes
+            for e in extents:
+                assert 0 <= e.offset < e.end <= spec.zone_cap_bytes
+                assert 0 <= e.zone < spec.num_zones
+            # never exceeds max-open / max-active
+            assert alloc.open_count <= spec.max_open_zones
+            assert alloc.active_count <= spec.max_active_zones
+        assert alloc.bytes_placed == sum(r[0] for r in reqs)
+
+    @given(st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_allocator_never_finishes_zones_property(data):
+        spec = data.draw(small_zns_specs())
+        reqs = data.draw(allocation_requests(spec))
+        alloc = ZoneAllocator(spec, policy="greedy-open")
+        for nbytes, stream, lifetime in reqs:
+            alloc.allocate(nbytes, stream=stream, lifetime=lifetime)
+        # R3: zones become FULL only by filling, never via FINISH
+        assert not any(zi.was_finished for zi in alloc.zm.zones)

@@ -1,0 +1,114 @@
+"""Golden-trace differential regression for the host scenarios.
+
+Each fixture under ``tests/golden/`` pins one scenario's compiled
+workload (a digest of the lowered trace) and its per-op completion times
+on the ``event`` backend (jitter off).  The suite asserts
+
+* the model still produces byte-identical workloads and float-equal
+  completion times (catching accidental semantic drift in the host
+  layer, the workload builder, or either engine), and
+* ``event`` vs ``vectorized`` equivalence for **every** scenario x
+  placement-policy combination (freshly computed, not fixture-bound).
+
+Regenerate after an *intentional* model change with::
+
+    pytest tests/test_host_golden.py --regen-golden
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import ZnsDevice
+from repro.host import available_placement_policies, build_scenario
+from repro.host.scenarios import HOST_SCENARIO_SPEC
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+#: (scenario, policy, seed, scale) pinned by a fixture each.
+GOLDEN_CASES = (
+    ("lsm", "greedy-open", 0, 0.5),
+    ("circular-log", "greedy-open", 0, 0.5),
+    ("cache", "greedy-open", 0, 0.5),
+)
+
+ALL_COMBOS = tuple(
+    (scen, pol)
+    for scen in ("lsm", "circular-log", "cache")
+    for pol in ("greedy-open", "striped", "lifetime-binned"))
+
+
+def _trace_digest(trace) -> str:
+    h = hashlib.sha256()
+    for field in ("op", "zone", "size", "issue", "thread", "qd",
+                  "occupancy", "was_finished", "io_ctx"):
+        h.update(np.ascontiguousarray(getattr(trace, field)).tobytes())
+    return h.hexdigest()
+
+
+def _compute(scenario: str, policy: str, seed: int, scale: float) -> dict:
+    build = build_scenario(scenario, policy=policy, seed=seed, scale=scale)
+    trace = build.workload.build()
+    dev = ZnsDevice(HOST_SCENARIO_SPEC)
+    res = dev.run(trace, backend="event", seed=seed, jitter=False)
+    return {
+        "scenario": scenario, "policy": policy, "seed": seed, "scale": scale,
+        "n_requests": len(trace),
+        "workload_sha256": _trace_digest(trace),
+        "complete_us": [float(c) for c in res.sim.complete],
+    }
+
+
+def _fixture_path(scenario: str, policy: str) -> pathlib.Path:
+    return GOLDEN_DIR / f"{scenario}__{policy}.json"
+
+
+@pytest.mark.parametrize("scenario,policy,seed,scale", GOLDEN_CASES,
+                         ids=lambda v: str(v))
+def test_golden_trace_regression(request, scenario, policy, seed, scale):
+    path = _fixture_path(scenario, policy)
+    got = _compute(scenario, policy, seed, scale)
+    if request.config.getoption("--regen-golden"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=0)
+        pytest.skip(f"regenerated {path.name}")
+    assert path.exists(), \
+        f"missing golden fixture {path}; run pytest --regen-golden"
+    with open(path) as f:
+        want = json.load(f)
+    assert got["n_requests"] == want["n_requests"], \
+        "compiled workload changed size — intentional? --regen-golden"
+    assert got["workload_sha256"] == want["workload_sha256"], \
+        "compiled workload changed content — intentional? --regen-golden"
+    np.testing.assert_allclose(
+        np.asarray(got["complete_us"]), np.asarray(want["complete_us"]),
+        rtol=1e-9, atol=1e-6,
+        err_msg="event-backend completion times drifted from the golden "
+                "trace — intentional? --regen-golden")
+
+
+@pytest.mark.parametrize("scenario,policy", ALL_COMBOS,
+                         ids=lambda v: str(v))
+def test_event_vs_vectorized_equivalence(scenario, policy):
+    """Differential check: both backends produce float-equal completion
+    times for every host scenario under every placement policy."""
+    build = build_scenario(scenario, policy=policy, seed=0, scale=0.5)
+    trace = build.workload.build()
+    dev = ZnsDevice(HOST_SCENARIO_SPEC)
+    ev = dev.run(trace, backend="event", jitter=False)
+    vec = dev.run(trace, backend="vectorized", jitter=False)
+    np.testing.assert_allclose(vec.sim.complete, ev.sim.complete,
+                               rtol=1e-9, atol=1e-6)
+    np.testing.assert_allclose(vec.sim.start, ev.sim.start,
+                               rtol=1e-9, atol=1e-6)
+    np.testing.assert_array_equal(vec.sim.service, ev.sim.service)
+
+
+def test_golden_fixtures_cover_every_scenario():
+    from repro.host import available_scenarios
+    pinned = {c[0] for c in GOLDEN_CASES}
+    assert pinned == set(available_scenarios()), \
+        "every registered scenario needs a golden fixture"

@@ -1,0 +1,143 @@
+"""Runtime control-plane policies: lease-based failure detection,
+straggler mitigation, restart budgets (runtime/failures.py) and
+deterministic elastic resharding (runtime/elastic.py)."""
+import pytest
+
+from repro.runtime.elastic import (
+    largest_mesh, make_reshard_plan, validate_plan,
+)
+from repro.runtime.failures import (
+    FailureDetector, HostState, RestartBudget, StragglerPolicy,
+)
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector
+# ---------------------------------------------------------------------------
+def test_lease_transitions_healthy_suspect_dead():
+    det = FailureDetector(3, lease_s=10.0)
+    for h in range(3):
+        det.heartbeat(h, now=0.0)
+    assert det.tick(5.0) == {}                       # within lease
+    changes = det.tick(15.0)                         # one lease missed
+    assert changes == {0: HostState.SUSPECT, 1: HostState.SUSPECT,
+                       2: HostState.SUSPECT}
+    det.heartbeat(1, now=16.0)                       # host 1 recovers
+    changes = det.tick(25.0)                         # two leases missed
+    assert changes[0] is HostState.DEAD and changes[2] is HostState.DEAD
+    assert 1 not in changes                          # stayed healthy
+    assert det.healthy_hosts() == [1]
+
+
+def test_dead_host_rejoins_with_new_incarnation():
+    det = FailureDetector(2, lease_s=1.0)
+    det.heartbeat(0, now=0.0)
+    det.heartbeat(1, now=0.0)
+    det.tick(10.0)
+    assert det.hosts[0].state is HostState.DEAD
+    assert det.hosts[0].incarnation == 0
+    det.heartbeat(0, now=11.0)
+    assert det.hosts[0].state is HostState.HEALTHY
+    assert det.hosts[0].incarnation == 1             # fenced rejoin
+    det.heartbeat(0, now=12.0)
+    assert det.hosts[0].incarnation == 1             # no bump while alive
+
+
+def test_suspect_hosts_still_participate():
+    det = FailureDetector(2, lease_s=5.0)
+    det.heartbeat(0, now=0.0)
+    det.heartbeat(1, now=0.0)
+    det.tick(7.0)
+    assert det.hosts[0].state is HostState.SUSPECT
+    assert det.healthy_hosts() == [0, 1]             # SUSPECT != DEAD
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy
+# ---------------------------------------------------------------------------
+def test_straggler_deadline_needs_history():
+    pol = StragglerPolicy(factor=1.5, window=8)
+    for d in (10.0, 11.0, 9.0):
+        pol.observe(d)
+    assert pol.deadline() is None                    # < 4 observations
+    assert pol.mitigate({0: 100.0}) == {}
+    pol.observe(10.0)
+    assert pol.deadline() == pytest.approx(15.0)     # 1.5 x median
+
+
+def test_straggler_mitigation_assigns_next_host_backup():
+    pol = StragglerPolicy(factor=1.5, window=8)
+    for d in (10.0,) * 8:
+        pol.observe(d)
+    plans = pol.mitigate({0: 9.0, 1: 40.0, 2: 11.0, 3: 16.0})
+    assert plans == {1: 2, 3: 0}                     # wraps around
+    assert 0 not in plans and 2 not in plans
+
+
+def test_straggler_window_bounds_history():
+    pol = StragglerPolicy(factor=2.0, window=4)
+    for d in (100.0,) * 4:
+        pol.observe(d)
+    for d in (10.0,) * 4:                            # window slides off 100s
+        pol.observe(d)
+    assert pol.deadline() == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# RestartBudget
+# ---------------------------------------------------------------------------
+def test_restart_budget_caps_storms():
+    budget = RestartBudget(max_restarts=3, window_s=100.0)
+    assert all(budget.allow(t) for t in (0.0, 1.0, 2.0))
+    assert not budget.allow(3.0)                     # 4th inside window
+    assert not budget.allow(99.0)
+    assert budget.allow(101.5)                       # window slid
+
+
+def test_restart_budget_denied_attempts_not_counted():
+    budget = RestartBudget(max_restarts=1, window_s=10.0)
+    assert budget.allow(0.0)
+    for t in (1.0, 2.0, 3.0):
+        assert not budget.allow(t)                   # denials don't extend
+    assert budget.allow(10.5)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resharding
+# ---------------------------------------------------------------------------
+def test_largest_mesh_keeps_model_parallel_fixed():
+    assert largest_mesh(64, model_parallel=16) == (4, 16)
+    assert largest_mesh(66, model_parallel=16) == (4, 16)   # rounds down
+    with pytest.raises(ValueError, match="fewer than"):
+        largest_mesh(15, model_parallel=16)
+
+
+def test_reshard_plan_covers_all_shards_once():
+    plan = make_reshard_plan(range(8), (0, 1, 2, 5, 6, 7),
+                             model_parallel=4, chips_per_host=4)
+    validate_plan(plan)                              # no assertion raised
+    assert plan.new_hosts == (0, 1, 2, 5, 6, 7)
+    owned = sorted(s for lst in plan.shard_ownership.values() for s in lst)
+    assert owned == list(range(8))                   # every old shard once
+    assert plan.mesh_shape == (6, 4)
+
+
+def test_reshard_plan_is_deterministic_and_coordinator_free():
+    a = make_reshard_plan((3, 1, 0, 2), (0, 2, 3), model_parallel=4)
+    b = make_reshard_plan((0, 1, 2, 3), (3, 2, 0), model_parallel=4)
+    assert a == b                                    # order-insensitive
+
+
+def test_reshard_plan_rejects_empty_survivor_set():
+    with pytest.raises(ValueError, match="empty healthy host set"):
+        make_reshard_plan((0, 1), (), model_parallel=4)
+
+
+def test_validate_plan_catches_corruption():
+    plan = make_reshard_plan(range(4), range(4), model_parallel=4)
+    bad = plan.shard_ownership.copy()
+    bad[0] = bad[0] + [0]                            # duplicate shard 0
+    import dataclasses
+    broken = dataclasses.replace(plan, shard_ownership=bad)
+    with pytest.raises(AssertionError, match="every old shard once"):
+        validate_plan(broken)
