@@ -1,0 +1,123 @@
+"""ChainProgram compiler microbench: the fused fixpoint vs the
+pre-refactor per-chain sweep loop.
+
+Acceptance gate for the trace-compilation layer (ISSUE 5): at 16
+devices x 100k requests, a warm fused fleet solve
+(``DeviceFleet.run(backend="vectorized")`` with the compiled
+:class:`repro.core.ChainProgram` cached) must run >=2x faster than the
+pre-refactor path — a Python loop of per-device per-chain sweep loops
+(``repro.core.engine._simulate_vectorized_unfused``, which re-lowers
+the trace and re-scans every chain family on every sweep of every
+call) — while agreeing on completion times to float tolerance.
+
+Reported rows:
+
+* ``chain_program/fused_warm``  — warm fused solve (program cached); the
+  gated row.
+* ``chain_program/fused_cold``  — first call including compilation
+  (lowering + pop-order refinement when pools saturate).
+* ``chain_program/sweep_loop``  — the per-chain sweep-loop baseline.
+* ``chain_program/append_pool`` — the newly-exact saturated multi-thread
+  append pool: fused vs the *event engine* (the only previously-correct
+  backend for that shape), with the equivalence error that the compiler
+  closes.
+
+``run(quick=True)`` is the CI smoke configuration (8 devices x 20k).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DeviceFleet, KiB, OpType, WorkloadSpec, ZnsDevice, \
+    clear_program_cache
+from repro.core.engine import _simulate_vectorized_unfused, simulate
+
+SPEEDUP_GATE = 2.0
+
+
+def _mixed_workload(scale: int) -> WorkloadSpec:
+    """~100*scale requests; stays inside the pre-refactor engine's
+    exactness envelope so baseline and fused compute the same answer."""
+    return (WorkloadSpec()
+            .writes(n=36 * scale, size=4 * KiB, qd=4, zone=0)
+            .reads(n=44 * scale, size=4 * KiB, qd=16, zone=100, nzones=100)
+            .appends(n=18 * scale, size=8 * KiB, qd=2, zone=300)
+            .resets(n=2 * scale, occupancy=1.0, nzones=200,
+                    io_ctx=OpType.READ))
+
+
+def _append_pool_workload(scale: int) -> WorkloadSpec:
+    """Saturated multi-thread append pool (Obs#5-#7): exact only on the
+    event engine before this layer."""
+    wl = WorkloadSpec()
+    for t in range(8):
+        wl = wl.appends(n=2 * scale, size=8 * KiB, qd=4, zone=t * 8,
+                        nzones=8)
+    return wl
+
+
+def run(quick: bool = False):
+    n_dev = 8 if quick else 16
+    scale = 200 if quick else 1000      # 20k / 100k requests per device
+    traces = [_mixed_workload(scale).build()] * n_dev
+    n_per_dev = len(traces[0])
+    fleet = DeviceFleet.homogeneous(n_dev)
+
+    clear_program_cache()
+    t0 = time.perf_counter()
+    fres = fleet.run(traces, backend="vectorized", jitter=False)
+    t_cold = time.perf_counter() - t0
+
+    # warm: program cached; best-of-2 so the gate measures the engine,
+    # not scheduler noise
+    t_warm = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        fres = fleet.run(traces, backend="vectorized", jitter=False)
+        t_warm = min(t_warm, time.perf_counter() - t0)
+
+    # pre-refactor baseline: per-device per-chain sweep loops (best-of-2
+    # as well — both sides get the same treatment)
+    t_loop = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        base = [_simulate_vectorized_unfused(
+            traces[i], fleet[i].spec, fleet[i].lat, seed=i, jitter=False)
+            for i in range(n_dev)]
+        t_loop = min(t_loop, time.perf_counter() - t0)
+
+    rel = max(
+        float(np.max(np.abs(base[i].complete - fres[i].sim.complete)
+                     / np.maximum(base[i].complete, 1.0)))
+        for i in range(n_dev))
+    speedup = t_loop / max(t_warm, 1e-9)
+    gate = "PASS" if speedup >= SPEEDUP_GATE else "FAIL"
+    rows = [
+        (f"chain_program/fused_warm/n{n_dev}x{n_per_dev}", t_warm * 1e6,
+         f"speedup_vs_sweep_loop_x={speedup:.2f};"
+         f"max_rel_err={rel:.1e};ge{SPEEDUP_GATE:.0f}x={gate}"),
+        (f"chain_program/fused_cold/n{n_dev}x{n_per_dev}", t_cold * 1e6,
+         f"compile_overhead_x={t_cold / max(t_warm, 1e-9):.2f}"),
+        (f"chain_program/sweep_loop/n{n_dev}x{n_per_dev}", t_loop * 1e6,
+         "baseline=pre-refactor per-chain sweep loop"),
+    ]
+
+    # The closed gap: saturated multi-thread append pool, fused vs event.
+    ap = _append_pool_workload(max(scale // 4, 25)).build()
+    dev = ZnsDevice()
+    t0 = time.perf_counter()
+    ev = simulate(ap, dev.spec, dev.lat, seed=0, jitter=False)
+    t_event = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vc = dev.run(ap, backend="vectorized", seed=0, jitter=False)
+    t_vec = time.perf_counter() - t0
+    err = float(np.max(np.abs(vc.sim.complete - ev.complete)
+                       / np.maximum(ev.complete, 1.0)))
+    exact = "PASS" if err < 1e-9 else "FAIL"
+    rows.append(
+        (f"chain_program/append_pool/n{len(ap)}", t_vec * 1e6,
+         f"speedup_vs_event_x={t_event / max(t_vec, 1e-9):.1f};"
+         f"max_rel_err_vs_event={err:.1e};exact={exact}"))
+    return rows

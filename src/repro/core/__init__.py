@@ -17,6 +17,10 @@ from .engine import (  # noqa: F401
     compute_service_times, simulate, simulate_vectorized,
     zone_sequential_completions, zone_sequential_completions_batched,
 )
+from .chain_program import (  # noqa: F401
+    ChainProgram, clear_program_cache, compile_fleet_program,
+    compile_program, program_cache_info, solve_program,
+)
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import (  # noqa: F401
     LatencyStats, available_metrics, bandwidth_bytes, extract_metrics, iops,

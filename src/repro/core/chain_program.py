@@ -1,0 +1,758 @@
+"""Trace-compilation layer: ``Trace + spec + params -> ChainProgram``.
+
+The vectorized backend decomposes a trace into serialized *chain
+families* (per-thread closed-loop lag-qd chains, per-zone write chains,
+the metadata engine, lag-capacity server-pool chains) and solves the
+coupled system by Gauss-Seidel sweeps of segmented max-plus scans.
+Before this module, that decomposition was re-derived on every call and
+the sweeps ran as a Python loop of per-chain scans; worse, server-pool
+chains were ordered by *issue* time, which breaks down exactly on the
+paper's key workloads -- saturated multi-thread append pools (Obs#5-#7)
+interleave threads in *readiness* order, so the issue-ordered FIFO
+approximation serialized whole threads back to back.
+
+A :class:`ChainProgram` is the compiled artifact:
+
+* **event-order transform** per device (stable sort by issue time) and
+  the inverse permutation back to trace order;
+* **family blocks**: padded, length-bucketed ``(R, L)`` gather-index +
+  segment-head tensors addressing one flat fleet-wide completion
+  vector, so every Gauss-Seidel step is one vectorized gather ->
+  batched max-plus scan -> scatter-max per family (no per-device Python
+  loops);
+* **pop-order pool chains**: server-pool families are split into
+  per-service-class subchains (class = identical jitter-free service
+  time) plus a cross-class coupling chain, each ordered by the event
+  engine's *processing* order -- ``ready = max(issue, completion of the
+  request qd earlier on the same thread)``, the key the event heap pops
+  by (zone/pool constraints apply after the pop, so they never affect
+  the order).  The order is found by *refinement*: solve the fixpoint
+  with the pool families removed (optimistic readiness), sort, rebuild,
+  re-solve from below, and freeze once the order stops changing.  A
+  FIFO lag-``capacity`` chain in pop order reproduces the event
+  engine's greedy server assignment exactly when the class's service
+  times are homogeneous -- which closes the event-vs-vectorized gap on
+  saturated same-size multi-thread pools (measured < 1e-12 relative,
+  vs ~1e2 for the issue-ordered chains).  Pools whose saturating
+  traffic mixes service classes, or whose order refinement does not
+  stabilize within the budget, are flagged ``exact=False`` (documented
+  approximation; the cross-class chain still couples them from below).
+
+Programs are cached in a module-level LRU keyed by ``(trace digest,
+spec, params, refine)`` so experiment sweeps and the host layer's
+``compare_policies()`` stop re-lowering identical traces.
+
+:func:`solve_program` runs the fused fixpoint: the numpy driver
+iterates family blocks with the batched float64 doubling scan
+(:func:`repro.core.engine.zone_sequential_completions_batched`); the
+``"xla"``/``"pallas"`` drivers hand the whole program to
+``repro.kernels.zns_fixpoint`` -- a jitted ``lax.while_loop`` (or the
+Pallas TPU kernel) iterating all sweeps x families in-kernel with an
+early-exit ``moved`` reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import warnings
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import (
+    Trace, compute_service_times, trace_chain_families,
+    zone_sequential_completions_batched, _on_tpu,
+)
+from .fleet import length_buckets
+from .latency import resolve_params
+from .spec import ZNSDeviceSpec
+
+#: Default number of pop-order refinement solves at compile time.
+DEFAULT_REFINE = 2
+
+#: Sweep budget of the compile-time refinement solves (generous: these
+#: fix the *order*, so they should converge fully; runtime solves keep
+#: their own user-visible budget + warning).
+_REFINE_SWEEPS = 32
+
+#: Server-pool family kinds whose chains are re-ordered by readiness
+#: when refinement triggers (the event engine pops all of them from one
+#: ready-time heap).
+REORDERED_KINDS = ("meta", "mgmt", "io_pool", "append_pool")
+
+#: Family kinds whose *presence* triggers refinement: the saturated
+#: server pools where issue order visibly diverges from pop order.
+#: meta/mgmt-only traces keep their issue-ordered chains (paced
+#: management sweeps issue in pop order already).
+REFINE_TRIGGER_KINDS = ("io_pool", "append_pool")
+
+
+def _pool_capacity(kind: str, spec: ZNSDeviceSpec) -> int:
+    if kind == "meta":
+        return max(spec.reset_parallelism, 1)
+    if kind == "mgmt":
+        return 2
+    if kind == "io_pool":
+        return max(spec.read_parallelism, 1)
+    if kind == "append_pool":
+        return max(spec.append_parallelism, 1)
+    raise KeyError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Program representation
+# ---------------------------------------------------------------------------
+#: Chain buckets with at least this many chains use the transposed
+#: ``"cols"`` layout (position loop, vectorized across chains); smaller
+#: buckets fall back to the ``"rows"`` doubling-scan layout whose cost
+#: does not scale with chain count.
+POSLOOP_MIN_CHAINS = 8
+
+#: Layout cost cutover: the position loop does O(n) work but pays a
+#: per-position dispatch overhead, the doubling scan does O(n log L)
+#: bandwidth-bound work.  ``cols`` wins when R * log2(L) clears this
+#: (both sides divided by L): ~2.6 us dispatch / (16 B / ~5 GB/s).
+POSLOOP_COST_CUTOVER = 512.0
+
+#: Max/min chain-length ratio within one padded bucket (tighter than the
+#: fleet row bucketing: padded cells cost position-loop iterations).
+CHAIN_BUCKET_RATIO = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyBlock:
+    """One length bucket of one chain family, fleet-wide.
+
+    One *chain* per lane.  ``layout="cols"`` stores ``(L, R)`` matrices
+    — lane ``r`` is column ``r`` — solved by a position loop that is
+    sequential along the chain but vectorized across all R chains (the
+    exact event-engine recurrence, O(n) work, contiguous row
+    operations).  ``layout="rows"`` stores ``(R, L)`` matrices solved
+    by the batched doubling scan (O(n log n) but independent of R; used
+    for skinny buckets where the position loop would be overhead-bound,
+    and by the jax/Pallas fixpoint kernels).
+
+    ``gidx`` indexes the flat event-order completion vector (padding
+    points at the dead slot ``n_flat``); ``heads`` marks chain starts
+    (position 0 of every lane, plus all padding).
+    """
+
+    label: str            # e.g. "io_pool", "append_pool/cls0", "meta"
+    gidx: np.ndarray      # int64; (R, L) for rows, (L, R) for cols
+    heads: np.ndarray     # bool, same shape
+    layout: str = "rows"  # "rows" | "cols"
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.gidx.shape
+
+    def rows_view(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(gidx, heads) in rows layout regardless of storage."""
+        if self.layout == "rows":
+            return self.gidx, self.heads
+        return np.ascontiguousarray(self.gidx.T), \
+            np.ascontiguousarray(self.heads.T)
+
+    def nbytes(self) -> int:
+        return self.gidx.nbytes + self.heads.nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainProgram:
+    """A compiled multi-device trace: one fused fixpoint per fleet call.
+
+    Solve with :func:`solve_program` after binding per-request service
+    times (event order, concatenated across devices).  ``exact`` is the
+    compiler's exactness claim versus the event engine *for jitter-free
+    service times* (the experiment runner's and host layer's default):
+    every saturated pool is single-service-class and its pop order
+    stabilized during refinement (float-tolerance equality).  Jittered
+    runs perturb service times after the order/classes were frozen, so
+    saturated pools degrade to the usual chain approximation (order
+    1e-2 to 1e-1 relative on heavily saturated traces); inexact programs likewise
+    still converge to a documented chain approximation.
+    """
+
+    n_flat: int
+    offsets: Tuple[int, ...]            # per-device starts into flat arrays
+    orders: Tuple[np.ndarray, ...]      # per-device trace->event order perm
+    invs: Tuple[np.ndarray, ...]        # per-device event->trace order perm
+    issue_flat: np.ndarray              # (n_flat,) event-order issue times
+    #: Jitter-free service times (event order, flat) — part of the
+    #: lowering output, so ``jitter=False`` solves bind it directly
+    #: instead of recomputing service times per call.
+    svc0_flat: np.ndarray
+    families: Tuple[FamilyBlock, ...]   # application order
+    exact: bool
+    multiclass_pools: Tuple[str, ...]   # pool kinds mixing service classes
+    refine_used: int                    # refinement solves spent
+    order_stable: bool                  # pop orders reached a fixpoint
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.orders)
+
+    def device_slice(self, d: int) -> slice:
+        return slice(self.offsets[d],
+                     self.offsets[d] + len(self.orders[d]))
+
+    def nbytes(self) -> int:
+        own = self.issue_flat.nbytes + sum(o.nbytes for o in self.orders) \
+            + sum(i.nbytes for i in self.invs)
+        return own + sum(f.nbytes() for f in self.families)
+
+    def __repr__(self) -> str:
+        return (f"ChainProgram(devices={self.n_devices}, n={self.n_flat}, "
+                f"families={len(self.families)}, exact={self.exact})")
+
+
+# ---------------------------------------------------------------------------
+# Compile cache
+# ---------------------------------------------------------------------------
+_PROGRAM_CACHE: "OrderedDict[tuple, ChainProgram]" = OrderedDict()
+_PROGRAM_CACHE_MAX = 8
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+#: Identity fast path: recent ``(traces, specs, params, refine) ->
+#: program`` bindings keyed by trace object identity, so hot loops that
+#: re-run the *same* trace objects (experiment sweeps, benchmarks, the
+#: host layer's compare_policies) skip even the content digest.  Strong
+#: refs to the traces are kept so ids cannot be recycled.
+_IDENTITY_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_IDENTITY_CACHE_MAX = 4
+
+
+def _trace_digest(trace: Trace) -> bytes:
+    h = hashlib.sha1()
+    for f in ("op", "zone", "size", "issue", "thread", "qd", "occupancy",
+              "was_finished", "io_ctx"):
+        a = np.ascontiguousarray(getattr(trace, f))
+        h.update(a.tobytes())
+    h.update(bytes([int(trace.stack), int(trace.fmt)]))
+    return h.digest()
+
+
+def program_cache_info() -> Dict[str, int]:
+    return dict(_CACHE_STATS, size=len(_PROGRAM_CACHE),
+                maxsize=_PROGRAM_CACHE_MAX)
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+    _IDENTITY_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def _cache_get(key):
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is not None:
+        _PROGRAM_CACHE.move_to_end(key)
+        _CACHE_STATS["hits"] += 1
+    else:
+        _CACHE_STATS["misses"] += 1
+    return prog
+
+
+def _cache_put(key, prog: ChainProgram) -> None:
+    _PROGRAM_CACHE[key] = prog
+    _PROGRAM_CACHE.move_to_end(key)
+    while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+        _PROGRAM_CACHE.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _DeviceLowering:
+    """Mutable per-device scratch state during compilation."""
+
+    n: int
+    order: np.ndarray
+    inv: np.ndarray
+    issue: np.ndarray          # event order
+    svc0: np.ndarray           # jitter-free service times, event order
+    base: list                 # [(kind, perm, heads)] from trace_chain_families
+    caps: dict                 # kind -> capacity for reordered kinds
+    members: dict              # kind -> sorted member indices
+    tperm: Optional[np.ndarray] = None
+    theads: Optional[np.ndarray] = None
+    reordered: Optional[list] = None    # [(label, perm, heads)] current
+    needs_refine: bool = False
+    multiclass: Tuple[str, ...] = ()
+
+
+def _lower_device(trace: Trace, spec: ZNSDeviceSpec, params
+                  ) -> _DeviceLowering:
+    n = len(trace)
+    if n == 0:
+        e = np.zeros(0, dtype=np.int64)
+        return _DeviceLowering(n=0, order=e, inv=e.copy(),
+                               issue=np.zeros(0), svc0=np.zeros(0),
+                               base=[], caps={}, members={})
+    order = np.argsort(trace.issue, kind="stable")
+    inv = np.empty(n, dtype=np.int64)
+    inv[order] = np.arange(n)
+    svc0 = compute_service_times(trace, params, seed=0, jitter=False)[order]
+    base = trace_chain_families(
+        trace.op[order], trace.zone[order].astype(np.int64),
+        trace.thread[order].astype(np.int64),
+        np.maximum(trace.qd[order].astype(np.int64), 1), spec,
+        meta_on_io_path=bool(params.reset_on_io_path))
+    dev = _DeviceLowering(n=n, order=order, inv=inv,
+                          issue=trace.issue[order], svc0=svc0, base=base,
+                          caps={}, members={})
+    for kind, perm, heads in base:
+        if kind == "thread":
+            dev.tperm, dev.theads = perm, heads
+        if kind in REORDERED_KINDS:
+            dev.members[kind] = np.sort(perm)
+            dev.caps[kind] = _pool_capacity(kind, spec)
+    dev.needs_refine = any(kind in dev.members
+                           for kind in REFINE_TRIGGER_KINDS)
+    return dev
+
+
+def _thread_ready(dev: _DeviceLowering, comp: np.ndarray) -> np.ndarray:
+    """Event-heap pop keys: max(issue, lag-qd same-thread completion)."""
+    ready = dev.issue.copy()
+    tp, th = dev.tperm, dev.theads
+    tail = ~th[1:]
+    idx = tp[1:][tail]
+    ready[idx] = np.maximum(ready[idx], comp[tp[:-1]][tail])
+    return ready
+
+
+def _fifo_chain(members: np.ndarray, key: np.ndarray, issue: np.ndarray,
+                cap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Lag-``cap`` FIFO chains over ``members`` sorted by pop order
+    ``(key, issue, index)`` -- the event heap's tie-breaking."""
+    k = np.lexsort((members, issue[members], key[members]))
+    m = members[k]
+    cid = np.arange(len(m)) % cap
+    o = np.argsort(cid, kind="stable")
+    perm = m[o]
+    heads = np.r_[True, cid[o][1:] != cid[o][:-1]] if len(m) else \
+        np.zeros(0, dtype=bool)
+    return perm, heads
+
+
+def _reorder_pools(dev: _DeviceLowering, comp: np.ndarray) -> list:
+    """Rebuild every reordered family from current readiness estimates:
+    per-service-class subchains + a cross-class coupling chain."""
+    ready = _thread_ready(dev, comp)
+    out = []
+    multi = []
+    for kind in REORDERED_KINDS:
+        if kind not in dev.members:
+            continue
+        members = dev.members[kind]
+        cap = dev.caps[kind]
+        classes = np.unique(dev.svc0[members])
+        if len(classes) > 1 and cap > 1:
+            multi.append(kind)
+            # cross-class coupling: FIFO over the whole pool in pop
+            # order (approximate: greedy heterogeneous assignment is
+            # not order-preserving), plus one exact-within-class
+            # subchain per service class.
+            out.append((kind, *_fifo_chain(members, ready, dev.issue, cap)))
+            for j, c in enumerate(classes):
+                sub = members[dev.svc0[members] == c]
+                out.append((f"{kind}/cls{j}",
+                            *_fifo_chain(sub, ready, dev.issue, cap)))
+        else:
+            # single service class — or a single server, where FIFO in
+            # pop order is exact regardless of service heterogeneity
+            out.append((kind, *_fifo_chain(members, ready, dev.issue, cap)))
+    dev.multiclass = tuple(multi)
+    return out
+
+
+def _family_lists(devs: Sequence[_DeviceLowering], *, include_reordered: bool
+                  ) -> List[list]:
+    """Per-device ``[(label, perm, heads)]`` for assembly.  Devices that
+    never needed refinement keep their base families verbatim (bitwise
+    compatibility with the pre-compiler engine)."""
+    out = []
+    for dev in devs:
+        fams = []
+        for kind, perm, heads in dev.base:
+            if dev.needs_refine and kind in REORDERED_KINDS:
+                continue        # replaced by the reordered versions
+            fams.append((kind, perm, heads))
+        if include_reordered and dev.needs_refine and dev.reordered:
+            fams.extend(dev.reordered)
+        out.append(fams)
+    return out
+
+
+def _label_rank(label: str) -> Tuple[int, str]:
+    from .engine import FAMILY_ORDER
+    base = label.split("/", 1)[0]
+    try:
+        return FAMILY_ORDER.index(base), label
+    except ValueError:
+        return len(FAMILY_ORDER), label
+
+
+def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
+              exact: bool, refine_used: int, order_stable: bool
+              ) -> ChainProgram:
+    offsets, off = [], 0
+    for dev in devs:
+        offsets.append(off)
+        off += dev.n
+    n_flat = off
+    issue_flat = np.concatenate([dev.issue for dev in devs]) if devs else \
+        np.zeros(0)
+    svc0_flat = np.concatenate([dev.svc0 for dev in devs]) if devs else \
+        np.zeros(0)
+    # split every (device, family) into its chains; chains are the
+    # batching unit: bucketed by length across devices so one block
+    # solves all similar-length chains of a family fleet-wide
+    chains: "OrderedDict[str, list]" = OrderedDict()
+    for d, fams in enumerate(fam_lists):
+        for label, perm, heads in fams:
+            if len(perm) == 0:
+                continue
+            cuts = np.flatnonzero(heads)
+            for c in np.split(offsets[d] + perm, cuts[1:]):
+                chains.setdefault(label, []).append(c)
+    blocks = []
+    for label in sorted(chains, key=_label_rank):
+        chs = chains[label]
+        for bucket in length_buckets([len(c) for c in chs],
+                                     ratio=CHAIN_BUCKET_RATIO):
+            sub = [chs[i] for i in bucket]
+            R = len(sub)
+            L = max(len(c) for c in sub)
+            if R >= POSLOOP_MIN_CHAINS and \
+                    R * np.log2(max(L, 2)) >= POSLOOP_COST_CUTOVER:
+                gidx = np.full((L, R), n_flat, dtype=np.int64)
+                heads = np.ones((L, R), dtype=bool)
+                for r, c in enumerate(sub):
+                    gidx[:len(c), r] = c
+                    heads[1:len(c), r] = False
+                blocks.append(FamilyBlock(label=label, gidx=gidx,
+                                          heads=heads, layout="cols"))
+            else:
+                gidx = np.full((R, L), n_flat, dtype=np.int64)
+                heads = np.ones((R, L), dtype=bool)
+                for r, c in enumerate(sub):
+                    gidx[r, :len(c)] = c
+                    heads[r, 1:len(c)] = False
+                blocks.append(FamilyBlock(label=label, gidx=gidx,
+                                          heads=heads, layout="rows"))
+    multiclass = tuple(sorted({k for dev in devs for k in dev.multiclass}))
+    return ChainProgram(
+        n_flat=n_flat, offsets=tuple(offsets),
+        orders=tuple(dev.order for dev in devs),
+        invs=tuple(dev.inv for dev in devs),
+        issue_flat=issue_flat, svc0_flat=svc0_flat,
+        families=tuple(blocks), exact=exact,
+        multiclass_pools=multiclass, refine_used=refine_used,
+        order_stable=order_stable)
+
+
+def compile_fleet_program(traces: Sequence[Trace],
+                          specs: Sequence[ZNSDeviceSpec],
+                          lats: Sequence, *,
+                          refine: int = DEFAULT_REFINE,
+                          cache: bool = True) -> ChainProgram:
+    """Lower N devices' traces into one fused :class:`ChainProgram`.
+
+    ``lats[i]`` may be a :class:`repro.core.LatencyModel` or a bare
+    :class:`repro.core.LatencyParams` pytree.  Compilation is
+    deterministic in ``(traces, specs, params, refine)`` -- service
+    classes and pop-order refinement use jitter-free service times --
+    and cached in a module-level LRU on exactly that key.
+    """
+    B = len(traces)
+    if not (len(specs) == len(lats) == B):
+        raise ValueError(f"fleet shape mismatch: {B} traces, {len(specs)} "
+                         f"specs, {len(lats)} latency models")
+    params = [resolve_params(l) for l in lats]
+    key = None
+    if cache:
+        ikey = (tuple(id(t) for t in traces), tuple(specs), tuple(params),
+                int(refine))
+        ihit = _IDENTITY_CACHE.get(ikey)
+        if ihit is not None and all(a is b for a, b in
+                                    zip(ihit[0], traces)):
+            _IDENTITY_CACHE.move_to_end(ikey)
+            _CACHE_STATS["hits"] += 1
+            return ihit[1]
+        # replicated workloads pass the same trace object many times;
+        # digest each object once
+        memo: Dict[int, bytes] = {}
+        digests = []
+        for t in traces:
+            d = memo.get(id(t))
+            if d is None:
+                d = memo[id(t)] = _trace_digest(t)
+            digests.append(d)
+        key = (tuple(digests), tuple(specs), tuple(params), int(refine))
+        hit = _cache_get(key)
+        if hit is not None:
+            _IDENTITY_CACHE[ikey] = (tuple(traces), hit)
+            while len(_IDENTITY_CACHE) > _IDENTITY_CACHE_MAX:
+                _IDENTITY_CACHE.popitem(last=False)
+            return hit
+    devs = [_lower_device(traces[b], specs[b], params[b]) for b in range(B)]
+    refine_used = 0
+    order_stable = True
+    if any(dev.needs_refine for dev in devs) and refine > 0:
+        svc0_flat = np.concatenate([dev.svc0 for dev in devs])
+        offsets = np.cumsum([0] + [dev.n for dev in devs])
+
+        def _rebuild(comp) -> bool:
+            """Re-derive pop orders from ``comp``; True if any changed."""
+            changed = False
+            for d, dev in enumerate(devs):
+                if not dev.needs_refine:
+                    continue
+                new = _reorder_pools(dev, comp[offsets[d]:offsets[d + 1]])
+                if dev.reordered is None or len(new) != len(dev.reordered) \
+                        or any(not np.array_equal(a[1], b[1])
+                               for a, b in zip(new, dev.reordered)):
+                    changed = True
+                dev.reordered = new
+            return changed
+
+        # bootstrap: solve with the reordered families *removed* so the
+        # first readiness estimate is not poisoned by a wrong pool order
+        boot = _assemble(devs, _family_lists(devs, include_reordered=False),
+                         exact=False, refine_used=0, order_stable=False)
+        comp, _, _ = solve_program(boot, svc0_flat, sweeps=_REFINE_SWEEPS,
+                                   warn=False)
+        order_stable = False
+        for it in range(max(int(refine), 1)):
+            changed = _rebuild(comp)
+            if not changed and it > 0:
+                order_stable = True
+                break
+            prog_it = _assemble(devs,
+                                _family_lists(devs, include_reordered=True),
+                                exact=False, refine_used=it + 1,
+                                order_stable=False)
+            comp, _, _ = solve_program(prog_it, svc0_flat,
+                                       sweeps=_REFINE_SWEEPS, warn=False)
+            refine_used = it + 1
+        else:
+            # budget exhausted: stable iff the final solve reproduces
+            # the frozen order (saves the flag; chains stay as frozen)
+            frozen = [dev.reordered for dev in devs]
+            order_stable = not _rebuild(comp)
+            for dev, fams in zip(devs, frozen):
+                dev.reordered = fams
+    exact = order_stable and not any(dev.multiclass for dev in devs)
+    prog = _assemble(devs, _family_lists(devs, include_reordered=True),
+                     exact=exact, refine_used=refine_used,
+                     order_stable=order_stable)
+    if cache and key is not None:
+        _cache_put(key, prog)
+        _IDENTITY_CACHE[ikey] = (tuple(traces), prog)
+        while len(_IDENTITY_CACHE) > _IDENTITY_CACHE_MAX:
+            _IDENTITY_CACHE.popitem(last=False)
+    return prog
+
+
+def compile_program(trace: Trace, spec: ZNSDeviceSpec, lat, *,
+                    refine: int = DEFAULT_REFINE,
+                    cache: bool = True) -> ChainProgram:
+    """Single-device convenience wrapper of :func:`compile_fleet_program`.
+
+    Example (a saturated two-thread append pool — exact on the fast
+    backend because the pool is single-service-class and its pop order
+    stabilizes)::
+
+        >>> from repro.core import (KiB, WorkloadSpec, ZnsDevice,
+        ...                         compile_program, solve_program)
+        >>> dev = ZnsDevice()
+        >>> wl = (WorkloadSpec()
+        ...       .appends(n=64, size=8 * KiB, qd=4, zone=0, nzones=4)
+        ...       .appends(n=64, size=8 * KiB, qd=4, zone=4, nzones=4))
+        >>> prog = compile_program(wl.build(), dev.spec, dev.lat)
+        >>> prog.n_flat, prog.n_devices, prog.exact
+        (128, 1, True)
+        >>> comp, sweeps_used, converged = solve_program(
+        ...     prog, prog.svc0_flat)
+        >>> converged and sweeps_used >= 1
+        True
+    """
+    return compile_fleet_program([trace], [spec], [lat], refine=refine,
+                                 cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# Fused fixpoint solve
+# ---------------------------------------------------------------------------
+def _posloop_scan(cur: np.ndarray, svc: np.ndarray) -> np.ndarray:
+    """Exact chain recurrence, sequential over positions (rows of the
+    (L, R) matrices), vectorized across the R chains:
+    ``c_j = max(c_{j-1} + svc_j, cur_j)`` — identical arithmetic to the
+    event engine's per-chain loop, O(n) work."""
+    out = np.empty_like(cur)
+    out[0] = cur[0]
+    prev = out[0]
+    for j in range(1, cur.shape[0]):
+        o = out[j]
+        np.add(prev, svc[j], out=o)
+        np.maximum(o, cur[j], out=o)
+        prev = o
+    return out
+
+
+def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
+                 sweeps: int, scan_backend: str
+                 ) -> Tuple[np.ndarray, int, bool]:
+    comp = np.append(program.issue_flat + svc_flat, -np.inf)
+    svc_ext = np.append(svc_flat, 0.0)
+    svc_mats = [svc_ext[blk.gidx] for blk in program.families]
+    used, converged = 0, True
+    budget = max(int(sweeps), 1)
+    for s in range(budget):
+        moved = False
+        for blk, svc_m in zip(program.families, svc_mats):
+            cur = comp[blk.gidx]
+            cols = blk.layout == "cols"
+            if s == 0:
+                # first sweep: everything is a fresh lower bound — scan
+                # all lanes, skip the fixpoint pre-check.  With more
+                # budget, assume movement (the next sweep's O(L) checks
+                # settle it cheaply); on a one-sweep budget, movement
+                # must be measured or an already-converged trace would
+                # be misreported as truncated.
+                lanes = None
+                moved = moved or budget > 1
+                full = True
+            else:
+                # A chain is at its fixpoint iff every intra-chain edge
+                # satisfies c_i >= c_{i-1} + svc_i (heads/padding
+                # excluded) — an O(L) check, ~log(run) cheaper than the
+                # scan it guards.  Only violated chains are re-solved;
+                # convergence sweeps (and chains untouched by other
+                # families' updates) cost one shifted compare instead
+                # of a scan.
+                if cols:
+                    viol = (cur[1:] * (1.0 + 1e-12) + 1e-9
+                            < cur[:-1] + svc_m[1:]) & ~blk.heads[1:]
+                    lanes = viol.any(axis=0)
+                else:
+                    viol = (cur[:, 1:] * (1.0 + 1e-12) + 1e-9
+                            < cur[:, :-1] + svc_m[:, 1:]) \
+                        & ~blk.heads[:, 1:]
+                    lanes = viol.any(axis=1)
+                if not lanes.any():
+                    continue
+                moved = True
+                full = bool(lanes.all())
+            if cols:
+                cur_s = cur if full else np.ascontiguousarray(cur[:, lanes])
+                svc_s = svc_m if full else \
+                    np.ascontiguousarray(svc_m[:, lanes])
+                upd = _posloop_scan(cur_s, svc_s)
+                gidx_s = blk.gidx if full else blk.gidx[:, lanes]
+            else:
+                cur_s = cur if full else cur[lanes]
+                svc_s = svc_m if full else svc_m[lanes]
+                heads_s = blk.heads if full else blk.heads[lanes]
+                out = zone_sequential_completions_batched(
+                    cur_s - svc_s, svc_s, heads_s, backend=scan_backend)
+                upd = np.maximum(cur_s, out)
+                gidx_s = blk.gidx if full else blk.gidx[lanes]
+            if s == 0 and budget == 1:
+                # one-sweep budget: measure real progress (mask padding
+                # — the position loop carries finite values through it)
+                moved = moved or bool(
+                    ((upd > cur_s * (1.0 + 1e-12) + 1e-9)
+                     & (gidx_s != len(comp) - 1)).any())
+            # each real index appears at most once per family block, so
+            # fancy assignment is a well-defined scatter; the padding
+            # slots all collapse onto the dead slot, reset below.
+            comp[gidx_s] = upd
+            comp[-1] = -np.inf
+        used = s + 1
+        if not moved:
+            converged = True
+            break
+        converged = False
+    return comp[:-1], used, converged
+
+
+def _solve_kernel(program: ChainProgram, svc_flat: np.ndarray, *,
+                  sweeps: int, impl: str) -> Tuple[np.ndarray, int, bool]:
+    from repro.kernels import ops as kops
+    comp, used, converged = kops.zns_fixpoint(
+        program.issue_flat + svc_flat, svc_flat,
+        tuple(blk.rows_view() for blk in program.families),
+        sweeps=max(int(sweeps), 1), impl=impl)
+    return (np.asarray(comp, dtype=np.float64), int(used), bool(converged))
+
+
+def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
+                  sweeps: int = 8, scan_backend: str = "auto",
+                  fixpoint: str = "auto", warn: bool = True
+                  ) -> Tuple[np.ndarray, int, bool]:
+    """Run the fused Gauss-Seidel fixpoint; returns ``(completions,
+    sweeps_used, converged)`` in flat event order.
+
+    ``fixpoint`` selects the driver: ``"loop"`` iterates family blocks
+    in Python around the batched scan (float64; ``scan_backend`` as in
+    :func:`repro.core.engine.zone_sequential_completions_batched`),
+    ``"xla"`` / ``"pallas"`` run all sweeps x families in one jitted
+    ``lax.while_loop`` / Pallas kernel (float32,
+    ``repro.kernels.zns_fixpoint``); ``"auto"`` picks the kernel on TPU
+    and the float64 loop elsewhere.  When the sweep budget is exhausted
+    while constraints are still moving the result is a documented
+    under-approximation -- a :class:`RuntimeWarning` is emitted unless
+    ``warn=False``.
+    """
+    if program.n_flat == 0:
+        return np.zeros(0, dtype=np.float64), 0, True
+    if len(svc_flat) != program.n_flat:
+        raise ValueError(f"service vector has {len(svc_flat)} entries for a "
+                         f"{program.n_flat}-request program")
+    if fixpoint == "auto":
+        fixpoint = "pallas" if _on_tpu() else "loop"
+    if fixpoint == "loop":
+        comp, used, converged = _solve_numpy(
+            program, np.asarray(svc_flat, dtype=np.float64),
+            sweeps=sweeps, scan_backend=scan_backend)
+    elif fixpoint in ("xla", "pallas", "interpret"):
+        comp, used, converged = _solve_kernel(
+            program, np.asarray(svc_flat, dtype=np.float64),
+            sweeps=sweeps, impl=fixpoint)
+    else:
+        raise ValueError(f"unknown fixpoint driver {fixpoint!r}; expected "
+                         f"auto | loop | xla | pallas | interpret")
+    if not converged and warn:
+        warnings.warn(
+            f"chain-program fixpoint exhausted its sweep budget "
+            f"({sweeps}) while still moving; completions are a lower "
+            f"bound. Raise ZnsDevice.run(..., sweeps=...) or inspect "
+            f"SimResult.converged.", RuntimeWarning, stacklevel=3)
+    return comp, used, converged
+
+
+def unpack_results(program: ChainProgram, comp_flat: np.ndarray,
+                   svc_flat: np.ndarray, svc_origs: Sequence[np.ndarray]
+                   ) -> List["SimResult"]:
+    """Split a flat solve back into per-device trace-order results."""
+    from .engine import SimResult
+    out = []
+    for d in range(program.n_devices):
+        sl = program.device_slice(d)
+        if sl.stop == sl.start:
+            z = np.zeros(0, dtype=np.float64)
+            out.append(SimResult(start=z, complete=z.copy(),
+                                 service=svc_origs[d]))
+            continue
+        comp = comp_flat[sl]
+        svc = svc_flat[sl]
+        inv = program.invs[d]
+        out.append(SimResult(start=(comp - svc)[inv].copy(),
+                             complete=comp[inv].copy(),
+                             service=svc_origs[d]))
+    return out

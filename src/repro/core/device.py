@@ -10,10 +10,14 @@ the closed-form :class:`ThroughputModel`, and runs declarative
 
 * ``"event"``      — the per-request discrete-event engine (exact pools,
   greedy server assignment); reference semantics.
-* ``"vectorized"`` — chain-decomposed max-plus scans batched through
-  ``zone_sequential_completions`` (the Pallas kernel on TPU, a numpy
-  doubling scan elsewhere); order-of-magnitude faster on large traces.
-* ``"auto"``       — vectorized for large traces, event otherwise.
+* ``"vectorized"`` — the trace compiles (once, content-cached) into a
+  :class:`repro.core.ChainProgram` solved by one fused max-plus
+  fixpoint (the Pallas ``zns_fixpoint`` kernel on TPU, the batched
+  float64 doubling scan elsewhere); order-of-magnitude faster on large
+  traces and, on jitter-free runs, exact even on saturated
+  single-service-class pools.
+* ``"auto"``       — vectorized for large traces, event otherwise
+  (threshold per session: ``ZnsDevice(auto_threshold=...)``).
 
 Third parties can add backends with :func:`register_backend`.
 
@@ -55,8 +59,13 @@ from .spec import (
 from .state_machine import ZoneManager
 from .workload import WorkloadSpec
 
-#: Trace length above which ``backend="auto"`` picks the vectorized engine.
+#: Default trace length above which ``backend="auto"`` picks the
+#: vectorized engine.  Per-session override: ``ZnsDevice(auto_threshold=…)``
+#: / ``DeviceFleet(…, auto_threshold=…)``.
 AUTO_VECTORIZED_MIN = 8192
+
+#: Workload→trace memo entries kept per device session.
+_TRACE_MEMO_MAX = 16
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +132,21 @@ class RunResult:
     def throughput_timeseries(self, *, bin_s: float = 1.0):
         return throughput_timeseries(self.sim.complete, self.trace.size,
                                      bin_s=bin_s)
+
+    # -- convergence diagnostics (chain-program fixpoint backends) ----------
+    @property
+    def sweeps_used(self) -> int:
+        """Gauss–Seidel sweeps the fixpoint solver spent (0 = event
+        engine, which is exact by construction)."""
+        return self.sim.sweeps_used
+
+    @property
+    def converged(self) -> bool:
+        """False when the sweep budget was exhausted while constraints
+        were still moving — completions are then a lower bound (a
+        RuntimeWarning was emitted at solve time; re-run with a larger
+        ``sweeps=``)."""
+        return self.sim.converged
 
     def summary(self, metrics: Optional[Sequence[str]] = None
                 ) -> Dict[str, float]:
@@ -226,11 +250,12 @@ def _vectorized_backend(trace, spec, lat, *, seed=0, jitter=True, **opts):
                                **opts)
 
 
-def _resolve_auto(n_requests: int) -> str:
+def _resolve_auto(n_requests: int,
+                  threshold: int = AUTO_VECTORIZED_MIN) -> str:
     # Tolerate a mutated registry (third parties may unregister or
     # replace the built-ins mid-session): fall back from the preferred
     # engine to its sibling, then to any registered backend.
-    want = "vectorized" if n_requests >= AUTO_VECTORIZED_MIN else "event"
+    want = "vectorized" if n_requests >= threshold else "event"
     alt = "event" if want == "vectorized" else "vectorized"
     for cand in (want, alt, *available_backends()):
         if cand in _BACKENDS:
@@ -239,9 +264,10 @@ def _resolve_auto(n_requests: int) -> str:
                    "registered (registry was emptied mid-session)")
 
 
-def _resolve_backend(name: str, trace: Trace) -> str:
+def _resolve_backend(name: str, trace: Trace, *,
+                     threshold: int = AUTO_VECTORIZED_MIN) -> str:
     if name == "auto":
-        return _resolve_auto(len(trace))
+        return _resolve_auto(len(trace), threshold)
     if name not in _BACKENDS:
         raise KeyError(f"unknown backend {name!r}; available: "
                        f"{available_backends()} (or 'auto')")
@@ -270,11 +296,22 @@ class ZnsDevice:
 
     def __init__(self, spec: Optional[ZNSDeviceSpec] = None, *,
                  lat: Optional[LatencyModel] = None,
-                 throughput: Optional[ThroughputModel] = None):
+                 throughput: Optional[ThroughputModel] = None,
+                 auto_threshold: Optional[int] = None):
+        """``auto_threshold``: trace length at which ``backend="auto"``
+        switches from the event engine to the vectorized chain-program
+        engine (default :data:`AUTO_VECTORIZED_MIN`).  Lower it for
+        sessions dominated by repeated mid-size workloads (the compiled
+        program is cached, so the vectorized engine amortizes sooner);
+        raise it to pin small-but-subtle traces to reference semantics.
+        """
         self.spec = spec if spec is not None else ZNSDeviceSpec()
         self.lat = lat or LatencyModel(self.spec)
         self.zones = ZoneManager(self.spec)
         self.throughput = throughput or ThroughputModel(self.spec, self.lat)
+        self.auto_threshold = AUTO_VECTORIZED_MIN if auto_threshold is None \
+            else int(auto_threshold)
+        self._trace_memo: Dict = {}
 
     @property
     def params(self) -> LatencyParams:
@@ -292,11 +329,22 @@ class ZnsDevice:
         """Simulate a workload; returns a :class:`RunResult`.
 
         ``workload`` may be a :class:`WorkloadSpec` (lowered via
-        ``build()``) or an already-built :class:`Trace`.
+        ``build()``; the built trace is memoized per device session, and
+        the vectorized backend's compiled :class:`repro.core.ChainProgram`
+        is cached by content — repeated runs of the same workload skip
+        both lowering steps) or an already-built :class:`Trace`.
         """
-        trace = workload.build() if isinstance(workload, WorkloadSpec) \
-            else workload
-        name = _resolve_backend(backend, trace)
+        if isinstance(workload, WorkloadSpec):
+            trace = self._trace_memo.get(workload)
+            if trace is None:
+                trace = workload.build()
+                if len(self._trace_memo) >= _TRACE_MEMO_MAX:
+                    self._trace_memo.pop(next(iter(self._trace_memo)))
+                self._trace_memo[workload] = trace
+        else:
+            trace = workload
+        name = _resolve_backend(backend, trace,
+                                threshold=self.auto_threshold)
         sim = _BACKENDS[name](trace, self.spec, self.lat, seed=seed,
                               jitter=jitter, **backend_opts)
         return RunResult(trace=trace, sim=sim, backend=name)
@@ -441,6 +489,12 @@ class FleetRunResult:
     def total_bandwidth_bytes(self) -> float:
         return float(sum(r.bandwidth_bytes for r in self.results if len(r)))
 
+    @property
+    def converged(self) -> bool:
+        """True unless any device's fixpoint exhausted its sweep budget
+        (see :attr:`RunResult.converged`)."""
+        return all(r.converged for r in self.results)
+
     def latency_stats(self, op: Optional[OpType] = None, *,
                       from_issue: bool = False) -> LatencyStats:
         """Fleet-pooled latency percentiles across all devices."""
@@ -494,13 +548,16 @@ class DeviceFleet:
         (2, [64, 64])
     """
 
-    def __init__(self, members: Sequence):
+    def __init__(self, members: Sequence, *,
+                 auto_threshold: Optional[int] = None):
         devices = []
         for m in members:
             devices.append(self._as_device(m))
         if not devices:
             raise ValueError("DeviceFleet needs at least one member")
         self.devices: tuple = tuple(devices)
+        self.auto_threshold = AUTO_VECTORIZED_MIN if auto_threshold is None \
+            else int(auto_threshold)
 
     @staticmethod
     def _as_device(m) -> ZnsDevice:
@@ -589,7 +646,8 @@ class DeviceFleet:
         elif len(seeds) != self.n:
             raise ValueError(f"got {len(seeds)} seeds for {self.n} devices")
         total = sum(len(t) for t in traces)
-        name = _resolve_auto(total) if backend == "auto" else backend
+        name = _resolve_auto(total, self.auto_threshold) \
+            if backend == "auto" else backend
         if name not in _BACKENDS:
             raise KeyError(f"unknown backend {name!r}; available: "
                            f"{available_backends()} (or 'auto')")

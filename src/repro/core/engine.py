@@ -19,8 +19,11 @@ shims for existing callers).  Three complementary engines, all built on
   (Obs#12, enforced structurally via a dedicated metadata pool).
 
 * :func:`simulate_vectorized` — the ``"vectorized"`` ZnsDevice backend:
-  decomposes a trace into serialized chains solved by batched max-plus
-  scans, 10-20x faster than the event loop on 100k+-request traces.
+  lowers the trace (once, content-cached) into a
+  :class:`repro.core.ChainProgram` of serialized chains and solves it
+  with one fused max-plus fixpoint (:mod:`repro.core.chain_program`),
+  10-20x faster than the event loop on 100k+-request traces and exact
+  on saturated single-service-class pools (multi-thread append pools).
 
 The per-zone sequential-completion recurrence that dominates large traces
 (``c_i = max(c_{i-1}, s_i) + v_i``) is a max-plus linear scan; the TPU
@@ -204,6 +207,13 @@ class SimResult:
     start: np.ndarray      # service start (us)
     complete: np.ndarray   # completion (us)
     service: np.ndarray    # service time (us)
+    #: Gauss–Seidel sweeps spent by the fixpoint solver (0 for the
+    #: event engine, whose heap loop is exact by construction).
+    sweeps_used: int = 0
+    #: False when the sweep budget ran out while constraints were still
+    #: moving — completions are then a documented lower bound (a
+    #: RuntimeWarning is emitted at solve time).
+    converged: bool = True
 
     @property
     def in_device_latency(self) -> np.ndarray:
@@ -615,26 +625,75 @@ def trace_chain_families(ops, zone, thread, qd, spec: ZNSDeviceSpec, *,
 def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
                         lat: Optional[LatencyModel] = None, *, seed: int = 0,
                         jitter: bool = True, sweeps: int = 8,
-                        scan_backend: str = "auto") -> SimResult:
+                        scan_backend: str = "auto", fixpoint: str = "auto",
+                        refine: Optional[int] = None,
+                        program=None) -> SimResult:
     """Vectorized counterpart of :func:`simulate` for large traces.
 
-    The event engine's per-request constraints decompose into serialized
-    *chains*: the per-zone write chain, the metadata (RESET/FINISH) chain,
-    per-thread closed-loop lag-``qd`` chains, and lag-``capacity`` pool
-    chains for the flash/append/mgmt server pools.  Each chain is the
-    max-plus recurrence ``c_i = max(c_{i-1}, ready_i) + svc_i``, solved as
-    a batch of segments through :func:`zone_sequential_completions` (the
-    Pallas max-plus scan on TPU, the numpy doubling scan elsewhere).
-    Cross-chain coupling is resolved by Gauss–Seidel sweeps from below,
-    which converge to the event engine's least fixpoint; ``sweeps`` bounds
-    the iteration (traces from :class:`repro.core.WorkloadSpec` converge
-    in 2–3).
+    The trace is lowered once into a :class:`repro.core.ChainProgram`
+    (cached by content, see :mod:`repro.core.chain_program`): the event
+    engine's per-request constraints decompose into serialized *chains*
+    — per-zone write chains, the metadata (RESET/FINISH) chain,
+    per-thread closed-loop lag-``qd`` chains, and lag-``capacity``
+    server-pool chains split per service class and ordered by the event
+    heap's pop order.  The compiled program is then solved by one fused
+    Gauss–Seidel fixpoint of batched segmented max-plus scans
+    (:func:`repro.core.chain_program.solve_program`): the Pallas
+    ``zns_fixpoint`` kernel on TPU, the batched float64 numpy doubling
+    scan elsewhere.  ``sweeps`` bounds the iteration; exhaustion sets
+    ``SimResult.converged = False`` and warns.
 
-    Exact (up to float associativity) whenever each request's binding
-    constraint is one of those chains — i.e. the server pools are either
-    slack or saturated with near-homogeneous service times; the greedy
-    per-server assignment of the event engine is approximated by a FIFO
-    lag-``capacity`` recurrence otherwise.
+    Exact (to float tolerance) versus :func:`simulate` on jitter-free
+    runs whenever every saturated server pool is single-service-class
+    and its pop order stabilizes during compilation — which covers the
+    paper's saturated multi-thread append pools (Obs#5–#7) and mixed
+    reset/I/O traces; multi-class saturated pools remain a documented
+    FIFO approximation (``ChainProgram.exact`` reports the compiler's
+    claim).  With ``jitter=True`` the service times are perturbed after
+    the pool order was frozen, so saturated pools are approximate
+    (order 1e-2 to 1e-1 relative) regardless of ``exact``.
+
+    ``program`` short-circuits compilation with a pre-compiled program
+    (must match the trace); ``refine`` overrides the pop-order
+    refinement budget (:data:`repro.core.chain_program.DEFAULT_REFINE`).
+    """
+    from . import chain_program as cp
+    lat = lat or LatencyModel(spec)
+    n = len(trace)
+    if n == 0:
+        z = np.zeros(0, dtype=np.float64)
+        return SimResult(start=z, complete=z.copy(), service=z.copy())
+    if program is None:
+        program = cp.compile_program(
+            trace, spec, lat,
+            refine=cp.DEFAULT_REFINE if refine is None else refine)
+    if jitter:
+        svc_orig = compute_service_times(trace, lat, seed=seed, jitter=True)
+        svc_flat = svc_orig[program.orders[0]]
+    else:
+        # jitter-free service times are part of the lowering output
+        svc_flat = program.svc0_flat
+        svc_orig = svc_flat[program.invs[0]]
+    comp, used, converged = cp.solve_program(
+        program, svc_flat, sweeps=sweeps, scan_backend=scan_backend,
+        fixpoint=fixpoint)
+    res = cp.unpack_results(program, comp, svc_flat, [svc_orig])[0]
+    return dataclasses.replace(res, sweeps_used=used, converged=converged)
+
+
+def _simulate_vectorized_unfused(trace: Trace,
+                                 spec: ZNSDeviceSpec = ZNSDeviceSpec(),
+                                 lat: Optional[LatencyModel] = None, *,
+                                 seed: int = 0, jitter: bool = True,
+                                 sweeps: int = 8,
+                                 scan_backend: str = "auto") -> SimResult:
+    """Pre-compiler reference: the per-chain Python sweep loop.
+
+    Kept as the baseline of ``benchmarks/chain_program.py`` (the fused
+    :class:`repro.core.ChainProgram` path must beat this) and as an
+    issue-ordered regression oracle.  Pool chains are issue-ordered
+    here, so saturated multi-thread pools are approximate — exactly the
+    gap the compiler closes.
     """
     lat = lat or LatencyModel(spec)
     n = len(trace)
@@ -655,14 +714,15 @@ def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
     svc = svc_orig[order]
 
     # Chain families (see trace_chain_families): exact serialized chains +
-    # lag-capacity FIFO pool chains, shared with the batched fleet engine.
+    # issue-ordered lag-capacity FIFO pool chains.
     chains = [(perm, heads, svc[perm])
               for _, perm, heads in trace_chain_families(
                   ops, zone, thread, qd, spec,
                   meta_on_io_path=bool(resolve_params(lat).reset_on_io_path))]
 
     comp = issue + svc       # lower bound: no queueing at all
-    for _ in range(max(sweeps, 1)):
+    used, converged = 0, True
+    for s in range(max(sweeps, 1)):
         moved = False
         for perm, heads, svc_p in chains:
             # Current begin estimates fold the issue times and every gate
@@ -675,9 +735,12 @@ def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
             if (out > cur * (1.0 + 1e-12) + 1e-9).any():
                 moved = True
                 comp[perm] = np.maximum(cur, out)
+        used = s + 1
         if not moved:
+            converged = True
             break
+        converged = False
 
     start = comp - svc
     return SimResult(start=start[inv].copy(), complete=comp[inv].copy(),
-                     service=svc_orig)
+                     service=svc_orig, sweeps_used=used, converged=converged)

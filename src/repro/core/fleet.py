@@ -1,32 +1,33 @@
 """Batched multi-device simulation engine behind ``DeviceFleet``.
 
 A fleet sweep (N devices x one workload each) used to be a Python loop of
-single-device runs.  This module runs the vectorized backend's
-chain-decomposed max-plus scans *batched across devices*: each device's
-trace is decomposed into the same serialized chain families as
-:func:`repro.core.engine.simulate_vectorized` (per-thread closed-loop
-lag-qd chains, per-zone write chains, metadata engine, lag-capacity pool
-chains), and every Gauss–Seidel sweep solves one family for *all* devices
-with a single (B, L) segmented max-plus scan —
-:func:`repro.core.engine.zone_sequential_completions_batched`, i.e. the
-Pallas kernel's batch grid dimension on TPU and the batched numpy doubling
-scan elsewhere.
+single-device runs.  This module lowers all devices' traces into one
+fleet-level :class:`repro.core.ChainProgram`
+(:func:`repro.core.chain_program.compile_fleet_program`): per-device
+chain families — per-thread closed-loop lag-qd chains, per-zone write
+chains, metadata engine, pop-ordered per-service-class pool chains —
+concatenate into fleet-wide length-bucketed ``(R, L)`` family blocks
+addressing one flat completion vector, and the whole fleet solves as a
+single fused Gauss–Seidel fixpoint of batched segmented max-plus scans
+(the Pallas ``zns_fixpoint`` kernel on TPU, the batched float64 numpy
+doubling scan elsewhere).
 
 Per-device results are bit-compatible with single-device runs: service
-times draw from per-device seeds in the same rng order, chain families are
-identical, the batched scan computes the same per-segment compositions
-(padding rows only append isolated segments), and sweeps apply families in
-the same :data:`repro.core.engine.FAMILY_ORDER`.
+times draw from per-device seeds in the same rng order, lowering is
+per-device (fleet assembly only concatenates and pads; padding rows
+append isolated segments the scan treats as exact no-ops), and sweeps
+apply family blocks in the same canonical order.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from .engine import (
-    FAMILY_ORDER, SimResult, Trace, compute_service_times,
-    trace_chain_families, zone_sequential_completions_batched,
+    SimResult, Trace, compute_service_times,
+    zone_sequential_completions_batched,
 )
 from .latency import resolve_params
 from .spec import ZNSDeviceSpec
@@ -75,102 +76,57 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
                               lats: Sequence,
                               *, seeds: Optional[Sequence[int]] = None,
                               jitter: bool = True, sweeps: int = 8,
-                              scan_backend: str = "auto") -> List[SimResult]:
+                              scan_backend: str = "auto",
+                              fixpoint: str = "auto",
+                              refine: Optional[int] = None,
+                              program=None) -> List[SimResult]:
     """Vectorized simulation of N heterogeneous devices at once.
+
+    All devices' traces are lowered (once, cached) into a single
+    fleet-level :class:`repro.core.ChainProgram` — per-device programs
+    concatenated into one flat completion vector with fleet-wide
+    length-bucketed family blocks — and solved by one fused fixpoint
+    (:func:`repro.core.chain_program.solve_program`): one kernel launch
+    for N heterogeneous devices instead of ``sweeps × families ×
+    devices`` dispatches.
 
     ``lats[i]`` may be a :class:`LatencyModel` or bare
     :class:`LatencyParams`.  ``seeds[i]`` defaults to ``i`` so device ``i``
     draws the jitter stream of a single-device run with ``seed=i``.
     Returns one :class:`SimResult` per device, equal (to float tolerance)
     to a Python loop of per-device ``simulate_vectorized`` calls.
+    ``program`` reuses a pre-compiled fleet program (must match the
+    traces); ``refine`` overrides the pop-order refinement budget.
     """
+    from . import chain_program as cp
     B = len(traces)
     if not (len(specs) == len(lats) == B):
         raise ValueError(f"fleet shape mismatch: {B} traces, {len(specs)} "
                          f"specs, {len(lats)} latency models")
     seeds = list(range(B)) if seeds is None else list(seeds)
     params = [resolve_params(l) for l in lats]
-
-    # -- per-device prep: event order, service times, chain families --------
-    dev = []
-    for b in range(B):
-        tr = traces[b]
-        n = len(tr)
-        svc_orig = compute_service_times(tr, params[b], seed=seeds[b],
-                                         jitter=jitter)
-        if n == 0:
-            dev.append(dict(empty=True, svc_orig=svc_orig))
-            continue
-        order = np.argsort(tr.issue, kind="stable")
-        inv = np.empty(n, dtype=np.int64)
-        inv[order] = np.arange(n)
-        svc = svc_orig[order]
-        fams = dict()
-        for kind, perm, heads in trace_chain_families(
-                tr.op[order], tr.zone[order].astype(np.int64),
-                tr.thread[order].astype(np.int64),
-                np.maximum(tr.qd[order].astype(np.int64), 1),
-                specs[b],
-                meta_on_io_path=bool(params[b].reset_on_io_path)):
-            fams[kind] = (perm, heads)
-        dev.append(dict(n=n, inv=inv, svc=svc, svc_orig=svc_orig,
-                        comp=tr.issue[order] + svc, fams=fams))
-
-    # -- batched per-kind matrices (constant across sweeps) -----------------
-    # Rows are length-bucketed so stacking short mgmt sweeps next to long
-    # I/O traces (heterogeneous experiment batches) doesn't pad every row
-    # to the global max chain length.
-    batched = {}
-    for kind in FAMILY_ORDER:
-        members = [(b, *dev[b]["fams"][kind]) for b in range(B)
-                   if "fams" in dev[b] and kind in dev[b]["fams"]]
-        if not members:
-            continue
-        groups = []
-        for idx in length_buckets([len(perm) for _, perm, _ in members]):
-            sub = [members[i] for i in idx]
-            lens = [len(perm) for _, perm, _ in sub]
-            svc_mat = _pad_rows([dev[b]["svc"][perm] for b, perm, _ in sub],
-                                0.0, np.float64)
-            # padded tail: isolated empty segments at t=0, masked on scatter
-            head_mat = _pad_rows([heads for _, _, heads in sub], True, bool)
-            groups.append((sub, lens, svc_mat, head_mat))
-        batched[kind] = groups
-
-    # -- Gauss–Seidel sweeps, one batched scan per family bucket ------------
-    for _ in range(max(sweeps, 1)):
-        moved = False
-        for kind in FAMILY_ORDER:
-            for members, lens, svc_mat, head_mat in batched.get(kind, ()):
-                cur = np.zeros_like(svc_mat)
-                for r, (b, perm, _) in enumerate(members):
-                    cur[r, :lens[r]] = dev[b]["comp"][perm]
-                out = zone_sequential_completions_batched(
-                    cur - svc_mat, svc_mat, head_mat, backend=scan_backend)
-                for r, (b, perm, _) in enumerate(members):
-                    o, c = out[r, :lens[r]], cur[r, :lens[r]]
-                    # anything beyond float noise counts as progress
-                    if (o > c * (1.0 + 1e-12) + 1e-9).any():
-                        moved = True
-                        dev[b]["comp"][perm] = np.maximum(c, o)
-        if not moved:
-            break
-
-    # -- unpack per-device results ------------------------------------------
-    results = []
-    for b in range(B):
-        if dev[b].get("empty"):
-            z = np.zeros(0, dtype=np.float64)
-            results.append(SimResult(start=z, complete=z.copy(),
-                                     service=dev[b]["svc_orig"]))
-            continue
-        inv = dev[b]["inv"]
-        comp = dev[b]["comp"]
-        svc = dev[b]["svc"]
-        results.append(SimResult(start=(comp - svc)[inv].copy(),
-                                 complete=comp[inv].copy(),
-                                 service=dev[b]["svc_orig"]))
-    return results
+    if program is None:
+        program = cp.compile_fleet_program(
+            traces, specs, params,
+            refine=cp.DEFAULT_REFINE if refine is None else refine)
+    if jitter:
+        svc_origs = [compute_service_times(traces[b], params[b],
+                                           seed=seeds[b], jitter=True)
+                     for b in range(B)]
+        svc_flat = np.concatenate(
+            [svc_origs[b][program.orders[b]] for b in range(B)]) \
+            if B else np.zeros(0)
+    else:
+        # jitter-free service times are part of the lowering output
+        svc_flat = program.svc0_flat
+        svc_origs = [svc_flat[program.device_slice(b)][program.invs[b]]
+                     for b in range(B)]
+    comp, used, converged = cp.solve_program(
+        program, svc_flat, sweeps=sweeps, scan_backend=scan_backend,
+        fixpoint=fixpoint)
+    results = cp.unpack_results(program, comp, svc_flat, svc_origs)
+    return [dataclasses.replace(r, sweeps_used=used, converged=converged)
+            for r in results]
 
 
 def batched_sequential_completions(issues: Sequence[np.ndarray],

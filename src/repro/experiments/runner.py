@@ -5,9 +5,13 @@ list, builds a single heterogeneous :class:`repro.core.DeviceFleet`
 (one member per point — specs and latency-parameter pytrees may differ
 per point), and solves the whole characterization matrix with one
 batched fleet call instead of N sequential device runs.  On the
-``vectorized`` backend this is the chain-decomposed max-plus engine's
-device-axis batch (the Pallas batch grid on TPU); the ``event`` backend
-degrades to a per-point loop with identical semantics.
+``vectorized`` backend every sweep point lowers through the
+trace-compilation layer into one fleet-level
+:class:`repro.core.ChainProgram` solved by a single fused fixpoint
+(compiled programs are cached, so re-running a selection skips
+re-lowering); the ``event`` backend degrades to a per-point loop with
+identical semantics.  Per-experiment results surface the fixpoint's
+convergence diagnostics (``ExperimentResult.converged``).
 
     >>> from repro.experiments import ExperimentRunner
     >>> runner = ExperimentRunner(["obs4"], backend="event")
@@ -58,6 +62,10 @@ class ExperimentResult:
     metrics: Dict[str, float]
     checks: Tuple[Check, ...]
     n_requests: int
+    #: False if any sweep point's fixpoint exhausted its budget (the
+    #: chain-program backends surface convergence; the event engine is
+    #: always converged).
+    converged: bool = True
 
     @property
     def name(self) -> str:
@@ -81,7 +89,7 @@ class ExperimentResult:
             "claim": exp.claim, "figure": exp.figure,
             "knobs": list(exp.knobs), "tests": list(exp.tests),
             "backend": self.backend, "n_requests": self.n_requests,
-            "passed": bool(self.passed),
+            "passed": bool(self.passed), "converged": bool(self.converged),
             "metrics": clean,
             "checks": [{"name": c.name, "ok": bool(c.ok), "detail": c.detail}
                        for c in self.checks],
@@ -135,7 +143,8 @@ class ExperimentRunner:
             out.append(ExperimentResult(
                 experiment=exp, backend=fres.backend, metrics=metrics,
                 checks=checks,
-                n_requests=sum(len(r) for r in results.values())))
+                n_requests=sum(len(r) for r in results.values()),
+                converged=all(r.converged for r in results.values())))
         return out
 
     # -- artifacts -----------------------------------------------------------

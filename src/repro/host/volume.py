@@ -207,6 +207,20 @@ class LogStructuredVolume:
         return 1.0 - used / self.spec.capacity_bytes
 
     # -- compilation ---------------------------------------------------------
+    def compile_program(self, *, include_reclaim: bool = True):
+        """Lower the recorded host history all the way down the compile
+        pipeline: host history → :class:`repro.core.WorkloadSpec` →
+        ``Trace`` → :class:`repro.core.ChainProgram` bound to this
+        volume's device.  The program is content-cached, so repeated
+        :meth:`run`/policy-comparison calls on an unchanged history skip
+        re-lowering; its ``exact`` flag states whether the fused
+        fixpoint reproduces the event engine to float tolerance for
+        this history (single-service-class pools, stable pop order).
+        """
+        from repro.core import compile_program as _compile
+        wl = self.compile(include_reclaim=include_reclaim)
+        return _compile(wl.build(), self.device.spec, self.device.lat)
+
     def compile(self, *, include_reclaim: bool = True) -> WorkloadSpec:
         """Replay the recorded host history as a declarative workload.
 
@@ -216,9 +230,11 @@ class LogStructuredVolume:
         every ``collect``'s captured occupancies (``io_ctx`` charges
         Obs#13) plus one relocation-append stream.  Every stream gets
         its own thread, matching the paper's multi-threaded host
-        layouts; stream counts are kept small enough that the flash pool
-        never saturates, so the ``event`` and ``vectorized`` backends
-        agree to float tolerance on the compiled trace.
+        layouts; every stream is single-service-class, so the compiled
+        trace stays inside the chain-program compiler's exactness
+        envelope and the ``event`` and ``vectorized`` backends agree to
+        float tolerance even when the append pool saturates (see
+        :meth:`compile_program`).
         """
         wl = WorkloadSpec()
         relocated = sum(ev.relocated_bytes for ev in self._events) \

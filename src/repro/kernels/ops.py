@@ -21,6 +21,8 @@ from .rmsnorm import rmsnorm as _rms
 from .ssd_chunk_scan import ssd_chunk_scan as _ssd
 from .zns_event_scan import zns_event_scan as _zns
 from .zns_event_scan import zns_event_scan_batched as _zns_batched
+from .zns_fixpoint import zns_fixpoint as _zns_fixpoint
+from .zns_fixpoint import zns_fixpoint_xla as _zns_fixpoint_xla
 
 
 def _default_impl() -> str:
@@ -83,3 +85,26 @@ def zns_event_scan_batched(issue, svc, seg_start, *, impl: str | None = None):
     if impl == "xla":
         return ref.zns_event_scan_batched_ref(issue, svc, seg_start)
     return _zns_batched(issue, svc, seg_start, interpret=(impl == "interpret"))
+
+
+def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
+                 impl: str | None = None):
+    """Fused chain-program fixpoint: all sweeps × family blocks in one
+    compiled call (the ``ZnsDevice``/``DeviceFleet`` vectorized-backend
+    hot loop on TPU).
+
+    ``blocks``: tuple of ``(gidx, heads)`` padded index/head matrices
+    from :class:`repro.core.ChainProgram`.  Returns ``(completions,
+    sweeps_used, converged)``.  ``impl='xla'`` runs the jitted
+    ``lax.while_loop`` form, ``'pallas'``/``'interpret'`` the Pallas
+    kernel (compiled / interpret mode).
+    """
+    impl = _resolve(impl)
+    blocks = tuple((jnp.asarray(g, dtype=jnp.int32), jnp.asarray(h, bool))
+                   for g, h in blocks)
+    comp0 = jnp.asarray(comp0, dtype=jnp.float32)
+    svc = jnp.asarray(svc, dtype=jnp.float32)
+    if impl == "xla":
+        return _zns_fixpoint_xla(comp0, svc, blocks, sweeps=int(sweeps))
+    return _zns_fixpoint(comp0, svc, blocks, sweeps=int(sweeps),
+                         interpret=(impl == "interpret"))

@@ -201,6 +201,41 @@ def zns_event_scan_batched_ref(issue, svc, seg_start):
     return jax.vmap(zns_event_scan_ref)(issue, svc, seg_start)
 
 
+def zns_fixpoint_ref(comp0, svc, blocks, *, sweeps: int = 8):
+    """Chain-program fixpoint oracle (eager Gauss–Seidel sweeps).
+
+    ``comp0``/``svc``: flat (n,) vectors; ``blocks``: tuple of
+    ``(gidx, heads)`` (R, L) index/head matrices with padding indexed
+    at ``n`` (a dead slot).  Each sweep gathers completions per block,
+    runs the *sequential* batched scan oracle, and scatter-maxes back;
+    stops when nothing moved.  Ground truth for
+    ``repro.kernels.zns_fixpoint``.
+    """
+    rtol, atol = 1e-5, 1e-3          # float32 progress thresholds
+    comp = jnp.append(comp0.astype(jnp.float32), jnp.float32(NEG_INF))
+    svc_e = jnp.append(svc.astype(jnp.float32), jnp.float32(0.0))
+    dead = comp.shape[0] - 1
+    used, moved = 0, True
+    for s in range(max(int(sweeps), 1)):
+        moved = False
+        for gidx, heads in blocks:
+            gidx = jnp.asarray(gidx)
+            svc_m = svc_e[gidx]
+            cur = comp[gidx]
+            out = zns_event_scan_batched_ref(cur - svc_m, svc_m,
+                                             jnp.asarray(heads))
+            # mask padding: it gathers the finite NEG_INF sentinel and
+            # would trivially pass the relative-progress test
+            moved = moved or bool(jnp.any(
+                (out > cur * (1.0 + rtol) + atol) & (gidx < dead)))
+            comp = comp.at[gidx].max(jnp.maximum(cur, out))
+            comp = comp.at[-1].set(jnp.float32(NEG_INF))
+        used = s + 1
+        if not moved:
+            break
+    return comp[:-1], used, not moved
+
+
 # ---------------------------------------------------------------------------
 # shared helper: affine scans as (a, b) pair composition
 # ---------------------------------------------------------------------------

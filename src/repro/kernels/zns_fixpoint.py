@@ -1,0 +1,156 @@
+"""Fused chain-program fixpoint — all sweeps × families in one kernel.
+
+The trace-compilation layer (:mod:`repro.core.chain_program`) lowers a
+fleet of traces into family blocks: padded ``(R, L)`` gather-index +
+segment-head tensors addressing one flat completion vector (dead slot at
+index ``n``).  One Gauss–Seidel sweep applies, per block, a segmented
+max-plus scan to the gathered completions and scatter-maxes the result
+back; sweeps repeat until an early-exit ``moved`` reduction clears.
+
+This module runs that whole fixpoint as one compiled artifact instead of
+``sweeps × families`` host dispatches:
+
+* :func:`zns_fixpoint_xla` — a jitted ``lax.while_loop`` whose body
+  unrolls the (static) family blocks; the per-block scan is the same
+  Hillis–Steele doubling ladder as ``zns_event_scan``, vectorized over
+  rows, and the scatter is ``comp.at[gidx].max(...)`` (duplicate dead
+  indices max-reduce harmlessly).
+* :func:`zns_fixpoint` — the Pallas form: the fixpoint core runs inside
+  a single ``pallas_call`` with the flat completion vector resident in
+  kernel memory, so sweep iteration never round-trips to the host.
+  (Like the other kernels in this package it defaults to interpret mode
+  off-TPU; on TPU the blocks map to VMEM tiles with the while-loop
+  carried in-kernel.)
+
+The semantic ground truth is ``repro.kernels.ref.zns_fixpoint_ref``
+(sequential per-row scans).  Production CPU solves use the float64
+numpy driver in :func:`repro.core.chain_program.solve_program`; these
+float32 kernels are the TPU path and are equivalence-tested against the
+oracle at float32 tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+#: Progress thresholds of the early-exit ``moved`` reduction (float32:
+#: looser than the numpy driver's 1e-12/1e-9).
+MOVED_RTOL = 1e-5
+MOVED_ATOL = 1e-3
+
+
+def _rows_maxplus(start, svc, heads):
+    """Segmented max-plus scan over the rows of (R, L) matrices.
+
+    Same affine-map composition as ``zns_event_scan`` — ``a = svc``
+    (``-inf`` at segment heads), ``b = start + svc`` — as a doubling
+    ladder of ``log2(L)`` shifted composes, vectorized over rows.
+    """
+    r, n = start.shape
+    a = jnp.where(heads, jnp.float32(NEG_INF), svc)
+    b = start + svc
+    k = 1
+    while k < n:
+        a_prev = jnp.concatenate(
+            [jnp.zeros((r, k), jnp.float32), a[:, :-k]], axis=1)
+        b_prev = jnp.concatenate(
+            [jnp.full((r, k), jnp.float32(NEG_INF)), b[:, :-k]], axis=1)
+        # compose earlier (shifted) map, then current: (a_p,b_p) . (a,b)
+        a, b = a_prev + a, jnp.maximum(b_prev + a, b)
+        k *= 2
+    return b
+
+
+def _fixpoint_core(comp_ext, svc_ext, blocks, sweeps: int):
+    """``lax.while_loop`` fixpoint shared by the XLA and Pallas forms.
+
+    ``comp_ext``/``svc_ext``: flat ``(n + 1,)`` vectors (dead slot
+    last); ``blocks``: static tuple of ``(gidx, heads)`` pairs.
+    Returns ``(comp_ext, sweeps_used, moved)``.
+    """
+
+    dead = comp_ext.shape[0] - 1
+
+    def body(carry):
+        comp, s, _ = carry
+        moved = jnp.bool_(False)
+        for gidx, heads in blocks:
+            svc_m = svc_ext[gidx]
+            cur = comp[gidx]
+            out = _rows_maxplus(cur - svc_m, svc_m, heads)
+            # padding gathers the finite NEG_INF sentinel, which would
+            # trivially satisfy the relative-progress test — mask it out
+            moved = moved | jnp.any(
+                (out > cur * (1.0 + MOVED_RTOL) + MOVED_ATOL)
+                & (gidx < dead))
+            comp = comp.at[gidx].max(jnp.maximum(cur, out))
+            comp = comp.at[-1].set(jnp.float32(NEG_INF))
+        return comp, s + 1, moved
+
+    return jax.lax.while_loop(
+        lambda c: (c[1] < sweeps) & c[2],
+        body, (comp_ext, jnp.int32(0), jnp.bool_(True)))
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def zns_fixpoint_xla(comp0, svc, blocks, *, sweeps: int = 8):
+    """Fused fixpoint as a jitted ``lax.while_loop`` (no Pallas).
+
+    ``comp0``: (n,) initial completions (``issue + svc``); ``svc``: (n,)
+    service times; ``blocks``: tuple of ``(gidx int32 (R, L), heads
+    bool (R, L))`` with padding indexed at ``n``.  Returns ``(comp (n,),
+    sweeps_used, converged)``.
+    """
+    comp_ext = jnp.append(comp0.astype(jnp.float32),
+                          jnp.float32(NEG_INF))
+    svc_ext = jnp.append(svc.astype(jnp.float32), jnp.float32(0.0))
+    comp, used, moved = _fixpoint_core(comp_ext, svc_ext, blocks, sweeps)
+    return comp[:-1], used, ~moved
+
+
+def _kernel(comp_ref, svc_ref, *rest, sweeps: int):
+    """Single-program Pallas kernel: the whole fixpoint in-kernel.
+
+    ``rest`` interleaves the per-block ``gidx``/``heads`` refs and ends
+    with the three output refs (completions, sweeps_used, converged).
+    """
+    n_out = 3
+    block_refs, out_refs = rest[:-n_out], rest[-n_out:]
+    blocks = tuple((block_refs[i][...], block_refs[i + 1][...])
+                   for i in range(0, len(block_refs), 2))
+    comp, used, moved = _fixpoint_core(
+        comp_ref[...], svc_ref[...], blocks, sweeps)
+    out_refs[0][...] = comp
+    out_refs[1][...] = used[None]
+    out_refs[2][...] = (~moved)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
+def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
+                 interpret: bool = True):
+    """Pallas form of :func:`zns_fixpoint_xla` (one ``pallas_call``).
+
+    The flat completion vector stays resident across all sweeps ×
+    family blocks; sweep iteration and the early-exit ``moved``
+    reduction run in-kernel.
+    """
+    n = comp0.shape[0]
+    comp_ext = jnp.append(comp0.astype(jnp.float32), jnp.float32(NEG_INF))
+    svc_ext = jnp.append(svc.astype(jnp.float32), jnp.float32(0.0))
+    ins = [comp_ext, svc_ext]
+    for gidx, heads in blocks:
+        ins += [gidx.astype(jnp.int32), heads.astype(bool)]
+    comp, used, conv = pl.pallas_call(
+        functools.partial(_kernel, sweeps=max(int(sweeps), 1)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n + 1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(*ins)
+    return comp[:-1], used[0], conv[0]
