@@ -1,0 +1,110 @@
+"""Cluster tier: one fleet-level concatenated solve vs the per-server
+Python composition loop (the greedy event-engine oracle), plus the
+capacity-planner ranking sanity gates.
+
+``python -m benchmarks.run --only cluster_bench [--quick]``
+
+The speed gate compiles a (scheme x placement) sweep at 4 gateways x 16
+storage servers, then times (a) ONE ``solve_program`` call over the
+concatenated rack program against (b) a Python loop running the
+event-engine oracle per configuration — the pre-cluster way of
+composing per-server results.  Gates: >=3x speedup, engines agree to
+float tolerance, and the capacity ranking is sane (every degraded-mode
+curve's p99 is no better than its normal-mode row).
+"""
+from __future__ import annotations
+
+from .common import Row, timed
+
+#: The one-call path must beat the per-config oracle loop by this much.
+SPEEDUP_GATE = 3.0
+TOL_US = 1e-6
+
+
+def run(quick: bool = False) -> list:
+    import numpy as np
+
+    from repro.cluster import (Cluster, ClusterConfig, ClusterSpec,
+                               ClusterWorkload, erasure, plan_capacity,
+                               replication, simulate_graph)
+    from repro.core import concat_programs, solve_program
+
+    n_gateways, n_servers = (2, 8) if quick else (4, 16)
+    configs = [ClusterConfig(erasure(2, 1), "round-robin"),
+               ClusterConfig(replication(2, 2), "hashed")]
+    if not quick:
+        configs += [ClusterConfig(erasure(4, 2), "strided"),
+                    ClusterConfig(erasure(3, 1), "grouped")]
+    wl = ClusterWorkload(n_users=4 if quick else 8,
+                         ops_per_user=4 if quick else 6,
+                         object_bytes=1 << 20, get_fraction=0.5, seed=0)
+
+    # Compile each configuration once (shared by both timed paths).
+    compiled = []
+    for cfg in configs:
+        spec = ClusterSpec(n_gateways=n_gateways, n_servers=n_servers,
+                           scheme=cfg.scheme, placement=cfg.placement)
+        compiled.append(Cluster(spec).compile(wl))
+    n_events = sum(c.graph.n for c in compiled)
+
+    program = concat_programs([c.program for c in compiled])
+    svc = np.concatenate([c.graph.svc for c in compiled])
+    comp0 = np.concatenate([c.comp for c in compiled])
+
+    def one_call():
+        # What plan_capacity runs: the fleet-level solve seeded by the
+        # per-entry fixpoints found during compilation (comp0).
+        return solve_program(program, svc, sweeps=512, fixpoint="loop",
+                             warn=False, comp0=comp0)
+
+    def oracle_loop():
+        return [simulate_graph(c.graph) for c in compiled]
+
+    comp, one_us = timed(one_call, repeats=3)
+    oracle, loop_us = timed(oracle_loop, repeats=3)
+    speedup = loop_us / one_us if one_us > 0 else float("inf")
+
+    flat_oracle = np.concatenate(oracle)
+    diff = float(np.max(np.abs(comp[0] - flat_oracle)))
+    converged = bool(comp[2]) and all(c.converged for c in compiled)
+
+    out: list = [
+        ("cluster/one_call_solve", one_us,
+         f"configs={len(configs)};events={n_events};"
+         f"servers={n_servers};gw={n_gateways}"),
+        ("cluster/oracle_loop", loop_us, f"configs={len(configs)}"),
+        ("cluster/speedup", 0.0,
+         f"{speedup:.2f}x" + ("" if speedup >= SPEEDUP_GATE else "=FAIL")),
+        ("cluster/gate_differential", 0.0,
+         f"maxdiff={diff:.2e}"
+         + ("" if diff < TOL_US and converged else "=FAIL")),
+    ]
+
+    # Ranking sanity.  Erasure reconstruction (read every survivor +
+    # decode) must not make the degraded curve *faster* than normal
+    # mode on p99 (small slack: degraded PUTs skip the down server's
+    # shard, which sheds a little load).  Replication configs are
+    # exempt — failover reads can legitimately be cheaper.
+    ladder = [2, 4] if quick else [4, 8]
+    report = plan_capacity(
+        configs, ladder, workload=wl,
+        base_spec=ClusterSpec(n_gateways=n_gateways, n_servers=n_servers),
+        slo_us=10_000.0)
+    sane = report.converged
+    for curve in report.ranking():
+        deg = report.degraded_curve(curve.config)
+        out.append((f"cluster/{curve.config.name}/users_at_slo", 0.0,
+                    f"{curve.users_at_slo:.2f}"
+                    + (f";degraded={deg.users_at_slo:.2f}" if deg else "")))
+        if deg is not None and curve.config.scheme.kind == "ec":
+            for p_n, p_d in zip(curve.points, deg.points):
+                if p_d.lat.p99_us < 0.95 * p_n.lat.p99_us:
+                    sane = False
+    out.append(("cluster/gate_ranking_sane", 0.0,
+                "ok" if sane else "=FAIL"))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import fmt_rows
+    print(fmt_rows(run()))

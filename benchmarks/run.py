@@ -18,7 +18,7 @@ MODULES = (
     "fig2_latency", "fig3_reqsize", "fig4_scalability", "fig5_state_costs",
     "fig6_gc_interference", "fig7_reset_interference", "fig8_qd",
     "table1_insights", "device_bench", "fleet_bench", "chain_program",
-    "checkpoint_bench", "host_policies", "kernel_bench",
+    "checkpoint_bench", "host_policies", "kernel_bench", "cluster_bench",
 )
 
 

@@ -1,0 +1,29 @@
+"""Cluster tier: gateways, storage servers, and the network between
+them, with the :mod:`repro.host` volume / :mod:`repro.core` device as
+the leaf — all compiled to ONE fleet-level
+:class:`repro.core.ChainProgram` per configuration and solved in a
+single fused-fixpoint call (differential greedy-engine oracle for
+small configs).  See ``docs/cluster.md``.
+"""
+from .spec import (  # noqa: F401
+    CLUSTER_DEVICE_SPEC, OP_DELETE, OP_GET, OP_NAMES, OP_PUT, ClusterSpec,
+    ClusterWorkload, GatewaySpec, NetworkSpec, ObjectOp, ServerSpec,
+)
+from .codec import (  # noqa: F401
+    RedundancyScheme, erasure, parse_scheme, replication,
+)
+from .placement import (  # noqa: F401
+    PLACEMENTS, available_placements, placement_map, register_placement,
+)
+from .gateway import Gateway, OpPlan, ShardOp, plan_workload  # noqa: F401
+from .server import StorageServer  # noqa: F401
+from .compiler import (  # noqa: F401
+    MAX_REFINE, ClusterGraph, CompiledCluster, Resource, build_graph,
+    compile_graph, edge_families, op_latencies,
+)
+from .oracle import oracle_op_latencies, simulate_graph, touched_servers  # noqa: F401
+from .cluster import Cluster, ClusterRunResult  # noqa: F401
+from .capacity import (  # noqa: F401
+    CapacityCurve, CapacityPoint, CapacityReport, ClusterConfig,
+    plan_capacity, users_at_slo,
+)

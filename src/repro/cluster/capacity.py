@@ -1,0 +1,200 @@
+"""Capacity planning: users-per-rack at a p99 latency SLO.
+
+The planner compiles every point of a (stripe width x redundancy scheme
+x placement policy) x users-ladder x (normal | degraded) sweep to its
+own :class:`~repro.core.ChainProgram`, concatenates them with
+:func:`repro.core.concat_programs`, and solves the whole rack sweep in
+**one** :func:`repro.core.solve_program` call.  Per-config curves are
+then sliced back out, the p99-vs-users curve is interpolated against
+the SLO (log-space in latency), and configurations are ranked by the
+user count the rack can serve inside the SLO — with a degraded-mode
+row (one server down, reconstruction reads) next to every normal row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import concat_programs, solve_program
+from repro.core.metrics import DEFAULT_SLO_US, LatencyStats, violation_rate
+
+from .cluster import Cluster
+from .codec import RedundancyScheme
+from .compiler import CompiledCluster, op_latencies
+from .spec import ClusterSpec, ClusterWorkload
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """One ranked configuration: a redundancy scheme + placement."""
+
+    scheme: RedundancyScheme
+    placement: str
+
+    @property
+    def name(self) -> str:
+        return f"{self.scheme.name}/{self.placement}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPoint:
+    """One solved sweep point (a config at one users-ladder rung)."""
+
+    users: int
+    objects_per_sec: float
+    lat: LatencyStats
+    slo_violation_rate: float
+    converged: bool
+
+    def to_json(self) -> Dict[str, float]:
+        return {"users": self.users,
+                "objects_per_sec": self.objects_per_sec,
+                "p50_us": self.lat.p50_us, "p99_us": self.lat.p99_us,
+                "p999_us": self.lat.p999_us,
+                "slo_violation_rate": self.slo_violation_rate,
+                "converged": self.converged}
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityCurve:
+    """The p99-vs-users curve of one (config, mode)."""
+
+    config: ClusterConfig
+    degraded: bool
+    points: Tuple[CapacityPoint, ...]
+    users_at_slo: float
+
+    def to_json(self) -> Dict:
+        return {"config": self.config.name, "degraded": self.degraded,
+                "users_at_slo": self.users_at_slo,
+                "points": [p.to_json() for p in self.points]}
+
+
+@dataclasses.dataclass
+class CapacityReport:
+    """Every curve of a rack sweep + the one-call solve's metadata."""
+
+    curves: List[CapacityCurve]
+    slo_us: float
+    n_programs: int
+    n_events: int
+    sweeps_used: int
+    converged: bool
+
+    def ranking(self) -> List[CapacityCurve]:
+        """Normal-mode curves, best (most users inside SLO) first."""
+        normal = [c for c in self.curves if not c.degraded]
+        return sorted(normal, key=lambda c: -c.users_at_slo)
+
+    def degraded_curve(self, config: ClusterConfig
+                       ) -> Optional[CapacityCurve]:
+        for c in self.curves:
+            if c.degraded and c.config == config:
+                return c
+        return None
+
+    def to_json(self) -> Dict:
+        return {"slo_us": self.slo_us, "n_programs": self.n_programs,
+                "n_events": self.n_events, "sweeps_used": self.sweeps_used,
+                "converged": self.converged,
+                "curves": [c.to_json() for c in self.curves]}
+
+
+def users_at_slo(points: Sequence[CapacityPoint], slo_us: float) -> float:
+    """Largest user count whose p99 stays inside the SLO, interpolating
+    (log-space in latency) between the ladder rungs that straddle it.
+
+    0.0 when even the smallest rung violates; the top rung's user count
+    when no rung violates (the rack wasn't driven to the SLO).
+    """
+    if not points:
+        return 0.0
+    p99 = np.asarray([p.lat.p99_us for p in points])
+    users = np.asarray([float(p.users) for p in points])
+    over = np.nonzero(p99 > slo_us)[0]
+    if len(over) == 0:
+        return float(users[-1])
+    i = int(over[0])
+    if i == 0:
+        return 0.0
+    lo, hi = p99[i - 1], p99[i]
+    if not (hi > lo > 0.0):
+        return float(users[i - 1])
+    frac = (np.log(slo_us) - np.log(lo)) / (np.log(hi) - np.log(lo))
+    return float(users[i - 1] + frac * (users[i] - users[i - 1]))
+
+
+def _can_degrade(scheme: RedundancyScheme) -> bool:
+    return scheme.m >= 1
+
+
+def plan_capacity(configs: Sequence[ClusterConfig],
+                  users_ladder: Sequence[int], *,
+                  base_spec: Optional[ClusterSpec] = None,
+                  workload: Optional[ClusterWorkload] = None,
+                  slo_us: float = DEFAULT_SLO_US,
+                  degraded: bool = True, down_server: int = 0,
+                  sweeps: int = 512, fixpoint: str = "loop",
+                  scan_backend: str = "auto",
+                  max_refine: Optional[int] = None) -> CapacityReport:
+    """Compile the whole sweep, solve it as ONE fleet-level program,
+    and slice the capacity curves back out."""
+    base_spec = base_spec if base_spec is not None else ClusterSpec()
+    workload = workload if workload is not None else ClusterWorkload()
+    entries: List[Tuple[ClusterConfig, bool, int, CompiledCluster]] = []
+    for cfg in configs:
+        spec = dataclasses.replace(base_spec, scheme=cfg.scheme,
+                                   placement=cfg.placement)
+        modes = [None] + ([down_server] if degraded
+                          and _can_degrade(cfg.scheme) else [])
+        for down in modes:
+            for users in users_ladder:
+                wl = dataclasses.replace(workload, n_users=int(users))
+                kw = {} if max_refine is None else {"max_refine": max_refine}
+                compiled = Cluster(spec).compile(
+                    wl, down=down, sweeps=sweeps, fixpoint=fixpoint,
+                    scan_backend=scan_backend, **kw)
+                entries.append((cfg, down is not None, int(users), compiled))
+
+    # ONE fleet-level call over every config x rung x mode.  The
+    # per-entry fixpoints found during compilation are exact lower
+    # bounds of the concatenated program, so they seed the fleet solve
+    # (comp0) and it converges in one verification sweep.
+    program = concat_programs([c.program for _, _, _, c in entries])
+    svc = np.concatenate([c.graph.svc for _, _, _, c in entries])
+    comp, used, converged = solve_program(
+        program, svc, sweeps=sweeps, fixpoint=fixpoint,
+        scan_backend=scan_backend, warn=False,
+        comp0=np.concatenate([c.comp for _, _, _, c in entries]))
+
+    curves: List[CapacityCurve] = []
+    off = 0
+    by_key: Dict[Tuple[str, bool], List[CapacityPoint]] = {}
+    key_cfg: Dict[Tuple[str, bool], ClusterConfig] = {}
+    for cfg, is_degraded, users, compiled in entries:
+        g = compiled.graph
+        sl = comp[off:off + g.n]
+        off += g.n
+        lats = op_latencies(g, sl)
+        span = float(sl.max()) if len(sl) else 0.0
+        point = CapacityPoint(
+            users=users,
+            objects_per_sec=len(lats) / span * 1e6 if span > 0 else 0.0,
+            lat=LatencyStats.from_samples(lats),
+            slo_violation_rate=violation_rate(lats, slo_us),
+            converged=bool(converged and compiled.converged))
+        key = (cfg.name, is_degraded)
+        by_key.setdefault(key, []).append(point)
+        key_cfg[key] = cfg
+    for key, points in by_key.items():
+        points = sorted(points, key=lambda p: p.users)
+        curves.append(CapacityCurve(
+            config=key_cfg[key], degraded=key[1], points=tuple(points),
+            users_at_slo=users_at_slo(points, slo_us)))
+    return CapacityReport(
+        curves=curves, slo_us=slo_us, n_programs=len(entries),
+        n_events=program.n_flat, sweeps_used=used,
+        converged=bool(converged) and all(
+            c.converged for _, _, _, c in entries))

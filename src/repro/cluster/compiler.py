@@ -1,0 +1,414 @@
+"""Cluster request flows -> one fleet-level :class:`ChainProgram`.
+
+Lowering runs in two steps shared with the differential oracle:
+
+1. :func:`build_graph` — expand every planned object op into its
+   per-stage *event graph*: gateway CPU, EC encode, NIC tx, fabric
+   link, server NIC rx, server CPU/buffer insert, device read, flush
+   appends, ack path, and the op-level join; plus the structural
+   couplings (closed-loop clients, writeback data/room gates,
+   durability acks, read-after-flush).  The graph is a plain DAG +
+   resource declaration — no schedule, no times beyond per-event
+   ``issue``/``svc``.
+2. :func:`compile_graph` — lower the graph to chain families:
+
+   * each per-shard flow path becomes one chain in a per-slot family
+     (``flow/s{j}`` — the op's fan-out head and join appear once per
+     slot family, so family-scatter uniqueness holds);
+   * every gate edge becomes a 2-chain, greedily colored into
+     occurrence-split families (``wb_room/0``, ``wb_room/1``, ...);
+   * *ordered* resources (the sequential-log flusher and its device
+     append pool: chunks retire in log order) become round-robin
+     lag-``cap`` chains in member order — exact for any service times;
+   * *FIFO* resources (CPU pools, NIC lanes, device read pool) become
+     lag-``cap`` chains in event-heap pop order ``(ready, issue,
+     index)``.  ``ready`` depends on completions, so the compiler
+     iterates: solve, recompute ``ready`` from the DAG, re-chain,
+     until the pop order reaches a fixpoint (``refine_used`` solves,
+     ``order_stable``).  Single-class pools (uniform workloads) and
+     capacity-1 lanes then reproduce the greedy event engine exactly;
+     mixed-size workloads mark the program ``exact=False``.
+
+The compiled per-config programs are pure data: the capacity planner
+concatenates dozens of them (:func:`repro.core.concat_programs`) and
+solves the whole rack sweep in ONE :func:`repro.core.solve_program`
+call — on the fused fixpoint kernels when JAX/TPU is available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ChainProgram, build_program, solve_program
+
+from .gateway import OpPlan, plan_workload
+from .server import StorageServer
+from .spec import ClusterSpec, ObjectOp
+
+#: Refinement budget: pop-order fixpoints on closed-loop cluster flows
+#: settle within ~10 solves on contended racks (each solve pushes order
+#: corrections one coupling hop further); the cap guards rare ties.
+MAX_REFINE = 24
+
+#: FIFO pop keys are snapped to this grid (us) before ordering, in the
+#: compiler AND the oracle: the two engines accumulate float64 sums in
+#: different orders, so genuinely-tied ready times can differ by ~1e-9
+#: us and flip a queue order.  On the shared grid both sides see the
+#: same ties and break them identically (issue, then event index).
+READY_QUANTUM_US = 1e-6
+
+
+def _quantize(t: np.ndarray) -> np.ndarray:
+    return np.round(np.asarray(t) / READY_QUANTUM_US) * READY_QUANTUM_US
+
+
+@dataclasses.dataclass
+class Resource:
+    """A service pool: ``cap`` servers over ``members`` (event ids).
+
+    ``ordered=True`` pins the retire order to the member list (the
+    sequential-log flusher and its append pool); otherwise members are
+    served FIFO in event-heap pop order.
+    """
+
+    label: str
+    cap: int
+    members: List[int] = dataclasses.field(default_factory=list)
+    ordered: bool = False
+
+
+@dataclasses.dataclass
+class ClusterGraph:
+    """The shared contract between compiler and oracle."""
+
+    issue: np.ndarray                   # (n,) earliest event issue (us)
+    svc: np.ndarray                     # (n,) jitter-free service (us)
+    labels: List[str]                   # per-event stage tag (debug)
+    paths: List[Tuple[str, List[List[int]]]]   # flow families
+    edges: List[Tuple[str, int, int]]   # gate edges (name, pred, succ)
+    resources: List[Resource]
+    op_head: np.ndarray                 # (n_ops,) first event per op
+    op_tail: np.ndarray                 # (n_ops,) completion event per op
+    servers: List[StorageServer]
+    plans: List[OpPlan]
+
+    @property
+    def n(self) -> int:
+        return len(self.issue)
+
+    def dag_edges(self) -> np.ndarray:
+        """All fixed precedence edges ``(pred, succ)``: path links, gate
+        edges, and ordered-resource lag edges (deduplicated)."""
+        out = []
+        for _label, chains in self.paths:
+            for c in chains:
+                out.extend(zip(c[:-1], c[1:]))
+        for _name, a, b in self.edges:
+            out.append((a, b))
+        for res in self.resources:
+            if res.ordered:
+                m = res.members
+                out.extend((m[i - res.cap], m[i])
+                           for i in range(res.cap, len(m)))
+        if not out:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.unique(np.asarray(out, dtype=np.int64), axis=0)
+
+
+class _GraphBuilder:
+    def __init__(self):
+        self.issue: List[float] = []
+        self.svc: List[float] = []
+        self.labels: List[str] = []
+        self.resources: Dict[str, Resource] = {}
+        self.edges: List[Tuple[str, int, int]] = []
+        self.paths: Dict[str, List[List[int]]] = {}
+
+    def ev(self, label: str, svc: float, *, issue: float = 0.0,
+           res: Optional[str] = None, cap: int = 1,
+           ordered: bool = False) -> int:
+        idx = len(self.issue)
+        self.issue.append(float(issue))
+        self.svc.append(float(svc))
+        self.labels.append(label)
+        if res is not None:
+            self.join_resource(idx, res, cap, ordered)
+        return idx
+
+    def join_resource(self, idx: int, res: str, cap: int,
+                      ordered: bool = False) -> None:
+        r = self.resources.setdefault(
+            res, Resource(label=res, cap=int(cap), ordered=ordered))
+        r.members.append(idx)
+
+
+def build_graph(spec: ClusterSpec, ops: Sequence[ObjectOp], *, qd: int = 1,
+                down: Optional[int] = None, seed: int = 0,
+                plans: Optional[List[OpPlan]] = None) -> ClusterGraph:
+    """Expand planned object ops into the cluster event graph.
+
+    ``qd`` is the clients' closed-loop depth: op ``i`` of a client is
+    gated on the ack (join) of its op ``i - qd``.
+    """
+    if plans is None:
+        plans = plan_workload(spec, ops, seed=seed, down=down)
+    net, gw, srv = spec.network, spec.gateway, spec.server
+    b = _GraphBuilder()
+    servers = [StorageServer(r, spec) for r in range(spec.n_servers)]
+    op_head = np.zeros(len(ops), dtype=np.int64)
+    op_tail = np.zeros(len(ops), dtype=np.int64)
+    # Deferred per-server gates, resolved once flush counts are known:
+    room_gates: List[Tuple[int, int, int]] = []   # (server, insert_ev, hi)
+    ack_gates: List[Tuple[int, int, int]] = []    # (server, stx_ev, hi)
+    read_gates: List[Tuple[int, int, int]] = []   # (server, dread_ev, hi)
+    insert_evs: Dict[int, List[int]] = {r: [] for r in range(spec.n_servers)}
+
+    for plan in plans:
+        op = plan.op
+        g = op.gateway
+        head = b.ev("gw_cpu", gw.cpu_us, issue=op.issue,
+                    res=f"gw_cpu/g{g}", cap=gw.cpu_cores)
+        op_head[op.seq] = head
+        src = head
+        if plan.encode_us > 0.0:
+            enc = b.ev("enc", plan.encode_us)
+            b.edges.append(("enc", head, enc))
+            src = enc
+        join = b.ev("join", plan.decode_us)
+        op_tail[op.seq] = join
+        for sh in plan.shards:
+            r = sh.server
+            sv = servers[r]
+            if sh.write:
+                payload = sh.nbytes + net.req_bytes
+                gtx = b.ev("gw_tx", net.gw_tx_us(payload),
+                           res=f"gw_tx/g{g}", cap=1)
+                lnk = b.ev("link", net.one_way_us)
+                srx = b.ev("srv_rx", net.srv_tx_us(payload),
+                           res=f"srv_rx/r{r}", cap=1)
+                scpu = b.ev("insert", srv.cpu_us,
+                            res=f"srv_cpu/r{r}", cap=srv.cpu_cores)
+                stx = b.ev("srv_tx", net.srv_tx_us(net.req_bytes),
+                           res=f"srv_tx/r{r}", cap=1)
+                if sh.nbytes > 0:
+                    if sh.nbytes > srv.writeback_bytes - srv.flush_chunk:
+                        raise ValueError(
+                            f"shard of {sh.nbytes} bytes cannot stage in "
+                            f"a {srv.writeback_bytes}-byte writeback "
+                            f"buffer (needs headroom of one flush chunk)")
+                    _lo, hi = sv.insert_shard(op.obj, sh.slot, sh.nbytes)
+                    insert_evs[r].append(scpu)
+                    if sv.room_gate(hi) is not None:
+                        room_gates.append((r, scpu, hi))
+                    if spec.durability == "write-through":
+                        ack_gates.append((r, stx, hi))
+                lnk2 = b.ev("link", net.one_way_us)
+                grx = b.ev("gw_rx", net.gw_tx_us(net.req_bytes),
+                           res=f"gw_rx/g{g}", cap=1)
+                chain = [src, gtx, lnk, srx, scpu, stx, lnk2, grx, join]
+            else:
+                resp = sh.nbytes + net.req_bytes
+                gtx = b.ev("gw_tx", net.gw_tx_us(net.req_bytes),
+                           res=f"gw_tx/g{g}", cap=1)
+                lnk = b.ev("link", net.one_way_us)
+                srx = b.ev("srv_rx", net.srv_tx_us(net.req_bytes),
+                           res=f"srv_rx/r{r}", cap=1)
+                scpu = b.ev("srv_cpu", srv.cpu_us,
+                            res=f"srv_cpu/r{r}", cap=srv.cpu_cores)
+                _lo, hi = sv.shard_range(op.obj, sh.slot)
+                mid = []
+                if sv.chunk_filled(hi):
+                    # Bytes already flushable: read from flash (gated
+                    # on the covering flush below).
+                    dread = b.ev("dev_read", sv.read_svc(sh.nbytes),
+                                 res=f"dev_read/r{r}",
+                                 cap=spec.device_spec.read_parallelism)
+                    read_gates.append((r, dread, hi))
+                    mid = [dread]
+                # else: the shard is still writeback-buffer resident —
+                # served from RAM, no device event.
+                stx = b.ev("srv_tx", net.srv_tx_us(resp),
+                           res=f"srv_tx/r{r}", cap=1)
+                lnk2 = b.ev("link", net.one_way_us)
+                grx = b.ev("gw_rx", net.gw_tx_us(resp),
+                           res=f"gw_rx/g{g}", cap=1)
+                chain = [src, gtx, lnk, srx, scpu, *mid, stx, lnk2, grx,
+                         join]
+            b.paths.setdefault(f"flow/s{sh.slot}", []).append(chain)
+
+    # Closed loop: client op i waits for the ack of its op i - qd, and
+    # clients prepare requests in program order (op i's gateway stage
+    # follows op i-1's) — together these give read-your-writes at any
+    # queue depth.
+    per_client: Dict[int, List[int]] = {}
+    for op in ops:
+        per_client.setdefault(op.client, []).append(op.seq)
+    for seqs in per_client.values():
+        for i in range(1, len(seqs)):
+            b.edges.append(("seq", int(op_head[seqs[i - 1]]),
+                            int(op_head[seqs[i]])))
+        for i in range(qd, len(seqs)):
+            b.edges.append(("closed", int(op_tail[seqs[i - qd]]),
+                            int(op_head[seqs[i]])))
+
+    # Flushes: sequential log, one append per chunk, retiring in log
+    # order (flush_qd deep through the device append pool).
+    flush_evs: Dict[int, List[int]] = {}
+    for r, sv in enumerate(servers):
+        n_flush = sv.finalize()
+        evs = []
+        for _f in range(n_flush):
+            fl = b.ev("flush", sv.append_svc(),
+                      res=f"flush_q/r{r}", cap=srv.flush_qd, ordered=True)
+            b.join_resource(fl, f"dev_append/r{r}",
+                            spec.device_spec.append_parallelism,
+                            ordered=True)
+            evs.append(fl)
+        flush_evs[r] = evs
+        # wb_data: chunk f flushable once the insert filling it lands.
+        for f, ins_idx in enumerate(sv.data_gate_inserts()):
+            b.edges.append(("wb_data", insert_evs[r][int(ins_idx)], evs[f]))
+    for r, scpu, hi in room_gates:
+        b.edges.append(("wb_room",
+                        flush_evs[r][servers[r].room_gate(hi)], scpu))
+    for r, stx, hi in ack_gates:
+        b.edges.append(("wt_ack",
+                        flush_evs[r][servers[r].covering_flush(hi)], stx))
+    for r, dread, hi in read_gates:
+        b.edges.append(("rd_data",
+                        flush_evs[r][servers[r].covering_flush(hi)], dread))
+
+    return ClusterGraph(
+        issue=np.asarray(b.issue, dtype=np.float64),
+        svc=np.asarray(b.svc, dtype=np.float64),
+        labels=b.labels,
+        paths=sorted(b.paths.items()),
+        edges=b.edges,
+        resources=[b.resources[k] for k in sorted(b.resources)],
+        op_head=op_head, op_tail=op_tail,
+        servers=servers, plans=list(plans))
+
+
+def edge_families(edges: Sequence[Tuple[str, int, int]]
+                  ) -> List[Tuple[str, List[np.ndarray]]]:
+    """Greedy edge coloring: 2-chains grouped into ``{name}/{occ}``
+    families so no event repeats within a family."""
+    occ: Dict[Tuple[str, int], int] = {}
+    fams: Dict[str, List[np.ndarray]] = {}
+    for name, a, b in edges:
+        o = max(occ.get((name, a), 0), occ.get((name, b), 0))
+        fams.setdefault(f"{name}/{o}", []).append(
+            np.asarray([a, b], dtype=np.int64))
+        occ[(name, a)] = occ[(name, b)] = o + 1
+    return sorted(fams.items())
+
+
+def _lag_chains(members: np.ndarray, cap: int) -> List[np.ndarray]:
+    """Round-robin split: lag-``cap`` over the given member order."""
+    return [members[j::cap] for j in range(min(cap, len(members)))]
+
+
+def _graph_ready(graph: ClusterGraph, edges: np.ndarray,
+                 comp: np.ndarray) -> np.ndarray:
+    """Event-heap pop keys: ``max(issue, DAG predecessors' comps)``."""
+    ready = graph.issue.copy()
+    if len(edges):
+        np.maximum.at(ready, edges[:, 1], comp[edges[:, 0]])
+    return ready
+
+
+@dataclasses.dataclass
+class CompiledCluster:
+    """One cluster configuration lowered to a solvable program."""
+
+    graph: ClusterGraph
+    program: ChainProgram
+    comp: np.ndarray          # completions from the final refinement solve
+    sweeps_used: int
+    converged: bool
+
+    def op_latencies(self) -> np.ndarray:
+        """Per-object-op latency: join completion minus the instant the
+        closed loop let the op issue (``ready`` of its head event)."""
+        return op_latencies(self.graph, self.comp)
+
+    def makespan_us(self) -> float:
+        return float(self.comp.max()) if len(self.comp) else 0.0
+
+
+def op_latencies(graph: ClusterGraph, comp: np.ndarray) -> np.ndarray:
+    """Per-op latency under completions ``comp`` (program or oracle)."""
+    ready = _graph_ready(graph, graph.dag_edges(), comp)
+    return comp[graph.op_tail] - ready[graph.op_head]
+
+
+def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
+                  fixpoint: str = "loop", scan_backend: str = "auto",
+                  max_refine: int = MAX_REFINE) -> CompiledCluster:
+    """Lower a cluster graph to a ChainProgram, refining FIFO pop
+    orders to their fixpoint (see module docstring)."""
+    static: List[Tuple[str, List[np.ndarray]]] = []
+    for label, chains in graph.paths:
+        static.append((label, [np.asarray(c, dtype=np.int64)
+                               for c in chains]))
+    static.extend(edge_families(graph.edges))
+    fifo_res: List[Resource] = []
+    for res in graph.resources:
+        if len(res.members) <= res.cap:
+            continue                       # never queues: no chain needed
+        if res.ordered:
+            static.append((res.label, _lag_chains(
+                np.asarray(res.members, dtype=np.int64), res.cap)))
+        else:
+            fifo_res.append(res)
+    # Exactness: cap-1 lanes are exact under any service mix; wider FIFO
+    # pools must be single-service-class.
+    multiclass = tuple(sorted(
+        res.label for res in fifo_res
+        if res.cap > 1 and len(np.unique(graph.svc[res.members])) > 1))
+    dag = graph.dag_edges()
+
+    # Bootstrap pop-order estimates from a contention-free solve: the
+    # DAG-only program (paths, gates, sequential-log lags — no FIFO
+    # chains) is acyclic, so its fixpoint always converges, and its
+    # completions order events by pure dependency depth.  Starting the
+    # FIFO chains from index order instead can thread a chain against
+    # the DAG and make the first refinement solve cyclic (divergent).
+    base = build_program(graph.issue, graph.svc, static)
+    comp, used, converged = solve_program(
+        base, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
+        scan_backend=scan_backend, warn=False)
+    ready = _graph_ready(graph, dag, comp)
+    prev_orders: Optional[List[np.ndarray]] = None
+    program: ChainProgram = base
+    refine_used, order_stable = 0, not fifo_res
+    for it in range(max_refine + 1):
+        orders = [np.lexsort((np.asarray(r.members, dtype=np.int64),
+                              graph.issue[r.members],
+                              _quantize(ready[r.members])))
+                  for r in fifo_res]
+        if prev_orders is not None and \
+                all(np.array_equal(a, p)
+                    for a, p in zip(orders, prev_orders)):
+            order_stable = True
+            break
+        fams = list(static)
+        for r, o in zip(fifo_res, orders):
+            m = np.asarray(r.members, dtype=np.int64)[o]
+            fams.append((r.label, _lag_chains(m, r.cap)))
+        program = build_program(
+            graph.issue, graph.svc, fams,
+            exact=not multiclass, multiclass_pools=multiclass)
+        comp, used, converged = solve_program(
+            program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
+            scan_backend=scan_backend, warn=False)
+        refine_used = it + 1
+        ready = _graph_ready(graph, dag, comp)
+        prev_orders = orders
+    program = dataclasses.replace(
+        program, refine_used=refine_used, order_stable=order_stable,
+        exact=bool(not multiclass and order_stable))
+    return CompiledCluster(graph=graph, program=program, comp=comp,
+                           sweeps_used=used, converged=bool(converged))

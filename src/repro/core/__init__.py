@@ -18,13 +18,15 @@ from .engine import (  # noqa: F401
     zone_sequential_completions, zone_sequential_completions_batched,
 )
 from .chain_program import (  # noqa: F401
-    ChainProgram, clear_program_cache, compile_fleet_program,
-    compile_program, program_cache_info, solve_program,
+    ChainProgram, build_program, clear_program_cache, compile_fleet_program,
+    compile_program, concat_programs, extend_program, program_cache_info,
+    program_chains, solve_program,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import (  # noqa: F401
     LatencyStats, available_metrics, bandwidth_bytes, extract_metrics, iops,
-    register_metric, throughput_timeseries, unregister_metric,
+    register_metric, slo_violations, throughput_timeseries,
+    unregister_metric, violation_rate,
 )
 from .workload import StreamSpec, WorkloadSpec  # noqa: F401
 from .fleet import batched_sequential_completions, simulate_fleet_vectorized  # noqa: F401

@@ -396,29 +396,14 @@ def _label_rank(label: str) -> Tuple[int, str]:
         return len(FAMILY_ORDER), label
 
 
-def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
-              exact: bool, refine_used: int, order_stable: bool
-              ) -> ChainProgram:
-    offsets, off = [], 0
-    for dev in devs:
-        offsets.append(off)
-        off += dev.n
-    n_flat = off
-    issue_flat = np.concatenate([dev.issue for dev in devs]) if devs else \
-        np.zeros(0)
-    svc0_flat = np.concatenate([dev.svc0 for dev in devs]) if devs else \
-        np.zeros(0)
-    # split every (device, family) into its chains; chains are the
-    # batching unit: bucketed by length across devices so one block
-    # solves all similar-length chains of a family fleet-wide
-    chains: "OrderedDict[str, list]" = OrderedDict()
-    for d, fams in enumerate(fam_lists):
-        for label, perm, heads in fams:
-            if len(perm) == 0:
-                continue
-            cuts = np.flatnonzero(heads)
-            for c in np.split(offsets[d] + perm, cuts[1:]):
-                chains.setdefault(label, []).append(c)
+def _blocks_from_chains(chains: "OrderedDict[str, list]", n_flat: int
+                        ) -> Tuple[FamilyBlock, ...]:
+    """Length-bucket + lay out ``{label: [chain index arrays]}`` into
+    padded :class:`FamilyBlock` tensors addressing a flat vector of
+    ``n_flat`` events (padding points at the dead slot ``n_flat``).
+    Labels are emitted in :data:`repro.core.engine.FAMILY_ORDER`-first
+    rank (unknown labels sort after, alphabetically) — the Gauss-Seidel
+    application order."""
     blocks = []
     for label in sorted(chains, key=_label_rank):
         chs = chains[label]
@@ -444,6 +429,33 @@ def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
                     heads[r, 1:len(c)] = False
                 blocks.append(FamilyBlock(label=label, gidx=gidx,
                                           heads=heads, layout="rows"))
+    return tuple(blocks)
+
+
+def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
+              exact: bool, refine_used: int, order_stable: bool
+              ) -> ChainProgram:
+    offsets, off = [], 0
+    for dev in devs:
+        offsets.append(off)
+        off += dev.n
+    n_flat = off
+    issue_flat = np.concatenate([dev.issue for dev in devs]) if devs else \
+        np.zeros(0)
+    svc0_flat = np.concatenate([dev.svc0 for dev in devs]) if devs else \
+        np.zeros(0)
+    # split every (device, family) into its chains; chains are the
+    # batching unit: bucketed by length across devices so one block
+    # solves all similar-length chains of a family fleet-wide
+    chains: "OrderedDict[str, list]" = OrderedDict()
+    for d, fams in enumerate(fam_lists):
+        for label, perm, heads in fams:
+            if len(perm) == 0:
+                continue
+            cuts = np.flatnonzero(heads)
+            for c in np.split(offsets[d] + perm, cuts[1:]):
+                chains.setdefault(label, []).append(c)
+    blocks = _blocks_from_chains(chains, n_flat)
     multiclass = tuple(sorted({k for dev in devs for k in dev.multiclass}))
     return ChainProgram(
         n_flat=n_flat, offsets=tuple(offsets),
@@ -586,6 +598,159 @@ def compile_program(trace: Trace, spec: ZNSDeviceSpec, lat, *,
 
 
 # ---------------------------------------------------------------------------
+# Generic program construction: custom chain families + concatenation
+# ---------------------------------------------------------------------------
+def _validate_family_chains(families, n_flat: int) -> None:
+    for label, chs in families:
+        seen = np.concatenate([np.asarray(c) for c in chs]) if chs else \
+            np.zeros(0, dtype=np.int64)
+        if len(seen) and (seen.min() < 0 or seen.max() >= n_flat):
+            raise ValueError(
+                f"family {label!r}: chain index out of range for "
+                f"{n_flat} events")
+        if len(np.unique(seen)) != len(seen):
+            raise ValueError(
+                f"family {label!r}: an event appears in more than one "
+                f"chain of the same family (scatter would be ambiguous); "
+                f"split the family into sub-labels")
+
+
+def build_program(issue, svc0, families: Sequence[Tuple[str, Sequence]], *,
+                  exact: bool = True,
+                  multiclass_pools: Sequence[str] = (),
+                  refine_used: int = 0,
+                  order_stable: bool = True) -> ChainProgram:
+    """Build a :class:`ChainProgram` from explicit chain families.
+
+    The device compiler (:func:`compile_fleet_program`) derives its
+    families from a :class:`Trace`; higher tiers — the cluster layer's
+    network/NIC/CPU hops — construct theirs directly.  ``issue`` and
+    ``svc0`` are flat per-event arrays (the program's event order *is*
+    the given order); ``families`` is ``[(label, [chain, ...]), ...]``
+    where each chain is an index array into the event vector and the
+    chain semantics are the max-plus recurrence
+    ``c_i >= c_{i-1} + svc_i`` (c initialized to ``issue + svc``).  An
+    event may appear in many families but at most once per family
+    (scatter-uniqueness); violations raise ``ValueError``.
+
+    The result is a single-pseudo-device program: ``solve_program``
+    accepts it unchanged, and :func:`concat_programs` stacks it with
+    other programs (device-compiled or custom) into one fused fixpoint.
+    """
+    issue = np.ascontiguousarray(issue, dtype=np.float64)
+    svc0 = np.ascontiguousarray(svc0, dtype=np.float64)
+    if len(issue) != len(svc0):
+        raise ValueError(f"issue/svc0 length mismatch: "
+                         f"{len(issue)} vs {len(svc0)}")
+    n = len(issue)
+    fams = [(label, [np.ascontiguousarray(c, dtype=np.int64) for c in chs
+                     if len(c)]) for label, chs in families]
+    fams = [(label, chs) for label, chs in fams if chs]
+    _validate_family_chains(fams, n)
+    chains: "OrderedDict[str, list]" = OrderedDict()
+    for label, chs in fams:
+        chains.setdefault(label, []).extend(chs)
+    order = np.arange(n, dtype=np.int64)
+    return ChainProgram(
+        n_flat=n, offsets=(0,), orders=(order,), invs=(order.copy(),),
+        issue_flat=issue, svc0_flat=svc0,
+        families=_blocks_from_chains(chains, n),
+        exact=bool(exact), multiclass_pools=tuple(multiclass_pools),
+        refine_used=int(refine_used), order_stable=bool(order_stable))
+
+
+def program_chains(program: ChainProgram) -> "OrderedDict[str, list]":
+    """Recover ``{label: [chain index arrays]}`` from a program's padded
+    family blocks (each block lane is one chain; padding stripped).
+    Inverse of the block assembly up to length bucketing."""
+    chains: "OrderedDict[str, list]" = OrderedDict()
+    for blk in program.families:
+        gidx, _ = blk.rows_view()
+        for lane in gidx:
+            c = lane[lane != program.n_flat]
+            if len(c):
+                chains.setdefault(blk.label, []).append(c)
+    return chains
+
+
+def concat_programs(programs: Sequence[ChainProgram]) -> ChainProgram:
+    """Concatenate compiled programs into ONE fused fixpoint.
+
+    Event vectors stack (each input program's flat indices shift by its
+    offset), same-label families merge into shared length-bucketed
+    blocks, and per-device unpacking metadata concatenates — so N
+    independently compiled programs (one per cluster config, say) solve
+    as a single :func:`solve_program` call with block-diagonal coupling
+    (no cross-program constraints are added).  ``device_slice(i)``
+    indexes devices in input order: a 3-device program followed by a
+    1-device program yields devices 0-2 and 3.
+    """
+    programs = list(programs)
+    if not programs:
+        raise ValueError("concat_programs needs at least one program")
+    if len(programs) == 1:
+        return programs[0]
+    chains: "OrderedDict[str, list]" = OrderedDict()
+    offsets: List[int] = []
+    orders: List[np.ndarray] = []
+    invs: List[np.ndarray] = []
+    off = 0
+    for p in programs:
+        for label, chs in program_chains(p).items():
+            chains.setdefault(label, []).extend(
+                [c + off for c in chs] if off else chs)
+        offsets.extend(o + off for o in p.offsets)
+        orders.extend(p.orders)
+        invs.extend(p.invs)
+        off += p.n_flat
+    return ChainProgram(
+        n_flat=off, offsets=tuple(offsets), orders=tuple(orders),
+        invs=tuple(invs),
+        issue_flat=np.concatenate([p.issue_flat for p in programs]),
+        svc0_flat=np.concatenate([p.svc0_flat for p in programs]),
+        families=_blocks_from_chains(chains, off),
+        exact=all(p.exact for p in programs),
+        multiclass_pools=tuple(sorted({k for p in programs
+                                       for k in p.multiclass_pools})),
+        refine_used=max(p.refine_used for p in programs),
+        order_stable=all(p.order_stable for p in programs))
+
+
+def extend_program(program: ChainProgram,
+                   families: Sequence[Tuple[str, Sequence]],
+                   *, exact: Optional[bool] = None,
+                   multiclass_pools: Optional[Sequence[str]] = None
+                   ) -> ChainProgram:
+    """Return a program with extra chain families merged in.
+
+    ``families`` uses *global* flat-event indices, so cross-cutting
+    constraints may span events of different devices (the cluster
+    compiler links network stages to device I/O this way).  Existing
+    families are preserved; a label collision merges chain lists (the
+    combined family must still satisfy scatter-uniqueness).  ``exact``
+    defaults to the input program's flag.
+    """
+    fams = [(label, [np.ascontiguousarray(c, dtype=np.int64) for c in chs
+                     if len(c)]) for label, chs in families]
+    fams = [(label, chs) for label, chs in fams if chs]
+    _validate_family_chains(fams, program.n_flat)
+    chains = program_chains(program)
+    for label, chs in fams:
+        merged = chains.setdefault(label, [])
+        merged.extend(chs)
+        flat = np.concatenate(merged)
+        if len(np.unique(flat)) != len(flat):
+            raise ValueError(
+                f"extend_program: family {label!r} would contain a "
+                f"duplicate event after merging; use a fresh label")
+    return dataclasses.replace(
+        program, families=_blocks_from_chains(chains, program.n_flat),
+        exact=program.exact if exact is None else bool(exact),
+        multiclass_pools=program.multiclass_pools
+        if multiclass_pools is None else tuple(multiclass_pools))
+
+
+# ---------------------------------------------------------------------------
 # Fused fixpoint solve
 # ---------------------------------------------------------------------------
 def _posloop_scan(cur: np.ndarray, svc: np.ndarray) -> np.ndarray:
@@ -605,9 +770,13 @@ def _posloop_scan(cur: np.ndarray, svc: np.ndarray) -> np.ndarray:
 
 
 def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
-                 sweeps: int, scan_backend: str
+                 sweeps: int, scan_backend: str,
+                 comp0: Optional[np.ndarray] = None
                  ) -> Tuple[np.ndarray, int, bool]:
     comp = np.append(program.issue_flat + svc_flat, -np.inf)
+    warm = comp0 is not None
+    if warm:
+        comp[:-1] = np.maximum(comp[:-1], comp0)
     svc_ext = np.append(svc_flat, 0.0)
     svc_mats = [svc_ext[blk.gidx] for blk in program.families]
     used, converged = 0, True
@@ -617,7 +786,7 @@ def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
         for blk, svc_m in zip(program.families, svc_mats):
             cur = comp[blk.gidx]
             cols = blk.layout == "cols"
-            if s == 0:
+            if s == 0 and not warm:
                 # first sweep: everything is a fresh lower bound — scan
                 # all lanes, skip the fixpoint pre-check.  With more
                 # budget, assume movement (the next sweep's O(L) checks
@@ -682,10 +851,15 @@ def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
 
 
 def _solve_kernel(program: ChainProgram, svc_flat: np.ndarray, *,
-                  sweeps: int, impl: str) -> Tuple[np.ndarray, int, bool]:
+                  sweeps: int, impl: str,
+                  comp0: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, int, bool]:
     from repro.kernels import ops as kops
+    init = program.issue_flat + svc_flat
+    if comp0 is not None:
+        init = np.maximum(init, comp0)
     comp, used, converged = kops.zns_fixpoint(
-        program.issue_flat + svc_flat, svc_flat,
+        init, svc_flat,
         tuple(blk.rows_view() for blk in program.families),
         sweeps=max(int(sweeps), 1), impl=impl)
     return (np.asarray(comp, dtype=np.float64), int(used), bool(converged))
@@ -693,7 +867,8 @@ def _solve_kernel(program: ChainProgram, svc_flat: np.ndarray, *,
 
 def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
                   sweeps: int = 8, scan_backend: str = "auto",
-                  fixpoint: str = "auto", warn: bool = True
+                  fixpoint: str = "auto", warn: bool = True,
+                  comp0: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, int, bool]:
     """Run the fused Gauss-Seidel fixpoint; returns ``(completions,
     sweeps_used, converged)`` in flat event order.
@@ -708,6 +883,14 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
     while constraints are still moving the result is a documented
     under-approximation -- a :class:`RuntimeWarning` is emitted unless
     ``warn=False``.
+
+    ``comp0`` warm-starts the fixpoint from per-event completion lower
+    bounds (flat event order).  The iteration is monotone from below,
+    so any valid lower bound is safe; passing the solved completions of
+    the member programs of a :func:`concat_programs` merge (their
+    blocks share no constraints, so their fixpoints ARE the merged
+    fixpoint) reduces the fleet-level solve to one cheap verification
+    sweep of O(chain-length) edge checks.
     """
     if program.n_flat == 0:
         return np.zeros(0, dtype=np.float64), 0, True
@@ -716,14 +899,17 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
                          f"{program.n_flat}-request program")
     if fixpoint == "auto":
         fixpoint = "pallas" if _on_tpu() else "loop"
+    if comp0 is not None and len(comp0) != program.n_flat:
+        raise ValueError(f"comp0 has {len(comp0)} entries for a "
+                         f"{program.n_flat}-request program")
     if fixpoint == "loop":
         comp, used, converged = _solve_numpy(
             program, np.asarray(svc_flat, dtype=np.float64),
-            sweeps=sweeps, scan_backend=scan_backend)
+            sweeps=sweeps, scan_backend=scan_backend, comp0=comp0)
     elif fixpoint in ("xla", "pallas", "interpret"):
         comp, used, converged = _solve_kernel(
             program, np.asarray(svc_flat, dtype=np.float64),
-            sweeps=sweeps, impl=fixpoint)
+            sweeps=sweeps, impl=fixpoint, comp0=comp0)
     else:
         raise ValueError(f"unknown fixpoint driver {fixpoint!r}; expected "
                          f"auto | loop | xla | pallas | interpret")

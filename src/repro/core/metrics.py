@@ -28,26 +28,37 @@ import numpy as np
 class LatencyStats:
     """mean/percentile latency summary (microseconds) of one sample set.
 
+    Includes the p99.9 tail (``p999_us``) the cluster capacity planner's
+    SLO curves are drawn from.  Empty sample sets are safe: every field
+    is 0.0 with ``n == 0`` (no numpy warnings, no NaNs in JSON).
+
     Example::
 
         >>> from repro.core import LatencyStats
         >>> LatencyStats.from_samples([10.0, 20.0, 30.0]).mean_us
         20.0
+        >>> LatencyStats.from_samples([]).p999_us
+        0.0
     """
 
     mean_us: float
     p50_us: float
     p95_us: float
     p99_us: float
+    p999_us: float
     n: int
 
     @staticmethod
     def from_samples(lat_us) -> "LatencyStats":
         lat = np.asarray(lat_us, dtype=np.float64)
+        if len(lat) == 0:
+            return LatencyStats(mean_us=0.0, p50_us=0.0, p95_us=0.0,
+                                p99_us=0.0, p999_us=0.0, n=0)
         return LatencyStats(
             mean_us=float(lat.mean()), p50_us=float(np.percentile(lat, 50)),
             p95_us=float(np.percentile(lat, 95)),
-            p99_us=float(np.percentile(lat, 99)), n=len(lat))
+            p99_us=float(np.percentile(lat, 99)),
+            p999_us=float(np.percentile(lat, 99.9)), n=len(lat))
 
 
 def iops(complete_us, n: int = None) -> float:
@@ -169,6 +180,55 @@ def _lat_metric(field):
     return fn
 
 
-for _f in ("mean_us", "p50_us", "p95_us", "p99_us"):
+for _f in ("mean_us", "p50_us", "p95_us", "p99_us", "p999_us"):
     register_metric(f"lat_{_f}", _lat_metric(_f))
 del _f
+
+
+#: Threshold of the default registered SLO-violation extractor
+#: (``slo_violations_10ms`` in every ``RunResult.summary()``).
+DEFAULT_SLO_US = 10_000.0
+
+
+def violation_rate(lat_us, threshold_us: float) -> float:
+    """Fraction of latency samples strictly above ``threshold_us``
+    (0.0 for empty sample sets)."""
+    lat = np.asarray(lat_us, dtype=np.float64)
+    if len(lat) == 0:
+        return 0.0
+    return float(np.count_nonzero(lat > float(threshold_us)) / len(lat))
+
+
+def slo_violations(threshold_us: float) -> MetricFn:
+    """Extractor factory: fraction of requests whose
+    submission-to-completion latency exceeds ``threshold_us``.
+
+    Returns a :data:`MetricFn` suitable for :func:`register_metric`; the
+    cluster capacity planner evaluates these per sweep point to find the
+    user count a rack can serve inside a p99 SLO.  Empty runs report
+    0.0 violations.
+
+    Example::
+
+        >>> from repro.core.metrics import slo_violations, register_metric
+        >>> from repro.core import KiB, WorkloadSpec, ZnsDevice
+        >>> fn = register_metric("slo_violations_1us", slo_violations(1.0))
+        >>> res = ZnsDevice().run(WorkloadSpec().writes(n=10, size=4 * KiB),
+        ...                       backend="event", jitter=False)
+        >>> res.summary(["slo_violations_1us"])   # every write > 1 us
+        {'slo_violations_1us': 1.0}
+        >>> from repro.core.metrics import unregister_metric
+        >>> unregister_metric("slo_violations_1us")
+    """
+    thresh = float(threshold_us)
+
+    def fn(result) -> float:
+        if not len(result.trace):
+            return 0.0
+        return violation_rate(result.sim.latency_from(result.trace.issue),
+                              thresh)
+    fn.__name__ = f"slo_violations_{thresh:g}us"
+    return fn
+
+
+register_metric("slo_violations_10ms", slo_violations(DEFAULT_SLO_US))

@@ -1,18 +1,26 @@
-"""CLI for the observation registry + host-scenario sweeps.
+"""CLI for the observation registry + host-scenario + cluster sweeps.
 
     python -m repro.experiments run --all [--backend vectorized]
     python -m repro.experiments run --only obs4,obs10 --out results/exp
     python -m repro.experiments list
     python -m repro.experiments host [--scenarios lsm,cache]
                                      [--policies greedy-open,striped]
+    python -m repro.experiments cluster [--stripe-widths 2,4]
+                                        [--schemes ec4+2,rep2-k2]
+                                        [--policies round-robin,hashed]
 
 ``run`` executes the selected experiments as one fleet-batched sweep,
 writes per-experiment JSON + a markdown report (cross-linking
 docs/observations.md), prints a summary table, and exits non-zero if any
-check fails.  ``host`` runs the application-scenario x placement-policy
-matrix (`repro.host`) the same way — every combination is one member of
-a single :class:`repro.core.DeviceFleet` call — and prints the
-per-scenario policy ranking (see docs/host.md).
+check fails or any fixpoint did not converge.  ``host`` runs the
+application-scenario x placement-policy matrix (`repro.host`) the same
+way — every combination is one member of a single
+:class:`repro.core.DeviceFleet` call — and prints the per-scenario
+policy ranking (see docs/host.md).  ``cluster`` compiles a (redundancy
+scheme x placement policy) x users-ladder x (normal | degraded) rack
+sweep to one fleet-level :class:`repro.core.ChainProgram`, solves it in
+a single call, and ranks configurations by the user count served inside
+the p99 latency SLO (see docs/cluster.md).
 """
 from __future__ import annotations
 
@@ -58,9 +66,14 @@ def _cmd_run(args) -> int:
             for c in r.checks:
                 print(f"        {c}")
     n_pass = sum(r.passed for r in results)
+    stale = [r.name for r in results if not r.converged]
     print(f"\n{n_pass}/{len(results)} experiments passed "
           f"(backend={args.backend}); report: {paths['report']}")
-    return 0 if n_pass == len(results) else 1
+    if stale:
+        print(f"WARNING: fixpoint did not converge for "
+              f"{', '.join(stale)} — metrics are not steady-state",
+              file=sys.stderr)
+    return 0 if n_pass == len(results) and not stale else 1
 
 
 def _cmd_host(args) -> int:
@@ -102,6 +115,97 @@ def _cmd_host(args) -> int:
     return 0
 
 
+#: Artifact directory of the ``cluster`` subcommand.
+CLUSTER_OUT_DIR = os.path.join("results", "cluster")
+
+
+def _cluster_configs(args):
+    from repro.cluster import (ClusterConfig, available_placements, erasure,
+                               parse_scheme, replication)
+    if args.schemes:
+        schemes = [parse_scheme(s) for s in args.schemes.split(",") if s]
+    else:
+        widths = [int(w) for w in args.stripe_widths.split(",") if w]
+        schemes = []
+        for k in widths:
+            schemes.append(erasure(k, args.parity))
+            schemes.append(replication(k, copies=args.parity + 1))
+    policies = ([p for p in args.policies.split(",") if p]
+                or available_placements())
+    return [ClusterConfig(scheme=s, placement=p)
+            for s in schemes for p in policies]
+
+
+def _cmd_cluster(args) -> int:
+    from repro.cluster import (ClusterSpec, ClusterWorkload,
+                               available_placements, plan_capacity)
+
+    if args.list:
+        for p in available_placements():
+            print(f"placement  {p}")
+        print("schemes    ec<k>+<m> (erasure) or rep<copies>-k<k> "
+              "(replication), e.g. ec4+2, rep2-k2")
+        return 0
+    try:
+        configs = _cluster_configs(args)
+        base_spec = ClusterSpec(n_gateways=args.gateways,
+                                n_servers=args.servers,
+                                durability=args.durability)
+        for cfg in configs:
+            if cfg.scheme.n_shards > args.servers:
+                print(f"cluster: {cfg.scheme.name} needs "
+                      f"{cfg.scheme.n_shards} servers, have {args.servers}",
+                      file=sys.stderr)
+                return 2
+    except (KeyError, ValueError) as e:
+        print(f"cluster: {e.args[0]}", file=sys.stderr)
+        return 2
+    ladder = [int(u) for u in args.users.split(",") if u]
+    workload = ClusterWorkload(
+        ops_per_user=args.objects_per_user,
+        object_bytes=int(args.object_mib * (1 << 20)),
+        get_fraction=args.get_fraction, seed=args.seed)
+    report = plan_capacity(
+        configs, ladder, base_spec=base_spec, workload=workload,
+        slo_us=args.slo_ms * 1e3, degraded=not args.no_degraded,
+        sweeps=args.sweeps)
+
+    os.makedirs(args.out, exist_ok=True)
+    json_path = os.path.join(args.out, "capacity.json")
+    with open(json_path, "w") as f:
+        json.dump(report.to_json(), f, indent=1, sort_keys=True)
+    csv_path = os.path.join(args.out, "capacity_curves.csv")
+    with open(csv_path, "w") as f:
+        f.write("config,degraded,users,objects_per_sec,p50_us,p99_us,"
+                "p999_us,slo_violation_rate\n")
+        for c in report.curves:
+            for p in c.points:
+                f.write(f"{c.config.name},{int(c.degraded)},{p.users},"
+                        f"{p.objects_per_sec:.3f},{p.lat.p50_us:.3f},"
+                        f"{p.lat.p99_us:.3f},{p.lat.p999_us:.3f},"
+                        f"{p.slo_violation_rate:.6f}\n")
+
+    width = max(len(c.config.name) for c in report.curves)
+    print(f"{'config':{width}s} {'mode':8s} {'users@SLO':>9s} "
+          f"{'p99(us) by rung':>24s}")
+    for c in report.ranking():
+        rungs = " ".join(f"{p.lat.p99_us:7.1f}" for p in c.points)
+        print(f"{c.config.name:{width}s} {'normal':8s} "
+              f"{c.users_at_slo:9.2f} {rungs:>24s}")
+        d = report.degraded_curve(c.config)
+        if d is not None:
+            rungs = " ".join(f"{p.lat.p99_us:7.1f}" for p in d.points)
+            print(f"{'':{width}s} {'degraded':8s} "
+                  f"{d.users_at_slo:9.2f} {rungs:>24s}")
+    print(f"\n{report.n_programs} programs ({report.n_events} events) in "
+          f"one fleet-level solve ({report.sweeps_used} sweeps, SLO "
+          f"p99 <= {report.slo_us / 1e3:g}ms); results: {json_path}")
+    if not report.converged:
+        print("WARNING: fixpoint did not converge — capacity numbers are "
+              "not steady-state", file=sys.stderr)
+    return 0 if report.converged else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.experiments",
                                  description=__doc__)
@@ -122,6 +226,38 @@ def main(argv=None) -> int:
                       help=f"artifact directory (default {HOST_OUT_DIR})")
     host.add_argument("--list", action="store_true",
                       help="list scenarios/policies instead of running")
+    clu = sub.add_parser(
+        "cluster",
+        help="rack capacity sweep: scheme x placement -> users at p99 SLO")
+    clu.add_argument("--stripe-widths", default="2,4",
+                     help="comma-separated stripe widths k; each yields an "
+                          "ec(k,parity) and a rep(k,parity+1 copies) scheme")
+    clu.add_argument("--parity", type=int, default=1,
+                     help="redundancy degree m paired with --stripe-widths")
+    clu.add_argument("--schemes", default="",
+                     help="explicit scheme list (ec4+2,rep2-k2,...); "
+                          "overrides --stripe-widths/--parity")
+    clu.add_argument("--policies", default="",
+                     help="comma-separated placement policies (default: all)")
+    clu.add_argument("--gateways", type=int, default=2)
+    clu.add_argument("--servers", type=int, default=8)
+    clu.add_argument("--users", default="2,4,8",
+                     help="comma-separated users-per-rack ladder")
+    clu.add_argument("--slo-ms", type=float, default=10.0,
+                     help="p99 latency SLO in milliseconds")
+    clu.add_argument("--objects-per-user", type=int, default=6)
+    clu.add_argument("--object-mib", type=float, default=2.0)
+    clu.add_argument("--get-fraction", type=float, default=0.5)
+    clu.add_argument("--durability", default="writeback",
+                     choices=("writeback", "write-through"))
+    clu.add_argument("--no-degraded", action="store_true",
+                     help="skip the one-server-down rows")
+    clu.add_argument("--sweeps", type=int, default=512)
+    clu.add_argument("--seed", type=int, default=0)
+    clu.add_argument("--out", default=CLUSTER_OUT_DIR,
+                     help=f"artifact directory (default {CLUSTER_OUT_DIR})")
+    clu.add_argument("--list", action="store_true",
+                     help="list placement policies / scheme syntax")
     run = sub.add_parser("run", help="run experiments (one batched sweep)")
     run.add_argument("--all", action="store_true",
                      help="run every registered experiment")
@@ -142,6 +278,8 @@ def main(argv=None) -> int:
         return _cmd_list()
     if args.cmd == "host":
         return _cmd_host(args)
+    if args.cmd == "cluster":
+        return _cmd_cluster(args)
     return _cmd_run(args)
 
 

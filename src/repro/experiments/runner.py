@@ -213,5 +213,14 @@ def render_report(results: Sequence[ExperimentResult], *,
         for c in r.checks:
             mark = "✅" if c.ok else "❌"
             lines.append(f"- {mark} **{c.name}** — {c.detail}")
+    stale = [r.name for r in results if not r.converged]
+    if stale:
+        lines += [
+            "",
+            f"> ⚠️ **Fixpoint did not converge** for: "
+            f"{', '.join(f'`{n}`' for n in stale)} — metrics above are "
+            f"lower bounds from an exhausted sweep budget, not steady-state "
+            f"values. Re-run with a larger `sweeps` budget.",
+        ]
     lines.append("")
     return "\n".join(lines)

@@ -1,0 +1,336 @@
+"""Cluster tier: codec/placement/gateway structure, the fleet-level
+ChainProgram vs the greedy event-engine oracle (differential), capacity
+planning, and the CLI.  Hypothesis variants of the structural properties
+live in ``tests/test_cluster_properties.py``; this module keeps
+deterministic sweeps of the same invariants so they run without
+hypothesis installed.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    Cluster, ClusterConfig, ClusterSpec, ClusterWorkload, available_placements,
+    build_graph, erasure, oracle_op_latencies, parse_scheme, placement_map,
+    plan_capacity, register_placement, replication, simulate_graph,
+    touched_servers, users_at_slo,
+)
+from repro.cluster.capacity import CapacityPoint
+from repro.core.metrics import LatencyStats
+
+TOL_US = 1e-6       # program-vs-oracle float tolerance (microseconds)
+
+SMALL_WL = ClusterWorkload(n_users=3, ops_per_user=4, get_fraction=0.5,
+                           object_bytes=1 << 20, seed=3)
+
+
+def small_spec(**kw):
+    kw.setdefault("n_gateways", 2)
+    kw.setdefault("n_servers", 6)
+    kw.setdefault("scheme", erasure(3, 1))
+    return ClusterSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# codec: byte layout + slot geometry
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", [erasure(1, 0), erasure(4, 2),
+                                    replication(2, copies=3)])
+@pytest.mark.parametrize("nbytes", [1, 7, 4096, (1 << 20) + 13])
+def test_every_byte_in_exactly_one_data_shard(scheme, nbytes):
+    ranges = scheme.shard_ranges(nbytes)
+    assert len(ranges) == scheme.k
+    # The ranges partition [0, nbytes): contiguous, disjoint, complete.
+    pos = 0
+    for j, (lo, hi) in enumerate(ranges):
+        assert lo == pos and hi >= lo
+        pos = hi
+    assert pos == nbytes
+    for off in {0, nbytes // 2, nbytes - 1} | ({1} if nbytes > 1 else set()):
+        j = scheme.shard_of_byte(nbytes, off)
+        lo, hi = ranges[j]
+        assert lo <= off < hi
+
+
+def test_scheme_names_roundtrip():
+    for scheme in (erasure(4, 2), erasure(2, 0), replication(3, copies=2),
+                   replication(1, copies=3)):
+        assert parse_scheme(scheme.name) == scheme
+    with pytest.raises(ValueError):
+        parse_scheme("raid6")
+
+
+def test_rep_failover_and_ec_reconstruction_slots():
+    rep = replication(2, copies=2)          # slots: [s0 c0, s0 c1, s1 c0, s1 c1]
+    servers = [0, 1, 2, 3]
+    slots, decode = rep.read_slots(servers, down=None)
+    assert slots == [0, 2] and not decode
+    slots, decode = rep.read_slots(servers, down=0)
+    assert slots == [1, 2] and not decode   # failover to surviving copy
+    ec = erasure(3, 1)
+    servers = [0, 1, 2, 3]
+    slots, decode = ec.read_slots(servers, down=1)
+    assert slots == [0, 2, 3] and decode    # full-stripe reconstruction
+    assert ec.write_slots(servers, down=1) == [0, 2, 3]
+    with pytest.raises(ValueError):
+        erasure(2, 0).read_slots([0, 1], down=0)
+
+
+# ---------------------------------------------------------------------------
+# placement registry
+# ---------------------------------------------------------------------------
+def test_placement_maps_valid_and_distinct():
+    objects = np.arange(17)
+    for policy in available_placements():
+        rows = placement_map(objects, n_shards=4, n_servers=9, policy=policy)
+        assert rows.shape == (17, 4)
+        assert rows.min() >= 0 and rows.max() < 9
+        for r in rows:                       # distinct servers per object
+            assert len(set(r.tolist())) == 4
+
+
+def test_placement_registry_extensible():
+    @register_placement("test-reversed")
+    def _reversed(obj, n_shards, n_servers, seed):
+        return (obj + np.arange(n_shards)[::-1]) % n_servers
+    try:
+        rows = placement_map(np.arange(3), 2, 5, policy="test-reversed")
+        assert rows[0].tolist() == [1, 0]
+    finally:
+        from repro.cluster import PLACEMENTS
+        PLACEMENTS.unregister("test-reversed")
+
+
+# ---------------------------------------------------------------------------
+# degraded mode: blast radius
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", [erasure(2, 1), erasure(4, 2)])
+def test_ec_degraded_reconstruction_touches_exactly_m_extra(scheme):
+    spec = small_spec(n_servers=8, scheme=scheme, placement="hashed")
+    wl = dataclasses.replace(SMALL_WL, get_fraction=0.5)
+    ops = wl.build(spec.n_gateways)
+    normal = build_graph(spec, ops, qd=wl.qd, seed=wl.seed)
+    # Degrade a server that holds a primary data shard of some GET.
+    from repro.cluster import OP_GET
+    gets = [op for op in ops if op.kind == OP_GET]
+    assert gets
+    checked = 0
+    for down in range(spec.n_servers):
+        degraded = build_graph(spec, ops, qd=wl.qd, down=down, seed=wl.seed)
+        for op in gets:
+            before = touched_servers(normal, op.seq)
+            after = touched_servers(degraded, op.seq)
+            if down not in before:
+                continue                     # this op unaffected
+            assert down not in after
+            extra = after - before
+            assert len(extra) == scheme.m    # exactly m extra servers
+            checked += 1
+    assert checked > 0
+
+
+def test_rep_degraded_failover_touches_one_replacement():
+    spec = small_spec(n_servers=8, scheme=replication(2, copies=2))
+    ops = SMALL_WL.build(spec.n_gateways)
+    from repro.cluster import OP_GET
+    degraded = build_graph(spec, ops, qd=1, down=0, seed=SMALL_WL.seed)
+    normal = build_graph(spec, ops, qd=1, seed=SMALL_WL.seed)
+    for op in ops:
+        if op.kind != OP_GET:
+            continue
+        before = touched_servers(normal, op.seq)
+        after = touched_servers(degraded, op.seq)
+        if 0 not in before:
+            continue
+        assert 0 not in after
+        assert len(after - before) <= 1      # failover, no reconstruction
+
+
+# ---------------------------------------------------------------------------
+# differential: one fleet-level ChainProgram vs the greedy event engine
+# ---------------------------------------------------------------------------
+DIFF_CASES = [
+    (erasure(3, 1), "round-robin", "writeback", None, 1),
+    (erasure(4, 2), "hashed", "writeback", None, 2),
+    (erasure(2, 1), "strided", "write-through", 0, 1),
+    (replication(2, 2), "grouped", "writeback", 0, 2),
+    (replication(1, 3), "round-robin", "write-through", None, 2),
+    (erasure(3, 0), "hashed", "writeback", None, 1),
+]
+
+
+@pytest.mark.parametrize("scheme,policy,durability,down,qd", DIFF_CASES,
+                         ids=lambda v: str(v))
+def test_program_matches_oracle_jitter_free(scheme, policy, durability,
+                                            down, qd):
+    spec = small_spec(n_servers=8, scheme=scheme, placement=policy,
+                      durability=durability)
+    wl = dataclasses.replace(SMALL_WL, qd=qd)
+    res = Cluster(spec).run(wl, down=down)
+    assert res.converged
+    assert res.compiled.program.order_stable
+    oracle = simulate_graph(res.compiled.graph)
+    assert float(np.max(np.abs(res.comp - oracle))) < TOL_US
+    # Per-op latencies agree too (same readys, same completions).
+    lat_p = res.op_latencies()
+    lat_o = oracle_op_latencies(res.compiled.graph)
+    np.testing.assert_allclose(lat_p, lat_o, atol=TOL_US)
+    assert np.all(lat_p > 0)
+
+
+def test_program_is_exact_single_class_and_flags_multiclass():
+    res = Cluster(small_spec()).run(SMALL_WL)
+    assert res.compiled.program.exact
+    assert res.compiled.program.multiclass_pools == ()
+    # Mixed object sizes through a queuing cap>1 pool (a narrow device
+    # read pool, write-through so GETs hit flash) are flagged inexact.
+    from repro.cluster import CLUSTER_DEVICE_SPEC, compile_graph
+    spec = small_spec(
+        durability="write-through",
+        device_spec=dataclasses.replace(CLUSTER_DEVICE_SPEC,
+                                        read_parallelism=2))
+    wl = dataclasses.replace(SMALL_WL, n_users=4, ops_per_user=6,
+                             get_fraction=0.7)
+    ops = wl.build(spec.n_gateways)
+    ops = [dataclasses.replace(op, nbytes=op.nbytes // (1 + op.obj % 2))
+           for op in ops]
+    graph = build_graph(spec, ops, qd=1, seed=0)
+    compiled = compile_graph(graph)
+    assert not compiled.program.exact
+    assert compiled.program.multiclass_pools
+
+
+def test_oracle_rejects_cyclic_graph():
+    res = Cluster(small_spec()).compile(SMALL_WL)
+    graph = res.graph
+    bad = dataclasses.replace(
+        graph, edges=graph.edges + [("cycle", graph.n - 1, 0)])
+    with pytest.raises(ValueError, match="cycle"):
+        simulate_graph(bad)
+
+
+def test_writeback_shard_too_large_for_buffer_raises():
+    spec = small_spec(scheme=erasure(1, 0))
+    wl = dataclasses.replace(SMALL_WL, object_bytes=64 << 20)  # > 32MiB buf
+    with pytest.raises(ValueError, match="writeback"):
+        Cluster(spec).compile(wl)
+
+
+# ---------------------------------------------------------------------------
+# capacity planning: one concatenated solve
+# ---------------------------------------------------------------------------
+def test_plan_capacity_one_call_matches_per_config_runs():
+    configs = [ClusterConfig(erasure(2, 1), "round-robin"),
+               ClusterConfig(replication(2, 2), "hashed")]
+    wl = dataclasses.replace(SMALL_WL, ops_per_user=3)
+    report = plan_capacity(configs, [2, 4], workload=wl,
+                           base_spec=small_spec(), slo_us=20e3)
+    assert report.converged
+    assert report.n_programs == 8            # 2 cfg x 2 rungs x 2 modes
+    assert report.n_events > 0
+    ranked = report.ranking()
+    assert [c.degraded for c in ranked] == [False, False]
+    assert ranked[0].users_at_slo >= ranked[1].users_at_slo
+    for cfg in configs:                      # degraded row per config
+        assert report.degraded_curve(cfg) is not None
+    # The sliced one-call solve equals a standalone per-config run.
+    spec = dataclasses.replace(small_spec(), scheme=configs[0].scheme,
+                               placement=configs[0].placement)
+    solo = Cluster(spec).run(dataclasses.replace(wl, n_users=2))
+    curve = next(c for c in report.curves
+                 if c.config == configs[0] and not c.degraded)
+    point = next(p for p in curve.points if p.users == 2)
+    assert point.lat.p99_us == pytest.approx(
+        solo.latency_stats().p99_us, abs=TOL_US)
+
+
+def test_users_at_slo_interpolates_and_clamps():
+    def pt(users, p99):
+        lat = LatencyStats(mean_us=p99, p50_us=p99, p95_us=p99, p99_us=p99,
+                           p999_us=p99, n=10)
+        return CapacityPoint(users=users, objects_per_sec=1.0, lat=lat,
+                             slo_violation_rate=0.0, converged=True)
+    assert users_at_slo([], 100.0) == 0.0
+    assert users_at_slo([pt(2, 500.0)], 100.0) == 0.0        # floor violates
+    assert users_at_slo([pt(2, 50.0), pt(8, 90.0)], 100.0) == 8.0
+    mid = users_at_slo([pt(2, 50.0), pt(8, 200.0)], 100.0)
+    assert 2.0 < mid < 8.0                                   # interpolated
+
+
+# ---------------------------------------------------------------------------
+# converged propagation (satellite: non-steady-state runs must be loud)
+# ---------------------------------------------------------------------------
+def test_runner_report_footnotes_unconverged_results():
+    from repro.experiments import ExperimentRunner
+    from repro.experiments.runner import render_report
+    runner = ExperimentRunner(["obs4"], backend="event")
+    results = runner.run()
+    assert all(r.converged for r in results)
+    assert "did not converge" not in render_report(results)
+    stale = [dataclasses.replace(r, converged=False) for r in results]
+    report = render_report(stale)
+    assert "did not converge" in report
+    assert f"`{stale[0].name}`" in report
+
+
+def test_run_cli_exits_nonzero_when_unconverged(monkeypatch, tmp_path,
+                                                capsys):
+    from repro.experiments import __main__ as cli
+    from repro.experiments import ExperimentRunner
+    real_run = ExperimentRunner.run
+
+    def stale_run(self):
+        return [dataclasses.replace(r, converged=False)
+                for r in real_run(self)]
+    monkeypatch.setattr(ExperimentRunner, "run", stale_run)
+    rc = cli.main(["run", "--only", "obs4", "--backend", "event",
+                   "--out", str(tmp_path)])
+    assert rc == 1
+    assert "did not converge" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cluster_cli_list(capsys):
+    from repro.experiments import __main__ as cli
+    assert cli.main(["cluster", "--list"]) == 0
+    out = capsys.readouterr().out
+    for policy in available_placements():
+        assert policy in out
+
+
+def test_cluster_cli_end_to_end(tmp_path, capsys):
+    from repro.experiments import __main__ as cli
+    rc = cli.main(["cluster", "--schemes", "ec2+1", "--policies",
+                   "round-robin", "--users", "2,3", "--objects-per-user",
+                   "3", "--servers", "6", "--out", str(tmp_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "ec2+1/round-robin" in out and "degraded" in out
+    data = json.loads((tmp_path / "capacity.json").read_text())
+    assert data["converged"] is True
+    assert data["n_programs"] == 4           # 1 cfg x 2 rungs x 2 modes
+    assert {c["degraded"] for c in data["curves"]} == {False, True}
+    csv = (tmp_path / "capacity_curves.csv").read_text().strip().splitlines()
+    assert csv[0].startswith("config,degraded,users")
+    assert len(csv) == 1 + 4                 # header + 2 curves x 2 rungs
+
+
+def test_cluster_cli_rejects_bad_scheme(capsys):
+    from repro.experiments import __main__ as cli
+    assert cli.main(["cluster", "--schemes", "raid6"]) == 2
+    assert cli.main(["cluster", "--schemes", "ec9+3", "--servers", "8"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# accelerated fixpoint backends
+# ---------------------------------------------------------------------------
+def test_cluster_program_xla_fixpoint_matches_loop():
+    pytest.importorskip("jax")
+    loop = Cluster(small_spec()).run(SMALL_WL, fixpoint="loop")
+    xla = Cluster(small_spec()).run(SMALL_WL, fixpoint="xla")
+    assert xla.converged
+    np.testing.assert_allclose(xla.comp, loop.comp, atol=1e-3)

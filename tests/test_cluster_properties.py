@@ -1,0 +1,98 @@
+"""Cluster-tier invariants under randomized inputs (hypothesis, via the
+suite's importorskip convention — deterministic sweeps of the same
+properties live in ``tests/test_cluster.py`` so coverage survives
+without hypothesis installed).
+
+Three properties from the issue spec:
+
+1. every object byte maps to exactly one data shard (codec partition);
+2. EC degraded reconstruction touches exactly ``m`` servers beyond the
+   normal-mode read set;
+3. the fleet-level ChainProgram's completions match the greedy
+   event-engine oracle to float tolerance on jitter-free configs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.cluster import (
+    Cluster, ClusterSpec, ClusterWorkload, build_graph, erasure, replication,
+    simulate_graph, touched_servers, OP_GET,
+)
+
+TOL_US = 1e-6
+
+
+def schemes():
+    return st.one_of(
+        st.tuples(st.integers(1, 6), st.integers(0, 3)).map(
+            lambda km: erasure(*km)),
+        st.tuples(st.integers(1, 4), st.integers(1, 3)).map(
+            lambda kc: replication(kc[0], copies=kc[1])),
+    )
+
+
+@given(scheme=schemes(), nbytes=st.integers(1, 1 << 22),
+       offset=st.integers(0, (1 << 22) - 1))
+@settings(max_examples=200, deadline=None)
+def test_every_byte_in_exactly_one_data_shard(scheme, nbytes, offset):
+    ranges = scheme.shard_ranges(nbytes)
+    pos = 0
+    for lo, hi in ranges:                    # contiguous partition
+        assert lo == pos and hi >= lo
+        pos = hi
+    assert pos == nbytes
+    offset %= nbytes
+    holders = [j for j, (lo, hi) in enumerate(ranges) if lo <= offset < hi]
+    assert holders == [scheme.shard_of_byte(nbytes, offset)]
+
+
+@given(k=st.integers(2, 4), m=st.integers(1, 2),
+       policy=st.sampled_from(["round-robin", "strided", "hashed"]),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_ec_degraded_reconstruction_touches_exactly_m_extra(k, m, policy,
+                                                            seed):
+    scheme = erasure(k, m)
+    spec = ClusterSpec(n_gateways=2, n_servers=scheme.n_shards + 2,
+                       scheme=scheme, placement=policy)
+    wl = ClusterWorkload(n_users=2, ops_per_user=4, get_fraction=0.5,
+                         object_bytes=1 << 20, seed=seed)
+    ops = wl.build(spec.n_gateways)
+    normal = build_graph(spec, ops, qd=1, seed=seed)
+    for down in range(spec.n_servers):
+        degraded = build_graph(spec, ops, qd=1, down=down, seed=seed)
+        for op in ops:
+            if op.kind != OP_GET:
+                continue
+            before = touched_servers(normal, op.seq)
+            after = touched_servers(degraded, op.seq)
+            if down not in before:
+                continue
+            assert down not in after
+            assert len(after - before) == m
+
+
+@given(scheme=st.sampled_from([erasure(2, 1), erasure(3, 0),
+                               replication(2, 2), replication(1, 3)]),
+       policy=st.sampled_from(["round-robin", "grouped", "hashed"]),
+       durability=st.sampled_from(["writeback", "write-through"]),
+       qd=st.integers(1, 2), seed=st.integers(0, 20),
+       degrade=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_program_matches_oracle_jitter_free(scheme, policy, durability, qd,
+                                            seed, degrade):
+    spec = ClusterSpec(n_gateways=2, n_servers=8, scheme=scheme,
+                       placement=policy, durability=durability)
+    wl = ClusterWorkload(n_users=3, ops_per_user=3, get_fraction=0.5,
+                         object_bytes=1 << 20, qd=qd, seed=seed)
+    down = 0 if degrade and scheme.m >= 1 else None
+    res = Cluster(spec).run(wl, down=down)
+    assert res.converged and res.compiled.program.order_stable
+    oracle = simulate_graph(res.compiled.graph)
+    assert float(np.max(np.abs(res.comp - oracle))) < TOL_US

@@ -27,6 +27,9 @@ DOCTEST_MODULES = (
     "repro.experiments.registry",
     "repro.experiments.runner",
     "repro.host.scenarios",
+    "repro.cluster.codec",
+    "repro.cluster.placement",
+    "repro.cluster.cluster",
 )
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
