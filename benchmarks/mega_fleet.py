@@ -1,0 +1,243 @@
+"""Mega-fleet solver: entry-sharded fixpoint vs the single-chip fused
+solve vs the per-device event-engine oracle, plus the jitted lowering
+path (replica dedup + vectorized block fill).
+
+``python -m benchmarks.run --only mega_fleet [--quick]``
+
+Fleet shape: a large replicated ZNS device tier (each device's refined
+program converges in ~2 Gauss-Seidel sweeps) plus one contended rack
+entry — a closed-loop cluster program (16 gateways' worth of users on 4
+servers) that needs ~90 sweeps to reach its fixpoint.  The fused
+single-chip solve pays the straggler's sweep count across the whole
+fleet: every idle sweep still gathers and edge-checks every family
+block of every converged device.  The entry-sharded executor
+(:func:`repro.core.solve_program_sharded`) gives each signature group
+its own convergence budget, so the device tier stops after 2 sweeps and
+only the straggler keeps sweeping.  The win is algorithmic — per-entry
+budgets, not parallel hardware — so it holds on a single CPU core and
+multiplies further when the mesh executor spreads shards across real
+chips.
+
+Gates:
+
+* ``speedup`` — sharded (host executor) >= ``SPEEDUP_GATE`` x the
+  single-chip fused solve at the largest fleet size;
+* ``equal``   — sharded completions match single-chip to ``REL_TOL``
+  relative (the ISSUE acceptance bar), and both converge;
+* ``mesh``    — when >= 2 jax devices are visible (CI forces two
+  virtual host devices via ``XLA_FLAGS``), the ``shard_map`` executor
+  matches to ``REL_TOL`` as well;
+* ``lowering`` — dedup + vectorized fill compiles a 64-device x 100k
+  event few-unique fleet >= ``LOWERING_GATE`` x faster than the
+  reference per-chain fill without dedup.
+
+Full (non-quick) mode additionally runs the 1k-device x 1M-request
+end-to-end acceptance row through ``DeviceFleet.run``.
+"""
+from __future__ import annotations
+
+import warnings
+
+from .common import timed
+
+#: Sharded (host executor) must beat the single-chip fused solve by
+#: this much at the largest fleet size.
+SPEEDUP_GATE = 3.0
+#: Dedup + vectorized fill vs reference per-chain fill at 64 x 100k.
+LOWERING_GATE = 2.0
+#: Relative tolerance of the sharded-vs-single-chip equality gates.
+REL_TOL = 1e-12
+
+#: Device-tier shape: 8 closed-loop append threads, qd 2, n per thread.
+DEV_THREADS, DEV_QD, DEV_N = 8, 2, 500
+
+
+def _device_trace():
+    from repro.core import KiB, WorkloadSpec
+
+    wl = WorkloadSpec()
+    for t in range(DEV_THREADS):
+        wl = wl.appends(n=DEV_N, size=8 * KiB, qd=DEV_QD, zone=t * 4,
+                        nzones=4)
+    return wl.build()
+
+
+def _straggler_rack():
+    """One contended rack: 8 users x 20 closed-loop object ops on a
+    1-gateway / 4-server ec2+1 cluster — ~3.7k events, ~90 sweeps."""
+    from repro.cluster import Cluster, ClusterSpec, ClusterWorkload, erasure
+
+    spec = ClusterSpec(n_gateways=1, n_servers=4, scheme=erasure(2, 1))
+    wl = ClusterWorkload(n_users=8, ops_per_user=20, object_bytes=1 << 20,
+                         seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        return Cluster(spec).compile(wl)
+
+
+def _fleet(ndev, rack):
+    """Concat ``ndev`` replicated device programs + the straggler."""
+    import numpy as np
+
+    from repro.core import (ZNSDeviceSpec, ZnsDevice, compile_fleet_program,
+                            concat_programs)
+
+    spec = ZNSDeviceSpec()
+    lat = ZnsDevice(spec).lat
+    tr = _device_trace()
+    dprog = compile_fleet_program([tr] * ndev, [spec] * ndev, [lat] * ndev,
+                                  cache=False)
+    prog = concat_programs([dprog, rack.program])
+    svc = np.concatenate([dprog.svc0_flat, rack.graph.svc])
+    return prog, svc, tr, spec, lat
+
+
+def _relerr(a, b):
+    import numpy as np
+
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1.0)))
+
+
+def run(quick: bool = False) -> list:
+    from repro.cluster import simulate_graph
+    from repro.core import (last_compile_stats, solve_program,
+                            solve_program_sharded)
+    from repro.core import chain_program as cp
+    from repro.core.engine import simulate
+
+    rack = _straggler_rack()
+    sizes = (16, 96) if quick else (16, 64, 128, 256)
+    out: list = []
+    speedup = 0.0
+    rel = float("inf")
+    conv = False
+
+    # --- scaling curve: single-chip vs entry-sharded vs event oracle ---
+    for ndev in sizes:
+        prog, svc, tr, spec, lat = _fleet(ndev, rack)
+        (c1, u1, k1), one_us = timed(
+            lambda: solve_program(prog, svc, sweeps=1024, fixpoint="loop",
+                                  warn=False), repeats=2)
+        (c2, u2, k2), sh_us = timed(
+            lambda: solve_program_sharded(prog, svc, sweeps=1024,
+                                          executor="host", warn=False),
+            repeats=2)
+        speedup = one_us / sh_us if sh_us > 0 else float("inf")
+        rel = _relerr(c2, c1)
+        conv = bool(k1) and bool(k2)
+        out.append((f"mega_fleet/single_chip/{ndev}dev", one_us,
+                    f"events={prog.n_flat};sweeps={u1}"))
+        out.append((f"mega_fleet/sharded_host/{ndev}dev", sh_us,
+                    f"events={prog.n_flat};sweeps={u2}"))
+        out.append((f"mega_fleet/speedup/{ndev}dev", 0.0,
+                    f"{speedup:.2f}x"))
+
+    # gates evaluate at the largest size (loop leaves it bound)
+    out.append(("mega_fleet/gate_speedup", 0.0,
+                f"{speedup:.2f}x"
+                + ("" if speedup >= SPEEDUP_GATE and conv else "=FAIL")))
+    out.append(("mega_fleet/gate_equal", 0.0,
+                f"rel={rel:.2e}"
+                + ("" if rel <= REL_TOL and conv else "=FAIL")))
+
+    # event-engine oracle at the largest size: the pre-compiler way of
+    # producing fleet completions (one greedy event heap per device +
+    # the rack oracle)
+    ndev = sizes[-1]
+
+    def oracle():
+        for _ in range(ndev):
+            simulate(tr, spec, lat, seed=0, jitter=False)
+        return simulate_graph(rack.graph)
+
+    _, or_us = timed(oracle, repeats=1)
+    out.append((f"mega_fleet/event_oracle/{ndev}dev", or_us,
+                f"devices={ndev}"))
+
+    # --- mesh executor (shard_map) when >= 2 jax devices are visible ---
+    mesh_row = "skipped;jax_devices<2"
+    try:
+        import jax
+
+        ndevs = len(jax.local_devices())
+    except Exception:
+        ndevs = 0
+    if ndevs >= 2:
+        prog, svc, _, _, _ = _fleet(8, rack)
+        ref, _, k_ref = solve_program(prog, svc, sweeps=1024,
+                                      fixpoint="loop", warn=False)
+        (cm, um, km), mesh_us = timed(
+            lambda: solve_program_sharded(prog, svc, sweeps=1024,
+                                          executor="mesh", warn=False),
+            repeats=1)
+        relm = _relerr(cm, ref)
+        ok = relm <= REL_TOL and bool(km) and bool(k_ref)
+        mesh_row = (f"devices={ndevs};rel={relm:.2e}"
+                    + ("" if ok else "=FAIL"))
+        out.append(("mega_fleet/sharded_mesh/8dev", mesh_us,
+                    f"events={prog.n_flat};sweeps={um}"))
+    out.append(("mega_fleet/gate_mesh", 0.0, mesh_row))
+
+    # --- jitted lowering: dedup + vectorized fill vs reference fill ----
+    from repro.core import (ZNSDeviceSpec, ZnsDevice, compile_fleet_program)
+    from repro.core import KiB, WorkloadSpec
+
+    nlow, per = 64, 1560                               # ~100k events
+    spec = ZNSDeviceSpec()
+    lat = ZnsDevice(spec).lat
+    wl = WorkloadSpec()
+    for t in range(8):
+        wl = wl.appends(n=per // 8, size=8 * KiB, qd=2, zone=t * 4,
+                        nzones=4)
+    tiers = [wl.build(),
+             WorkloadSpec().writes(n=per, qd=4, zone=7).build(),
+             WorkloadSpec().reads(n=per, size=4 * KiB, qd=4,
+                                  nzones=64).build()]
+    traces = [tiers[i % 3] for i in range(nlow)]
+    specs, lats = [spec] * nlow, [lat] * nlow
+    nev = sum(len(t) for t in traces)
+    _, fast_us = timed(lambda: compile_fleet_program(
+        traces, specs, lats, cache=False, dedup=True), repeats=2)
+    st = last_compile_stats()
+    cp._USE_REFERENCE_FILL = True
+    try:
+        _, ref_us = timed(lambda: compile_fleet_program(
+            traces, specs, lats, cache=False, dedup=False), repeats=2)
+    finally:
+        cp._USE_REFERENCE_FILL = False
+    low_speed = ref_us / fast_us if fast_us > 0 else float("inf")
+    out.append(("mega_fleet/lowering_fast", fast_us,
+                f"devices={nlow};events={nev};unique={st.n_unique}"))
+    out.append(("mega_fleet/lowering_reference", ref_us,
+                f"devices={nlow};events={nev}"))
+    out.append(("mega_fleet/gate_lowering", 0.0,
+                f"{low_speed:.2f}x"
+                + ("" if low_speed >= LOWERING_GATE else "=FAIL")))
+
+    # --- full mode: 1k devices x 1M requests end-to-end ----------------
+    if not quick:
+        from repro.core import DeviceFleet
+
+        wl_1k = WorkloadSpec()
+        for t in range(4):
+            wl_1k = wl_1k.appends(n=250, size=8 * KiB, qd=2, zone=t * 4,
+                                  nzones=4)
+        fleet = DeviceFleet.homogeneous(1000, spec)
+        fres, e2e_us = timed(
+            lambda: fleet.run(wl_1k, policy="replicate",
+                              backend="vectorized", jitter=False),
+            repeats=1)
+        cst = fres.compile_stats
+        total = sum(len(r.trace) for r in fres)
+        out.append(("mega_fleet/end_to_end_1k_x_1M", e2e_us,
+                    f"devices=1000;events={total};conv={fres.converged};"
+                    f"unique={cst.n_unique if cst else '?'}"
+                    + ("" if fres.converged and total == 1_000_000
+                       else "=FAIL")))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import fmt_rows
+
+    print(fmt_rows(run(quick=True)))

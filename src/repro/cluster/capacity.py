@@ -82,6 +82,10 @@ class CapacityReport:
     n_events: int
     sweeps_used: int
     converged: bool
+    #: Config names whose pop-order refinement exhausted its budget
+    #: (``order_stable=False``) — their curves are still reported, but
+    #: the underlying programs are approximate, not exact.
+    order_unstable: Tuple[str, ...] = ()
 
     def ranking(self) -> List[CapacityCurve]:
         """Normal-mode curves, best (most users inside SLO) first."""
@@ -99,6 +103,7 @@ class CapacityReport:
         return {"slo_us": self.slo_us, "n_programs": self.n_programs,
                 "n_events": self.n_events, "sweeps_used": self.sweeps_used,
                 "converged": self.converged,
+                "order_unstable": list(self.order_unstable),
                 "curves": [c.to_json() for c in self.curves]}
 
 
@@ -193,8 +198,12 @@ def plan_capacity(configs: Sequence[ClusterConfig],
         curves.append(CapacityCurve(
             config=key_cfg[key], degraded=key[1], points=tuple(points),
             users_at_slo=users_at_slo(points, slo_us)))
+    unstable = tuple(sorted({
+        cfg.name for cfg, _, _, c in entries
+        if not c.program.order_stable}))
     return CapacityReport(
         curves=curves, slo_us=slo_us, n_programs=len(entries),
         n_events=program.n_flat, sweeps_used=used,
         converged=bool(converged) and all(
-            c.converged for _, _, _, c in entries))
+            c.converged for _, _, _, c in entries),
+        order_unstable=unstable)

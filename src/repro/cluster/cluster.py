@@ -97,9 +97,11 @@ class Cluster:
 
     def run(self, workload: ClusterWorkload, *, down: Optional[int] = None,
             sweeps: int = 512, fixpoint: str = "loop",
-            scan_backend: str = "auto") -> ClusterRunResult:
+            scan_backend: str = "auto",
+            max_refine: int = MAX_REFINE) -> ClusterRunResult:
         compiled = self.compile(workload, down=down, sweeps=sweeps,
-                                fixpoint=fixpoint, scan_backend=scan_backend)
+                                fixpoint=fixpoint, scan_backend=scan_backend,
+                                max_refine=max_refine)
         return ClusterRunResult(
             spec=self.spec, workload=workload, compiled=compiled,
             comp=compiled.comp, converged=compiled.converged,

@@ -37,6 +37,7 @@ call — on the fused fixpoint kernels when JAX/TPU is available.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -407,6 +408,23 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
         refine_used = it + 1
         ready = _graph_ready(graph, dag, comp)
         prev_orders = orders
+    if not order_stable:
+        # Budget exhausted: report which FIFO pools are still flapping
+        # instead of silently downgrading the program to ``exact=False``.
+        nxt = [np.lexsort((np.asarray(r.members, dtype=np.int64),
+                           graph.issue[r.members],
+                           _quantize(ready[r.members])))
+               for r in fifo_res]
+        unstable = [r.label for r, o, p in
+                    zip(fifo_res, nxt, prev_orders or nxt)
+                    if not np.array_equal(o, p)] or \
+            [r.label for r in fifo_res]
+        warnings.warn(
+            f"cluster order refinement exhausted max_refine={max_refine} "
+            f"without pop-order fixpoint; unstable FIFO pools: "
+            f"{', '.join(unstable)} — program marked order_stable=False "
+            f"(raise max_refine on Cluster.run/compile_graph, or pass "
+            f"--max-refine on the CLI)", RuntimeWarning, stacklevel=2)
     program = dataclasses.replace(
         program, refine_used=refine_used, order_stable=order_stable,
         exact=bool(not multiclass and order_stable))

@@ -18,9 +18,14 @@ from .engine import (  # noqa: F401
     zone_sequential_completions, zone_sequential_completions_batched,
 )
 from .chain_program import (  # noqa: F401
-    ChainProgram, build_program, clear_program_cache, compile_fleet_program,
-    compile_program, concat_programs, extend_program, program_cache_info,
-    program_chains, solve_program,
+    ChainProgram, CompileStats, build_program, clear_program_cache,
+    compile_fleet_program, compile_program, concat_programs, extend_program,
+    last_compile_stats, program_cache_dir, program_cache_info,
+    program_chains, set_program_cache_dir, solve_program,
+)
+from .shard import (  # noqa: F401
+    Shard, ShardedProgram, clear_shard_plans, shard_program,
+    solve_program_sharded,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import (  # noqa: F401

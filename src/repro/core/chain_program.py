@@ -54,6 +54,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import pickle
+import sys
+import tempfile
+import time
 import warnings
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -212,7 +217,7 @@ class ChainProgram:
 # ---------------------------------------------------------------------------
 _PROGRAM_CACHE: "OrderedDict[tuple, ChainProgram]" = OrderedDict()
 _PROGRAM_CACHE_MAX = 8
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "disk_hits": 0}
 
 #: Identity fast path: recent ``(traces, specs, params, refine) ->
 #: program`` bindings keyed by trace object identity, so hot loops that
@@ -224,13 +229,137 @@ _IDENTITY_CACHE_MAX = 4
 
 
 def _trace_digest(trace: Trace) -> bytes:
+    """Content digest of a trace, computed once per trace *object*.
+
+    The digest is memoized on the trace itself (traces are structurally
+    immutable once built), so refinement rebuilds, repeated fleet
+    compiles, and the on-disk program cache all hash each trace exactly
+    once instead of once per lookup.
+    """
+    cached = getattr(trace, "_digest_memo", None)
+    if cached is not None:
+        return cached
     h = hashlib.sha1()
     for f in ("op", "zone", "size", "issue", "thread", "qd", "occupancy",
               "was_finished", "io_ctx"):
         a = np.ascontiguousarray(getattr(trace, f))
         h.update(a.tobytes())
     h.update(bytes([int(trace.stack), int(trace.fmt)]))
-    return h.digest()
+    d = h.digest()
+    try:
+        trace._digest_memo = d
+    except Exception:        # frozen/slotted trace subclass: skip memo
+        pass
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileStats:
+    """Cost attribution of the most recent fleet compile.
+
+    ``hits``/``misses`` count in-memory program-cache lookups (LRU +
+    identity fast path) since the cache was last cleared; ``disk_hits``
+    counts programs loaded from the persistent on-disk cache;
+    ``lowering_ms`` is the wall-clock the last
+    :func:`compile_fleet_program` call spent lowering (0.0 on any cache
+    hit).  ``n_devices``/``n_unique`` expose the replica dedup: only
+    ``n_unique`` of the ``n_devices`` member traces were lowered.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    disk_hits: int = 0
+    lowering_ms: float = 0.0
+    n_devices: int = 0
+    n_unique: int = 0
+
+    def to_json(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+_LAST_STATS = CompileStats()
+
+#: Persistent program cache directory (``None`` disables).  Seeded from
+#: the ``REPRO_PROGRAM_CACHE_DIR`` environment variable; override with
+#: :func:`set_program_cache_dir`.
+_DISK_CACHE_DIR: Optional[str] = os.environ.get(
+    "REPRO_PROGRAM_CACHE_DIR") or None
+
+#: Bump when the ChainProgram layout or lowering semantics change: the
+#: on-disk key includes it, so stale pickles are never deserialized.
+_DISK_CACHE_VERSION = 1
+
+
+def last_compile_stats() -> CompileStats:
+    """Stats of the most recent :func:`compile_fleet_program` call."""
+    return _LAST_STATS
+
+
+def set_program_cache_dir(path: Optional[str]) -> Optional[str]:
+    """Set (or with ``None`` disable) the persistent program cache.
+
+    Compiled :class:`ChainProgram` artifacts are pickled under
+    ``path`` keyed by (trace content digests, device specs, latency
+    params, refine budget), so repeated experiment and capacity sweeps
+    across *processes* skip lowering entirely.  Returns the previous
+    directory.  The directory is created on first write.  Only point
+    this at a directory you trust: loading uses ``pickle``.
+    """
+    global _DISK_CACHE_DIR
+    prev = _DISK_CACHE_DIR
+    _DISK_CACHE_DIR = str(path) if path else None
+    return prev
+
+
+def program_cache_dir() -> Optional[str]:
+    return _DISK_CACHE_DIR
+
+
+def _disk_cache_path(key) -> Optional[str]:
+    if _DISK_CACHE_DIR is None:
+        return None
+    digests, specs, params, refine = key
+    h = hashlib.sha1()
+    h.update(repr(_DISK_CACHE_VERSION).encode())
+    for d in digests:
+        h.update(d)
+    h.update(repr(specs).encode())
+    h.update(repr(params).encode())
+    h.update(repr(int(refine)).encode())
+    return os.path.join(_DISK_CACHE_DIR, f"program-{h.hexdigest()}.pkl")
+
+
+def _disk_cache_get(key) -> Optional[ChainProgram]:
+    path = _disk_cache_path(key)
+    if path is None:
+        return None
+    try:
+        with open(path, "rb") as f:
+            prog = pickle.load(f)
+    except (OSError, pickle.PickleError, EOFError, AttributeError):
+        return None
+    if not isinstance(prog, ChainProgram):
+        return None
+    _CACHE_STATS["disk_hits"] += 1
+    return prog
+
+
+def _disk_cache_put(key, prog: ChainProgram) -> None:
+    path = _disk_cache_path(key)
+    if path is None:
+        return
+    try:
+        os.makedirs(_DISK_CACHE_DIR, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=_DISK_CACHE_DIR, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(prog, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        pass                    # cache writes are strictly best-effort
 
 
 def program_cache_info() -> Dict[str, int]:
@@ -241,7 +370,7 @@ def program_cache_info() -> Dict[str, int]:
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
     _IDENTITY_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    _CACHE_STATS.update(hits=0, misses=0, disk_hits=0)
 
 
 def _cache_get(key):
@@ -396,14 +525,20 @@ def _label_rank(label: str) -> Tuple[int, str]:
         return len(FAMILY_ORDER), label
 
 
-def _blocks_from_chains(chains: "OrderedDict[str, list]", n_flat: int
-                        ) -> Tuple[FamilyBlock, ...]:
-    """Length-bucket + lay out ``{label: [chain index arrays]}`` into
-    padded :class:`FamilyBlock` tensors addressing a flat vector of
-    ``n_flat`` events (padding points at the dead slot ``n_flat``).
-    Labels are emitted in :data:`repro.core.engine.FAMILY_ORDER`-first
-    rank (unknown labels sort after, alphabetically) — the Gauss-Seidel
-    application order."""
+#: Benchmark escape hatch: ``True`` routes block assembly through the
+#: per-chain reference fill (:func:`_blocks_from_chains_ref`) instead of
+#: the vectorized scatter path, so ``benchmarks/mega_fleet.py`` can
+#: measure the lowering speedup against the historical implementation.
+_USE_REFERENCE_FILL = False
+
+
+def _blocks_from_chains_ref(chains: "OrderedDict[str, list]", n_flat: int
+                            ) -> Tuple[FamilyBlock, ...]:
+    """Reference block fill: one Python loop iteration per chain.
+
+    Kept (a) as the baseline leg of the lowering benchmark and (b) as
+    the executable specification the vectorized fill is tested against.
+    """
     blocks = []
     for label in sorted(chains, key=_label_rank):
         chs = chains[label]
@@ -432,6 +567,78 @@ def _blocks_from_chains(chains: "OrderedDict[str, list]", n_flat: int
     return tuple(blocks)
 
 
+def _blocks_from_segments(segments: "OrderedDict[str, tuple]", n_flat: int
+                          ) -> Tuple[FamilyBlock, ...]:
+    """Vectorized block fill from segment form.
+
+    ``segments`` maps label -> ``(vals, lens)`` where ``vals`` is the
+    concatenation of every chain of the family (chain order preserved)
+    and ``lens`` the per-chain lengths.  Each bucket is laid out with
+    one fancy-index scatter instead of a per-chain Python loop — the
+    hot path that dominated fleet lowering at >=64 devices.
+    """
+    blocks = []
+    for label in sorted(segments, key=_label_rank):
+        vals, lens = segments[label]
+        if len(lens) == 0:
+            continue
+        starts = np.zeros(len(lens), dtype=np.int64)
+        np.cumsum(lens[:-1], out=starts[1:])
+        for bucket in length_buckets(lens.tolist(),
+                                     ratio=CHAIN_BUCKET_RATIO):
+            sel = np.asarray(bucket, dtype=np.int64)
+            sl = lens[sel]
+            R = len(sel)
+            L = int(sl.max())
+            tot = int(sl.sum())
+            # lane/position coordinates of every real event in the
+            # padded (R, L) bucket, then one gather + one scatter
+            lane = np.repeat(np.arange(R, dtype=np.int64), sl)
+            lane_start = np.zeros(R, dtype=np.int64)
+            np.cumsum(sl[:-1], out=lane_start[1:])
+            pos = np.arange(tot, dtype=np.int64) - np.repeat(lane_start, sl)
+            cvals = vals[np.repeat(starts[sel], sl) + pos]
+            if R >= POSLOOP_MIN_CHAINS and \
+                    R * np.log2(max(L, 2)) >= POSLOOP_COST_CUTOVER:
+                gidx = np.full((L, R), n_flat, dtype=np.int64)
+                heads = np.ones((L, R), dtype=bool)
+                gidx[pos, lane] = cvals
+                heads[pos, lane] = pos == 0
+                blocks.append(FamilyBlock(label=label, gidx=gidx,
+                                          heads=heads, layout="cols"))
+            else:
+                gidx = np.full((R, L), n_flat, dtype=np.int64)
+                heads = np.ones((R, L), dtype=bool)
+                gidx[lane, pos] = cvals
+                heads[lane, pos] = pos == 0
+                blocks.append(FamilyBlock(label=label, gidx=gidx,
+                                          heads=heads, layout="rows"))
+    return tuple(blocks)
+
+
+def _segments_from_chains(chains: "OrderedDict[str, list]"
+                          ) -> "OrderedDict[str, tuple]":
+    segments: "OrderedDict[str, tuple]" = OrderedDict()
+    for label, chs in chains.items():
+        vals = np.concatenate(chs) if chs else np.zeros(0, dtype=np.int64)
+        lens = np.asarray([len(c) for c in chs], dtype=np.int64)
+        segments[label] = (vals, lens)
+    return segments
+
+
+def _blocks_from_chains(chains: "OrderedDict[str, list]", n_flat: int
+                        ) -> Tuple[FamilyBlock, ...]:
+    """Length-bucket + lay out ``{label: [chain index arrays]}`` into
+    padded :class:`FamilyBlock` tensors addressing a flat vector of
+    ``n_flat`` events (padding points at the dead slot ``n_flat``).
+    Labels are emitted in :data:`repro.core.engine.FAMILY_ORDER`-first
+    rank (unknown labels sort after, alphabetically) — the Gauss-Seidel
+    application order."""
+    if _USE_REFERENCE_FILL:
+        return _blocks_from_chains_ref(chains, n_flat)
+    return _blocks_from_segments(_segments_from_chains(chains), n_flat)
+
+
 def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
               exact: bool, refine_used: int, order_stable: bool
               ) -> ChainProgram:
@@ -447,15 +654,41 @@ def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
     # split every (device, family) into its chains; chains are the
     # batching unit: bucketed by length across devices so one block
     # solves all similar-length chains of a family fleet-wide
-    chains: "OrderedDict[str, list]" = OrderedDict()
-    for d, fams in enumerate(fam_lists):
-        for label, perm, heads in fams:
-            if len(perm) == 0:
-                continue
-            cuts = np.flatnonzero(heads)
-            for c in np.split(offsets[d] + perm, cuts[1:]):
-                chains.setdefault(label, []).append(c)
-    blocks = _blocks_from_chains(chains, n_flat)
+    if _USE_REFERENCE_FILL:
+        chains: "OrderedDict[str, list]" = OrderedDict()
+        for d, fams in enumerate(fam_lists):
+            for label, perm, heads in fams:
+                if len(perm) == 0:
+                    continue
+                cuts = np.flatnonzero(heads)
+                for c in np.split(offsets[d] + perm, cuts[1:]):
+                    chains.setdefault(label, []).append(c)
+        blocks = _blocks_from_chains(chains, n_flat)
+    else:
+        # segment form: a family's ``perm`` already IS its chains
+        # concatenated in order, so one offset-shift per (device,
+        # family) replaces a per-chain ``np.split`` loop.  Chain
+        # lengths are memoized per heads array — replicated devices
+        # share ``_DeviceLowering`` objects, so lengths compute once
+        # per *unique* device.
+        segs: "OrderedDict[str, list]" = OrderedDict()
+        lens_memo: Dict[int, np.ndarray] = {}
+        for d, fams in enumerate(fam_lists):
+            for label, perm, heads in fams:
+                if len(perm) == 0:
+                    continue
+                lens = lens_memo.get(id(heads))
+                if lens is None:
+                    cuts = np.flatnonzero(heads)
+                    lens = np.diff(np.r_[0, cuts[1:], len(perm)])
+                    lens_memo[id(heads)] = lens
+                segs.setdefault(label, ([], []))
+                segs[label][0].append(offsets[d] + perm)
+                segs[label][1].append(lens)
+        segments: "OrderedDict[str, tuple]" = OrderedDict(
+            (label, (np.concatenate(vs), np.concatenate(ls)))
+            for label, (vs, ls) in segs.items())
+        blocks = _blocks_from_segments(segments, n_flat)
     multiclass = tuple(sorted({k for dev in devs for k in dev.multiclass}))
     return ChainProgram(
         n_flat=n_flat, offsets=tuple(offsets),
@@ -471,21 +704,33 @@ def compile_fleet_program(traces: Sequence[Trace],
                           specs: Sequence[ZNSDeviceSpec],
                           lats: Sequence, *,
                           refine: int = DEFAULT_REFINE,
-                          cache: bool = True) -> ChainProgram:
+                          cache: bool = True,
+                          dedup: bool = True) -> ChainProgram:
     """Lower N devices' traces into one fused :class:`ChainProgram`.
 
     ``lats[i]`` may be a :class:`repro.core.LatencyModel` or a bare
     :class:`repro.core.LatencyParams` pytree.  Compilation is
     deterministic in ``(traces, specs, params, refine)`` -- service
     classes and pop-order refinement use jitter-free service times --
-    and cached in a module-level LRU on exactly that key.
+    and cached in a module-level LRU on exactly that key (plus a
+    persistent on-disk cache when :func:`set_program_cache_dir` or
+    ``REPRO_PROGRAM_CACHE_DIR`` points somewhere).
+
+    With ``dedup`` (default), devices with identical (trace content,
+    spec, params) lower and refine once and share the result: the
+    fleet solve is block-diagonal per device, so replicas follow
+    identical refinement trajectories.  Mega-fleets replicating one
+    workload over thousands of devices lower in O(unique) time.
     """
+    global _LAST_STATS
+    t0 = time.perf_counter()
     B = len(traces)
     if not (len(specs) == len(lats) == B):
         raise ValueError(f"fleet shape mismatch: {B} traces, {len(specs)} "
                          f"specs, {len(lats)} latency models")
     params = [resolve_params(l) for l in lats]
     key = None
+    digests: Optional[list] = None
     if cache:
         ikey = (tuple(id(t) for t in traces), tuple(specs), tuple(params),
                 int(refine))
@@ -494,34 +739,56 @@ def compile_fleet_program(traces: Sequence[Trace],
                                     zip(ihit[0], traces)):
             _IDENTITY_CACHE.move_to_end(ikey)
             _CACHE_STATS["hits"] += 1
+            _LAST_STATS = CompileStats(hits=1, n_devices=B)
             return ihit[1]
         # replicated workloads pass the same trace object many times;
-        # digest each object once
-        memo: Dict[int, bytes] = {}
-        digests = []
-        for t in traces:
-            d = memo.get(id(t))
-            if d is None:
-                d = memo[id(t)] = _trace_digest(t)
-            digests.append(d)
+        # digest each object once (and memoize on the trace itself)
+        digests = [_trace_digest(t) for t in traces]
         key = (tuple(digests), tuple(specs), tuple(params), int(refine))
         hit = _cache_get(key)
+        disk = 0
+        if hit is None:
+            hit = _disk_cache_get(key)
+            if hit is not None:
+                disk = 1
+                _cache_put(key, hit)
         if hit is not None:
             _IDENTITY_CACHE[ikey] = (tuple(traces), hit)
             while len(_IDENTITY_CACHE) > _IDENTITY_CACHE_MAX:
                 _IDENTITY_CACHE.popitem(last=False)
+            _LAST_STATS = CompileStats(
+                hits=1 - disk, misses=disk, disk_hits=disk, n_devices=B,
+                lowering_ms=(time.perf_counter() - t0) * 1e3)
             return hit
-    devs = [_lower_device(traces[b], specs[b], params[b]) for b in range(B)]
+
+    # --- replica dedup: lower + refine only the unique devices -------
+    if dedup and B > 1:
+        if digests is None:
+            digests = [_trace_digest(t) for t in traces]
+        slot: Dict[tuple, int] = {}
+        urep: List[int] = []            # unique slot -> first device idx
+        rep: List[int] = []             # device idx -> unique slot
+        for b in range(B):
+            k = (digests[b], specs[b], params[b])
+            s = slot.get(k)
+            if s is None:
+                s = slot[k] = len(urep)
+                urep.append(b)
+            rep.append(s)
+    else:
+        urep = list(range(B))
+        rep = list(range(B))
+    udevs = [_lower_device(traces[b], specs[b], params[b]) for b in urep]
     refine_used = 0
     order_stable = True
-    if any(dev.needs_refine for dev in devs) and refine > 0:
-        svc0_flat = np.concatenate([dev.svc0 for dev in devs])
-        offsets = np.cumsum([0] + [dev.n for dev in devs])
+    if any(dev.needs_refine for dev in udevs) and refine > 0:
+        svc0_flat = np.concatenate([dev.svc0 for dev in udevs])
+        offsets = np.cumsum([0] + [dev.n for dev in udevs])
 
         def _rebuild(comp) -> bool:
             """Re-derive pop orders from ``comp``; True if any changed."""
             changed = False
-            for d, dev in enumerate(devs):
+            for d, dev in enumerate(udevs):
                 if not dev.needs_refine:
                     continue
                 new = _reorder_pools(dev, comp[offsets[d]:offsets[d + 1]])
@@ -534,7 +801,8 @@ def compile_fleet_program(traces: Sequence[Trace],
 
         # bootstrap: solve with the reordered families *removed* so the
         # first readiness estimate is not poisoned by a wrong pool order
-        boot = _assemble(devs, _family_lists(devs, include_reordered=False),
+        boot = _assemble(udevs,
+                         _family_lists(udevs, include_reordered=False),
                          exact=False, refine_used=0, order_stable=False)
         comp, _, _ = solve_program(boot, svc0_flat, sweeps=_REFINE_SWEEPS,
                                    warn=False)
@@ -544,8 +812,9 @@ def compile_fleet_program(traces: Sequence[Trace],
             if not changed and it > 0:
                 order_stable = True
                 break
-            prog_it = _assemble(devs,
-                                _family_lists(devs, include_reordered=True),
+            prog_it = _assemble(udevs,
+                                _family_lists(udevs,
+                                              include_reordered=True),
                                 exact=False, refine_used=it + 1,
                                 order_stable=False)
             comp, _, _ = solve_program(prog_it, svc0_flat,
@@ -554,19 +823,24 @@ def compile_fleet_program(traces: Sequence[Trace],
         else:
             # budget exhausted: stable iff the final solve reproduces
             # the frozen order (saves the flag; chains stay as frozen)
-            frozen = [dev.reordered for dev in devs]
+            frozen = [dev.reordered for dev in udevs]
             order_stable = not _rebuild(comp)
-            for dev, fams in zip(devs, frozen):
+            for dev, fams in zip(udevs, frozen):
                 dev.reordered = fams
-    exact = order_stable and not any(dev.multiclass for dev in devs)
+    exact = order_stable and not any(dev.multiclass for dev in udevs)
+    devs = [udevs[s] for s in rep]
     prog = _assemble(devs, _family_lists(devs, include_reordered=True),
                      exact=exact, refine_used=refine_used,
                      order_stable=order_stable)
     if cache and key is not None:
         _cache_put(key, prog)
+        _disk_cache_put(key, prog)
         _IDENTITY_CACHE[ikey] = (tuple(traces), prog)
         while len(_IDENTITY_CACHE) > _IDENTITY_CACHE_MAX:
             _IDENTITY_CACHE.popitem(last=False)
+    _LAST_STATS = CompileStats(
+        misses=1, n_devices=B, n_unique=len(urep),
+        lowering_ms=(time.perf_counter() - t0) * 1e3)
     return prog
 
 
@@ -865,6 +1139,27 @@ def _solve_kernel(program: ChainProgram, svc_flat: np.ndarray, *,
     return (np.asarray(comp, dtype=np.float64), int(used), bool(converged))
 
 
+def _auto_sharded() -> bool:
+    """True when the ``auto`` driver should shard: jax is already
+    loaded with >1 local devices on an accelerator platform.  Never on
+    CPU hosts — the single-chip numpy loop stays the (bit-identical)
+    default there.  ``REPRO_SHARD_EXECUTOR=mesh|host`` forces sharding
+    on; ``=off`` forces it off."""
+    forced = os.environ.get("REPRO_SHARD_EXECUTOR", "").lower()
+    if forced in ("mesh", "host"):
+        return True
+    if forced in ("off", "none", "0"):
+        return False
+    if "jax" not in sys.modules:
+        return False
+    try:
+        import jax
+        devs = jax.local_devices()
+        return len(devs) > 1 and devs[0].platform != "cpu"
+    except Exception:
+        return False
+
+
 def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
                   sweeps: int = 8, scan_backend: str = "auto",
                   fixpoint: str = "auto", warn: bool = True,
@@ -878,11 +1173,16 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
     :func:`repro.core.engine.zone_sequential_completions_batched`),
     ``"xla"`` / ``"pallas"`` run all sweeps x families in one jitted
     ``lax.while_loop`` / Pallas kernel (float32,
-    ``repro.kernels.zns_fixpoint``); ``"auto"`` picks the kernel on TPU
-    and the float64 loop elsewhere.  When the sweep budget is exhausted
-    while constraints are still moving the result is a documented
-    under-approximation -- a :class:`RuntimeWarning` is emitted unless
-    ``warn=False``.
+    ``repro.kernels.zns_fixpoint``); ``"sharded"`` partitions the
+    entry axis across shards (:mod:`repro.core.shard`) — the mesh
+    executor spreads them over local jax devices via ``shard_map``,
+    the host executor groups them into signature buckets with
+    independent convergence; ``"auto"`` picks the kernel on TPU, the
+    sharded driver on multi-chip accelerator hosts for multi-device
+    programs, and the float64 loop elsewhere.  When the sweep budget
+    is exhausted while constraints are still moving the result is a
+    documented under-approximation -- a :class:`RuntimeWarning` is
+    emitted unless ``warn=False``.
 
     ``comp0`` warm-starts the fixpoint from per-event completion lower
     bounds (flat event order).  The iteration is monotone from below,
@@ -899,6 +1199,9 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
                          f"{program.n_flat}-request program")
     if fixpoint == "auto":
         fixpoint = "pallas" if _on_tpu() else "loop"
+        if fixpoint == "loop" and program.n_devices > 1 \
+                and _auto_sharded():
+            fixpoint = "sharded"
     if comp0 is not None and len(comp0) != program.n_flat:
         raise ValueError(f"comp0 has {len(comp0)} entries for a "
                          f"{program.n_flat}-request program")
@@ -906,13 +1209,20 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
         comp, used, converged = _solve_numpy(
             program, np.asarray(svc_flat, dtype=np.float64),
             sweeps=sweeps, scan_backend=scan_backend, comp0=comp0)
+    elif fixpoint == "sharded":
+        from .shard import solve_program_sharded
+        comp, used, converged = solve_program_sharded(
+            program, np.asarray(svc_flat, dtype=np.float64),
+            sweeps=sweeps, scan_backend=scan_backend, comp0=comp0,
+            warn=False)
     elif fixpoint in ("xla", "pallas", "interpret"):
         comp, used, converged = _solve_kernel(
             program, np.asarray(svc_flat, dtype=np.float64),
             sweeps=sweeps, impl=fixpoint, comp0=comp0)
     else:
         raise ValueError(f"unknown fixpoint driver {fixpoint!r}; expected "
-                         f"auto | loop | xla | pallas | interpret")
+                         f"auto | loop | sharded | xla | pallas | "
+                         f"interpret")
     if not converged and warn:
         warnings.warn(
             f"chain-program fixpoint exhausted its sweep budget "

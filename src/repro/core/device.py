@@ -43,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .chain_program import CompileStats, last_compile_stats
 from .conventional import ConventionalSSD, PressureResult, \
     zns_write_pressure_series
 from .engine import (
@@ -90,6 +91,12 @@ class RunResult:
     trace: Trace
     sim: SimResult
     backend: str
+    #: Lowering/compile-cache stats of the chain-program backend
+    #: (:func:`repro.core.last_compile_stats` snapshot; ``None`` for the
+    #: event engine, which has no compile step).  Attribute wall-clock
+    #: to compile vs solve with ``compile_stats.lowering_ms`` and the
+    #: cache ``hits``/``misses``.
+    compile_stats: Optional["CompileStats"] = None
     _stats_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
 
@@ -347,7 +354,9 @@ class ZnsDevice:
                                 threshold=self.auto_threshold)
         sim = _BACKENDS[name](trace, self.spec, self.lat, seed=seed,
                               jitter=jitter, **backend_opts)
-        return RunResult(trace=trace, sim=sim, backend=name)
+        stats = last_compile_stats() if name == "vectorized" else None
+        return RunResult(trace=trace, sim=sim, backend=name,
+                         compile_stats=stats)
 
     # -- closed-form model (Figs. 3/4/8) ------------------------------------
     def steady_state(self, op: OpType, size_bytes: int, *, qd: int = 1,
@@ -465,6 +474,10 @@ class FleetRunResult:
 
     results: tuple
     backend: str
+    #: Compile-cache stats of the fleet's one chain-program lowering
+    #: (``None`` on non-vectorized backends); see
+    #: :attr:`RunResult.compile_stats`.
+    compile_stats: Optional["CompileStats"] = None
 
     def __len__(self) -> int:
         return len(self.results)
@@ -654,10 +667,12 @@ class DeviceFleet:
         # The device-axis-batched engine implements the built-in
         # "vectorized" backend; a third-party replacement of that name is
         # honored by falling back to the per-device loop.
+        stats = None
         if name == "vectorized" and _BACKENDS[name] is _vectorized_backend:
             sims = simulate_fleet_vectorized(
                 traces, self.specs, [d.lat for d in self.devices],
                 seeds=list(seeds), jitter=jitter, **backend_opts)
+            stats = last_compile_stats()
         else:
             sims = [
                 _BACKENDS[name](traces[i], self.devices[i].spec,
@@ -665,9 +680,11 @@ class DeviceFleet:
                                 jitter=jitter, **backend_opts)
                 for i in range(self.n)
             ]
-        results = tuple(RunResult(trace=traces[i], sim=sims[i], backend=name)
+        results = tuple(RunResult(trace=traces[i], sim=sims[i], backend=name,
+                                  compile_stats=stats)
                         for i in range(self.n))
-        return FleetRunResult(results=results, backend=name)
+        return FleetRunResult(results=results, backend=name,
+                              compile_stats=stats)
 
     def sequential_completions(self, issues, svcs, segment_starts, *,
                                backend: str = "auto") -> List[np.ndarray]:

@@ -88,7 +88,13 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
     length-bucketed family blocks — and solved by one fused fixpoint
     (:func:`repro.core.chain_program.solve_program`): one kernel launch
     for N heterogeneous devices instead of ``sweeps × families ×
-    devices`` dispatches.
+    devices`` dispatches.  On hosts with more than one local jax
+    accelerator device, ``fixpoint="auto"`` routes the solve through
+    the entry-sharded driver (:mod:`repro.core.shard`) — per-shard
+    convergence budgets, ``shard_map`` over the local mesh — so fleet
+    callers (``DeviceFleet.run``, the experiment runner, the capacity
+    planner) scale out transparently; pass ``fixpoint="loop"`` to pin
+    the single-chip solve, or ``"sharded"`` to force the sharded one.
 
     ``lats[i]`` may be a :class:`LatencyModel` or bare
     :class:`LatencyParams`.  ``seeds[i]`` defaults to ``i`` so device ``i``

@@ -168,7 +168,7 @@ def _cmd_cluster(args) -> int:
     report = plan_capacity(
         configs, ladder, base_spec=base_spec, workload=workload,
         slo_us=args.slo_ms * 1e3, degraded=not args.no_degraded,
-        sweeps=args.sweeps)
+        sweeps=args.sweeps, max_refine=args.max_refine)
 
     os.makedirs(args.out, exist_ok=True)
     json_path = os.path.join(args.out, "capacity.json")
@@ -200,6 +200,10 @@ def _cmd_cluster(args) -> int:
     print(f"\n{report.n_programs} programs ({report.n_events} events) in "
           f"one fleet-level solve ({report.sweeps_used} sweeps, SLO "
           f"p99 <= {report.slo_us / 1e3:g}ms); results: {json_path}")
+    if report.order_unstable:
+        print("WARNING: pop-order refinement budget exhausted for "
+              f"{', '.join(report.order_unstable)} — their curves are "
+              "approximate (raise --max-refine)", file=sys.stderr)
     if not report.converged:
         print("WARNING: fixpoint did not converge — capacity numbers are "
               "not steady-state", file=sys.stderr)
@@ -253,6 +257,9 @@ def main(argv=None) -> int:
     clu.add_argument("--no-degraded", action="store_true",
                      help="skip the one-server-down rows")
     clu.add_argument("--sweeps", type=int, default=512)
+    clu.add_argument("--max-refine", type=int, default=None,
+                     help="pop-order refinement budget per config "
+                          "(default: compiler MAX_REFINE)")
     clu.add_argument("--seed", type=int, default=0)
     clu.add_argument("--out", default=CLUSTER_OUT_DIR,
                      help=f"artifact directory (default {CLUSTER_OUT_DIR})")

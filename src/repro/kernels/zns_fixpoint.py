@@ -34,6 +34,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
@@ -43,22 +44,45 @@ MOVED_RTOL = 1e-5
 MOVED_ATOL = 1e-3
 
 
+def _pad_value(dtype):
+    """Padding sentinel: the historical finite ``NEG_INF`` for float32,
+    true ``-inf`` for float64 — with ``-inf``, all-padding lanes can
+    never satisfy the progress test (``-inf < -inf`` is false), which
+    matches the numpy driver's ``-np.inf`` semantics exactly."""
+    if dtype == jnp.float64:
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(NEG_INF, dtype)
+
+
+def _moved_tol(dtype):
+    """Early-exit progress tolerances: the float64 path mirrors the
+    numpy driver's rel 1e-12 / abs 1e-9; float32 keeps the looser
+    kernel thresholds."""
+    if dtype == jnp.float64:
+        return 1e-12, 1e-9
+    return MOVED_RTOL, MOVED_ATOL
+
+
 def _rows_maxplus(start, svc, heads):
     """Segmented max-plus scan over the rows of (R, L) matrices.
 
     Same affine-map composition as ``zns_event_scan`` — ``a = svc``
     (``-inf`` at segment heads), ``b = start + svc`` — as a doubling
     ladder of ``log2(L)`` shifted composes, vectorized over rows.
+    dtype-generic: float32 keeps the finite ``NEG_INF`` sentinel,
+    float64 uses true ``-inf``.
     """
     r, n = start.shape
-    a = jnp.where(heads, jnp.float32(NEG_INF), svc)
+    dt = start.dtype
+    ninf = _pad_value(dt)
+    a = jnp.where(heads, ninf, svc)
     b = start + svc
     k = 1
     while k < n:
         a_prev = jnp.concatenate(
-            [jnp.zeros((r, k), jnp.float32), a[:, :-k]], axis=1)
+            [jnp.zeros((r, k), dt), a[:, :-k]], axis=1)
         b_prev = jnp.concatenate(
-            [jnp.full((r, k), jnp.float32(NEG_INF)), b[:, :-k]], axis=1)
+            [jnp.full((r, k), ninf, dt), b[:, :-k]], axis=1)
         # compose earlier (shifted) map, then current: (a_p,b_p) . (a,b)
         a, b = a_prev + a, jnp.maximum(b_prev + a, b)
         k *= 2
@@ -74,6 +98,9 @@ def _fixpoint_core(comp_ext, svc_ext, blocks, sweeps: int):
     """
 
     dead = comp_ext.shape[0] - 1
+    dt = comp_ext.dtype
+    ninf = _pad_value(dt)
+    rtol, atol = _moved_tol(dt)
 
     def body(carry):
         comp, s, _ = carry
@@ -82,13 +109,13 @@ def _fixpoint_core(comp_ext, svc_ext, blocks, sweeps: int):
             svc_m = svc_ext[gidx]
             cur = comp[gidx]
             out = _rows_maxplus(cur - svc_m, svc_m, heads)
-            # padding gathers the finite NEG_INF sentinel, which would
-            # trivially satisfy the relative-progress test — mask it out
+            # padding gathers the sentinel, which would trivially
+            # satisfy the relative-progress test — mask it out
             moved = moved | jnp.any(
-                (out > cur * (1.0 + MOVED_RTOL) + MOVED_ATOL)
+                (out > cur * (1.0 + rtol) + atol)
                 & (gidx < dead))
             comp = comp.at[gidx].max(jnp.maximum(cur, out))
-            comp = comp.at[-1].set(jnp.float32(NEG_INF))
+            comp = comp.at[-1].set(ninf)
         return comp, s + 1, moved
 
     return jax.lax.while_loop(
@@ -154,3 +181,78 @@ def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
         interpret=interpret,
     )(*ins)
     return comp[:-1], used[0], conv[0]
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded form: independent per-shard fixpoints across local chips
+# ---------------------------------------------------------------------------
+def _stack_solve(comp0, svc, *flat_blocks, sweeps: int):
+    """Solve a stack of independent shard fixpoints (leading axis).
+
+    ``comp0``/``svc``: ``(s, n_max + 1)``; ``flat_blocks`` interleaves
+    ``gidx (s, R_f, L_f)`` / ``heads (s, R_f, L_f)`` per family slot.
+    ``lax.map`` runs one ``while_loop`` per shard, so every shard keeps
+    its own trip count (early convergence on one shard never pays for a
+    slower sibling's sweeps).
+    """
+
+    def one(args):
+        c, v, *bl = args
+        blocks = tuple((bl[i], bl[i + 1]) for i in range(0, len(bl), 2))
+        comp, used, moved = _fixpoint_core(c, v, blocks, sweeps)
+        return comp, used, ~moved
+
+    return jax.lax.map(one, (comp0, svc) + tuple(flat_blocks))
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_fn(devices, n_arrays: int, sweeps: int):
+    """Build (and cache) the jitted ``shard_map`` solver for a device
+    tuple.  ``check_rep=False`` is required: the per-shard
+    ``lax.while_loop`` trip count is data-dependent, which the
+    replication checker cannot track."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(devices), ("shard",))
+    fn = shard_map(
+        functools.partial(_stack_solve, sweeps=sweeps),
+        mesh=mesh,
+        in_specs=(P("shard"),) * n_arrays,
+        out_specs=(P("shard"), P("shard"), P("shard")),
+        check_rep=False)
+    # donate the completion buffer: it is overwritten every sweep and
+    # the stacked (s, n_max + 1) float64 arrays are the footprint.
+    # (CPU backends don't implement donation and warn; skip there.)
+    donate = tuple(
+        () if all(d.platform == "cpu" for d in devices) else (0,))
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def zns_fixpoint_sharded(comp0, svc, blocks, *, sweeps: int = 8,
+                         devices=None):
+    """Shard independent fixpoints across every local chip.
+
+    ``comp0``/``svc``: ``(S, n_max + 1)`` stacked extended vectors (one
+    row per shard, dead slot last, rows beyond a shard's real length
+    padded with the dtype sentinel / 0); ``blocks``: tuple of
+    ``(gidx (S, R_f, L_f), heads (S, R_f, L_f))`` stacked family slots
+    with padding indexed at ``n_max``.  ``S`` must be a multiple of
+    ``len(devices)`` (pad with empty shards).  The shard axis is
+    embarrassingly parallel — shards share no chains — so ``shard_map``
+    over a 1-D :class:`jax.sharding.Mesh` places ``S / n_dev`` shards
+    per chip and each runs its own early-exiting ``while_loop``.
+    Returns ``(comp (S, n_max + 1), sweeps_used (S,), converged (S,))``.
+    """
+    if devices is None:
+        devices = tuple(jax.local_devices())
+    else:
+        devices = tuple(devices)
+    if comp0.shape[0] % len(devices):
+        raise ValueError(f"shard count {comp0.shape[0]} not a multiple "
+                         f"of device count {len(devices)}")
+    flat = []
+    for gidx, heads in blocks:
+        flat += [gidx, heads]
+    fn = _sharded_fn(devices, 2 + len(flat), max(int(sweeps), 1))
+    return fn(comp0, svc, *flat)

@@ -334,3 +334,68 @@ def test_cluster_program_xla_fixpoint_matches_loop():
     xla = Cluster(small_spec()).run(SMALL_WL, fixpoint="xla")
     assert xla.converged
     np.testing.assert_allclose(xla.comp, loop.comp, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# refinement budget exhaustion: warn + report, never silently exclude
+# ---------------------------------------------------------------------------
+CONTENDED_WL = ClusterWorkload(n_users=16, ops_per_user=2, get_fraction=0.5,
+                               object_bytes=1 << 20, seed=7)
+
+
+def test_exhausted_refine_budget_warns_and_flags_program():
+    import warnings
+
+    spec = small_spec()
+    with pytest.warns(RuntimeWarning, match=r"max_refine=0"):
+        res = Cluster(spec).run(CONTENDED_WL, max_refine=0)
+    prog = res.compiled.program
+    assert prog.order_stable is False and prog.exact is False
+    assert prog.refine_used == 1
+    # The warning names at least one FIFO pool that is still flapping.
+    with pytest.warns(RuntimeWarning, match=r"unstable FIFO pools: \S"):
+        Cluster(spec).run(CONTENDED_WL, max_refine=0)
+    # Completions are still produced — reported, not dropped.
+    assert len(res.comp) == res.compiled.graph.n
+    assert np.all(np.isfinite(res.comp))
+    # The default budget reaches the pop-order fixpoint on the same
+    # contended (16 users/config) workload — and stays silent.
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*order refinement.*")
+        stable = Cluster(spec).run(CONTENDED_WL)
+    assert stable.compiled.program.order_stable
+    assert stable.converged
+
+
+def test_plan_capacity_reports_order_unstable_configs():
+    configs = [ClusterConfig(erasure(2, 1), "round-robin")]
+    wl = dataclasses.replace(CONTENDED_WL, ops_per_user=1)
+    with pytest.warns(RuntimeWarning, match="order refinement"):
+        report = plan_capacity(configs, [16], workload=wl,
+                               base_spec=small_spec(), slo_us=20e3,
+                               degraded=False, max_refine=0)
+    assert report.order_unstable == ("ec2+1/round-robin",)
+    assert report.to_json()["order_unstable"] == ["ec2+1/round-robin"]
+    # The unstable config's curve is still reported.
+    assert [c.config.name for c in report.curves] == ["ec2+1/round-robin"]
+    # With the default budget the same sweep is stable and the report
+    # carries an empty listing.
+    report = plan_capacity(configs, [16], workload=wl,
+                           base_spec=small_spec(), slo_us=20e3,
+                           degraded=False)
+    assert report.order_unstable == ()
+
+
+def test_cluster_cli_max_refine_flag(tmp_path, capsys):
+    from repro.experiments import __main__ as cli
+
+    with pytest.warns(RuntimeWarning, match="order refinement"):
+        rc = cli.main(["cluster", "--schemes", "ec2+1", "--policies",
+                       "round-robin", "--users", "16", "--objects-per-user",
+                       "1", "--servers", "6", "--no-degraded",
+                       "--max-refine", "0", "--out", str(tmp_path)])
+    assert rc == 0
+    err = capsys.readouterr().err
+    assert "refinement budget exhausted" in err
+    data = json.loads((tmp_path / "capacity.json").read_text())
+    assert data["order_unstable"] == ["ec2+1/round-robin"]

@@ -1,0 +1,309 @@
+"""Sharded mega-fleet solver: entry-axis partition (``repro.core.shard``)
+vs the single-chip numpy driver, the jitted lowering path (replica
+dedup, vectorized block fill, persistent program cache), and the
+compile-stats surfacing on run results.
+
+The acceptance bar is the ISSUE gate: sharded solves must match the
+single-chip solve to 1e-12 *relative* across heterogeneous fleets, both
+block layouts, with and without a ``comp0`` warm start — and a 1-shard
+plan must fall back to the numpy driver bit-identically.  The mesh
+(``shard_map``) executor runs in a subprocess with two forced virtual
+host devices so the test works on any CI box.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompileStats, DeviceFleet, KiB, WorkloadSpec, ZnsDevice, ZNSDeviceSpec,
+    clear_program_cache, clear_shard_plans, compile_fleet_program,
+    extend_program, last_compile_stats, set_program_cache_dir, shard_program,
+    solve_program, solve_program_sharded,
+)
+from repro.core import chain_program as cp
+from strategies import HAVE_HYPOTHESIS
+
+SPEC = ZNSDeviceSpec()
+
+
+def _pool(threads=4, qd=2, n=80):
+    wl = WorkloadSpec()
+    for t in range(threads):
+        wl = wl.appends(n=n, size=8 * KiB, qd=qd, zone=t * 4, nzones=4)
+    return wl
+
+
+def _tier_workloads():
+    """Three heterogeneity tiers x two replicas each."""
+    hard = _pool(threads=4, qd=2, n=60)
+    med = WorkloadSpec().writes(n=200, qd=4, zone=7)
+    easy = WorkloadSpec().reads(n=300, size=4 * KiB, qd=4, nzones=64)
+    return [hard, hard, med, med, easy, easy]
+
+
+def _fleet_program(workloads, *, cache=False, dedup=True):
+    traces = [wl.build() for wl in workloads]
+    devs = [ZnsDevice(SPEC) for _ in traces]
+    return compile_fleet_program(traces, [d.spec for d in devs],
+                                 [d.lat for d in devs], cache=cache,
+                                 dedup=dedup)
+
+
+def _assert_sharded_matches(prog, *, executor="host", comp0=None,
+                            sweeps=64):
+    ref, _, cv_ref = solve_program(prog, prog.svc0_flat, sweeps=sweeps,
+                                   fixpoint="loop", comp0=comp0)
+    got, _, cv = solve_program_sharded(prog, prog.svc0_flat, sweeps=sweeps,
+                                       executor=executor, comp0=comp0)
+    assert cv_ref and cv
+    np.testing.assert_allclose(got, ref, rtol=1e-12, atol=0.0)
+    return ref
+
+
+# -- host executor: heterogeneous fleets, both layouts, warm starts ----------
+def test_sharded_host_matches_single_chip_heterogeneous():
+    prog = _fleet_program(_tier_workloads())
+    ref = _assert_sharded_matches(prog)
+    # warm start from the converged completions: still equal
+    _assert_sharded_matches(prog, comp0=ref)
+    # warm start from a strict lower bound (the issue+svc init itself)
+    _assert_sharded_matches(prog, comp0=prog.issue_flat + prog.svc0_flat)
+
+
+@pytest.mark.parametrize("layout", ["rows", "cols"])
+def test_sharded_matches_on_forced_layout(layout, monkeypatch):
+    if layout == "cols":
+        monkeypatch.setattr(cp, "POSLOOP_MIN_CHAINS", 1)
+        monkeypatch.setattr(cp, "POSLOOP_COST_CUTOVER", 0.0)
+    else:
+        monkeypatch.setattr(cp, "POSLOOP_MIN_CHAINS", 10**9)
+    prog = _fleet_program(_tier_workloads())
+    assert {b.layout for b in prog.families} == {layout}
+    _assert_sharded_matches(prog)
+
+
+def test_one_shard_plan_is_bit_identical():
+    # a replicated fleet is one signature group -> the host plan has a
+    # single shard and falls back to the plain numpy driver
+    wl = _pool(threads=3, qd=2, n=60)
+    prog = _fleet_program([wl, wl, wl])
+    plan = shard_program(prog)
+    assert plan.n_shards == 1
+    ref, u_ref, _ = solve_program(prog, prog.svc0_flat, sweeps=32,
+                                  fixpoint="loop")
+    got, u_got, _ = solve_program_sharded(prog, prog.svc0_flat, sweeps=32,
+                                          executor="host")
+    assert np.array_equal(got, ref)          # bit-identical, not just close
+    assert u_got == u_ref
+
+
+def test_solve_program_routes_sharded_fixpoint():
+    prog = _fleet_program(_tier_workloads())
+    ref, _, _ = solve_program(prog, prog.svc0_flat, sweeps=64,
+                              fixpoint="loop")
+    got, _, cv = solve_program(prog, prog.svc0_flat, sweeps=64,
+                               fixpoint="sharded")
+    assert cv
+    np.testing.assert_allclose(got, ref, rtol=1e-12, atol=0.0)
+
+
+def test_sharded_validates_inputs():
+    prog = _fleet_program([_pool(threads=2, qd=1, n=30)])
+    with pytest.raises(ValueError):
+        solve_program_sharded(prog, np.zeros(3))
+    with pytest.raises(ValueError):
+        solve_program_sharded(prog, prog.svc0_flat,
+                              comp0=np.zeros(3))
+    with pytest.raises(ValueError):
+        solve_program_sharded(prog, prog.svc0_flat, executor="warp-drive")
+
+
+# -- partition safety ---------------------------------------------------------
+def test_shard_plan_balances_and_covers_entries():
+    prog = _fleet_program(_tier_workloads())
+    plan = shard_program(prog, n_shards=2)
+    assert 1 <= plan.n_shards <= 2
+    # the shard perms partition the flat event axis
+    allp = np.sort(np.concatenate([s.perm for s in plan.shards]))
+    assert np.array_equal(allp, np.arange(prog.n_flat))
+    # signature grouping (host plan): replicas land in the same shard
+    host = shard_program(prog)
+    assert host.n_shards == 3                # one shard per tier
+    for sh in host.shards:
+        assert len(sh.devices) == 2
+
+
+def test_cross_entry_chain_fuses_shards():
+    prog = _fleet_program([_pool(threads=2, qd=1, n=30),
+                           WorkloadSpec().reads(n=40, qd=2)])
+    n0 = len(prog.orders[0])
+    coupled = extend_program(
+        prog, [("net_link", [np.asarray([n0 - 1, n0], dtype=np.int64)])])
+    plan = shard_program(coupled, n_shards=2)
+    assert plan.n_shards == 1                # union-find fused the entries
+    assert plan.shards[0].devices == (0, 1)
+    _assert_sharded_matches(coupled)
+
+
+# -- mesh executor via forced virtual host devices (CI-runnable) -------------
+MESH_SCRIPT = textwrap.dedent("""
+    import os
+    import numpy as np
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2")
+    import jax
+    assert len(jax.local_devices()) == 2, jax.local_devices()
+    from repro.core import (KiB, WorkloadSpec, ZnsDevice, ZNSDeviceSpec,
+                            compile_fleet_program, solve_program,
+                            solve_program_sharded)
+    wl_a = WorkloadSpec()
+    for t in range(3):
+        wl_a = wl_a.appends(n=40, size=8 * KiB, qd=2, zone=t * 4, nzones=4)
+    wl_b = WorkloadSpec().writes(n=120, qd=4, zone=7)
+    wl_c = WorkloadSpec().reads(n=150, size=4 * KiB, qd=4, nzones=64)
+    traces = [w.build() for w in (wl_a, wl_b, wl_c)]
+    devs = [ZnsDevice(ZNSDeviceSpec()) for _ in traces]
+    prog = compile_fleet_program(traces, [d.spec for d in devs],
+                                 [d.lat for d in devs], cache=False)
+    ref, _, cv_ref = solve_program(prog, prog.svc0_flat, sweeps=64,
+                                   fixpoint="loop")
+    got, _, cv = solve_program_sharded(prog, prog.svc0_flat, sweeps=64,
+                                       executor="mesh")
+    assert cv_ref and cv
+    rel = np.max(np.abs(got - ref) / np.maximum(np.abs(ref), 1.0))
+    assert rel <= 1e-12, rel
+    # warm start down the same path
+    got2, _, _ = solve_program_sharded(prog, prog.svc0_flat, sweeps=64,
+                                       executor="mesh", comp0=ref)
+    rel2 = np.max(np.abs(got2 - ref) / np.maximum(np.abs(ref), 1.0))
+    assert rel2 <= 1e-12, rel2
+    print("MESH_OK", rel, rel2)
+""")
+
+
+def test_mesh_executor_matches_loop_on_two_virtual_devices():
+    pytest.importorskip("jax")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), os.pardir, "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "MESH_OK" in proc.stdout
+
+
+# -- jitted lowering path: dedup, vectorized fill, persistent cache ----------
+def test_dedup_lowering_equivalent_and_counts_unique():
+    wls = _tier_workloads()
+    traces = [wl.build() for wl in wls]
+    devs = [ZnsDevice(SPEC) for _ in traces]
+    specs = [d.spec for d in devs]
+    lats = [d.lat for d in devs]
+    p_dd = compile_fleet_program(traces, specs, lats, cache=False,
+                                 dedup=True)
+    st = last_compile_stats()
+    assert st.n_devices == 6 and st.n_unique == 3
+    assert st.lowering_ms > 0.0
+    p_ref = compile_fleet_program(traces, specs, lats, cache=False,
+                                  dedup=False)
+    assert last_compile_stats().n_unique == 6
+    c1, _, _ = solve_program(p_dd, p_dd.svc0_flat, sweeps=64)
+    c2, _, _ = solve_program(p_ref, p_ref.svc0_flat, sweeps=64)
+    assert np.array_equal(c1, c2)
+
+
+def test_vectorized_fill_matches_reference_fill(monkeypatch):
+    wls = _tier_workloads()[:4]
+    fast = _fleet_program(wls)
+    monkeypatch.setattr(cp, "_USE_REFERENCE_FILL", True)
+    slow = _fleet_program(wls)
+    assert len(fast.families) == len(slow.families)
+    for a, b in zip(fast.families, slow.families):
+        assert a.label == b.label and a.layout == b.layout
+        np.testing.assert_array_equal(a.gidx, b.gidx)
+        np.testing.assert_array_equal(a.heads, b.heads)
+
+
+def test_disk_program_cache_roundtrip(tmp_path):
+    prev = set_program_cache_dir(str(tmp_path))
+    try:
+        clear_program_cache()
+        traces = [wl.build() for wl in _tier_workloads()[:2]]
+        devs = [ZnsDevice(SPEC) for _ in traces]
+        specs, lats = [d.spec for d in devs], [d.lat for d in devs]
+        p1 = compile_fleet_program(traces, specs, lats)
+        assert last_compile_stats().misses == 1
+        assert any(tmp_path.iterdir())        # program persisted
+        # wipe the in-memory layers: the disk cache must serve the hit
+        clear_program_cache()
+        p2 = compile_fleet_program(traces, specs, lats)
+        st = last_compile_stats()
+        assert st.disk_hits == 1 and st.misses == 1 and st.hits == 0
+        c1, _, _ = solve_program(p1, p1.svc0_flat, sweeps=32)
+        c2, _, _ = solve_program(p2, p2.svc0_flat, sweeps=32)
+        assert np.array_equal(c1, c2)
+        # in-memory LRU now holds it: plain hit, no disk read
+        p3 = compile_fleet_program(traces, specs, lats)
+        assert last_compile_stats().hits == 1
+        assert p3 is p2
+    finally:
+        clear_program_cache()
+        set_program_cache_dir(prev)
+
+
+# -- compile stats on run results ---------------------------------------------
+def test_run_results_expose_compile_stats():
+    clear_program_cache()
+    dev = ZnsDevice(SPEC)
+    wl = _pool(threads=3, qd=2, n=60)
+    res = dev.run(wl, backend="vectorized", jitter=False)
+    assert isinstance(res.compile_stats, CompileStats)
+    assert res.compile_stats.misses == 1
+    res2 = dev.run(wl, backend="vectorized", jitter=False, seed=5)
+    assert res2.compile_stats.hits == 1
+    assert dev.run(wl, backend="event", jitter=False).compile_stats is None
+
+    fleet = DeviceFleet.homogeneous(3, SPEC)
+    fres = fleet.run(wl, policy="replicate", backend="vectorized",
+                     jitter=False)
+    assert isinstance(fres.compile_stats, CompileStats)
+    assert fres.compile_stats.n_devices == 3
+    assert fres.compile_stats.n_unique in (0, 1)   # replicas dedup
+    d = fres.compile_stats.to_json()
+    assert set(d) >= {"hits", "misses", "disk_hits", "lowering_ms",
+                      "n_devices", "n_unique"}
+
+
+# -- hypothesis property: random heterogeneous fleets -------------------------
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+
+    _tier = st.sampled_from(["pool", "write", "read"])
+
+    def _tier_wl(kind, n):
+        if kind == "pool":
+            return _pool(threads=3, qd=2, n=n)
+        if kind == "write":
+            return WorkloadSpec().writes(n=3 * n, qd=4, zone=7)
+        return WorkloadSpec().reads(n=3 * n, size=4 * KiB, qd=4, nzones=64)
+
+    @settings(max_examples=10, deadline=None)
+    @given(tiers=st.lists(st.tuples(_tier, st.integers(20, 60),
+                                    st.integers(1, 2)),
+                          min_size=1, max_size=3),
+           warm=st.booleans())
+    def test_property_sharded_equals_single_chip(tiers, warm):
+        clear_shard_plans()
+        wls = []
+        for kind, n, reps in tiers:
+            wls.extend([_tier_wl(kind, n)] * reps)
+        prog = _fleet_program(wls)
+        comp0 = prog.issue_flat + prog.svc0_flat if warm else None
+        _assert_sharded_matches(prog, comp0=comp0)
