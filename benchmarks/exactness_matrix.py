@@ -1,0 +1,137 @@
+"""Exactness matrix: the fused solver vs the event-engine test oracle.
+
+Every cell solves a 2-device fleet program three ways — ``cols``
+(position-loop) layout, ``rows`` (doubling-scan) layout, and the
+entry-sharded host driver — and compares per-device completions against
+the sequential event engine.  Workload rows cover the shapes the paper's
+pool observations exercise (Obs#5–#7, #12/#13): a saturated single-class
+append pool, a heterogeneous multi-class pool, and a reset/IO mix that
+also queues the metadata engine; each jitter-free and jittered.
+
+The gates assert the compiler's contract, not a tolerance du jour:
+``ChainProgram.exact`` must be True on every cell, jitter-free cells
+must agree to rtol ``TOL_JITTER_FREE`` and jittered cells to rtol
+``TOL_JITTERED`` (both with atol 1e-6 us on microsecond-scale times).
+Any "=FAIL" substring in a derived column fails CI's exactness-smoke
+job — a previously-exact cell regressing to approximate is a build
+breaker, which is what demotes the event engine to a test oracle.
+
+``WORKLOADS`` / ``LAYOUTS`` / the tolerances are the registry
+``docs/architecture.md``'s exactness table is sync-tested against
+(see ``tests/test_docs.py``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+#: rtol for jitter-free cells: the replayed chains are the event
+#: schedule, so disagreement is pure float64 accumulation noise.
+TOL_JITTER_FREE = 1e-9
+#: rtol for jittered cells: same chains, but service times come from a
+#: seeded lognormal draw whose sums the two engines accumulate in
+#: different orders; one decade of headroom over jitter-free.
+TOL_JITTERED = 1e-8
+
+#: Workload rows of the matrix (name -> builder kwargs), each run
+#: jitter-free and jittered.
+WORKLOADS = ("single_class", "multi_class", "reset_mixed")
+#: Solve paths of the matrix: pinned family-block layouts + the
+#: entry-sharded host executor.
+LAYOUTS = ("cols", "rows", "sharded")
+
+_SWEEPS = 256
+
+
+def _build(name: str, scale: int):
+    from repro.core import KiB, OpType, WorkloadSpec
+
+    wl = WorkloadSpec()
+    if name == "single_class":
+        for t in range(6):
+            wl = wl.appends(n=scale, size=8 * KiB, qd=4, zone=t * 4,
+                            nzones=4)
+    elif name == "multi_class":
+        for t in range(6):
+            wl = wl.appends(n=scale, size=8 * KiB, qd=4, zone=t * 4,
+                            nzones=4)
+            wl = wl.appends(n=scale, size=64 * KiB, qd=4, zone=t * 4,
+                            nzones=4)
+    elif name == "reset_mixed":
+        for t in range(4):
+            wl = wl.appends(n=scale, size=8 * KiB, qd=4, zone=t * 4,
+                            nzones=4)
+            wl = wl.appends(n=scale, size=64 * KiB, qd=4, zone=t * 4,
+                            nzones=4)
+        wl = wl.resets(n=max(scale // 2, 8), occupancy=1.0,
+                       nzones=max(scale // 2, 8), io_ctx=OpType.APPEND,
+                       zone=500)
+    else:  # pragma: no cover - registry and builder kept in sync
+        raise KeyError(name)
+    return wl.build()
+
+
+def run(quick: bool = False) -> list:
+    from repro.core import (ZNSDeviceSpec, ZnsDevice, compute_service_times,
+                            force_layout, simulate, solve_program,
+                            solve_program_sharded)
+    from repro.core import chain_program as cp
+
+    scale = 25 if quick else 150
+    spec = ZNSDeviceSpec()
+    lat = ZnsDevice(spec).lat
+    rows = []
+    all_ok = True
+    for wname in WORKLOADS:
+        tr = _build(wname, scale)
+        traces = [tr, tr]                       # 2 entries -> real shards
+        seeds = [3, 4]
+        for jitter in (False, True):
+            prog = cp.compile_fleet_program(
+                traces, [spec] * 2, [lat] * 2, cache=False,
+                jitter=jitter, seeds=seeds)
+            if jitter:
+                svc_flat = np.concatenate([
+                    compute_service_times(tr, lat, seed=s, jitter=True)
+                    [prog.orders[b]] for b, s in enumerate(seeds)])
+            else:
+                svc_flat = prog.svc0_flat
+            ev = [simulate(tr, spec, lat, seed=s, jitter=jitter).complete
+                  for s in seeds]
+            tol = TOL_JITTERED if jitter else TOL_JITTER_FREE
+            jname = "jittered" if jitter else "jitter_free"
+            for layout in LAYOUTS:
+                t0 = time.perf_counter()
+                if layout == "sharded":
+                    comp, used, conv = solve_program_sharded(
+                        prog, svc_flat, sweeps=_SWEEPS, executor="host",
+                        warn=False)
+                else:
+                    comp, used, conv = solve_program(
+                        force_layout(prog, layout), svc_flat,
+                        sweeps=_SWEEPS, fixpoint="loop", warn=False)
+                dt = time.perf_counter() - t0
+                rel = max(
+                    float(np.max(
+                        np.abs(comp[prog.device_slice(b)][prog.invs[b]]
+                               - ev[b])
+                        / np.maximum(np.abs(ev[b]), 1.0)))
+                    for b in range(2))
+                ok = bool(prog.exact) and bool(conv) and rel <= tol
+                all_ok = all_ok and ok
+                rows.append((
+                    f"exactness_matrix/{wname}/{jname}/{layout}",
+                    dt * 1e6,
+                    f"n={len(tr)}x2;max_rel_err={rel:.2e};rtol={tol:.0e};"
+                    f"exact={prog.exact};order_stable={prog.order_stable};"
+                    f"cell={'PASS' if ok else 'FAIL'}"))
+    rows.append(("exactness_matrix/gate_all_cells", 0.0,
+                 f"cells={len(WORKLOADS) * 2 * len(LAYOUTS)};"
+                 f"all_exact={'PASS' if all_ok else 'FAIL'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick=True):
+        print(f"{name},{us:.3f},{derived}")

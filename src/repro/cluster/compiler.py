@@ -20,14 +20,18 @@ Lowering runs in two steps shared with the differential oracle:
    * *ordered* resources (the sequential-log flusher and its device
      append pool: chunks retire in log order) become round-robin
      lag-``cap`` chains in member order — exact for any service times;
-   * *FIFO* resources (CPU pools, NIC lanes, device read pool) become
-     lag-``cap`` chains in event-heap pop order ``(ready, issue,
-     index)``.  ``ready`` depends on completions, so the compiler
-     iterates: solve, recompute ``ready`` from the DAG, re-chain,
-     until the pop order reaches a fixpoint (``refine_used`` solves,
-     ``order_stable``).  Single-class pools (uniform workloads) and
-     capacity-1 lanes then reproduce the greedy event engine exactly;
-     mixed-size workloads mark the program ``exact=False``.
+   * *FIFO* resources (CPU pools, NIC lanes, device read pool) are
+     replayed greedily in event-heap pop order ``(ready, issue,
+     index)``: each pop takes the least-loaded server (min free time),
+     exactly like the oracle's free-time heaps, and the per-server pop
+     sequences become coupling chains.  ``ready`` depends on
+     completions, so the compiler iterates: solve, recompute ``ready``
+     from the DAG, re-replay, until the chains reach a fixpoint
+     (``refine_used`` solves, ``order_stable``).  A stable replay
+     reproduces the greedy event engine exactly for *any* service mix
+     — multi-class pools included — so ``exact`` is simply
+     ``order_stable``; exhaustion warns with the flapping pool labels
+     (``unstable_pools``).
 
 The compiled per-config programs are pure data: the capacity planner
 concatenates dozens of them (:func:`repro.core.concat_programs`) and
@@ -37,6 +41,7 @@ call — on the fused fixpoint kernels when JAX/TPU is available.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -307,8 +312,40 @@ def edge_families(edges: Sequence[Tuple[str, int, int]]
 
 
 def _lag_chains(members: np.ndarray, cap: int) -> List[np.ndarray]:
-    """Round-robin split: lag-``cap`` over the given member order."""
+    """Round-robin split: lag-``cap`` over the given member order.
+    Used for *ordered* resources only, where retiring in member order
+    is the resource's definition (the oracle models them as DAG lag
+    edges, so round-robin is exact by construction)."""
     return [members[j::cap] for j in range(min(cap, len(members)))]
+
+
+def _fifo_replay_chains(res: "Resource", graph: ClusterGraph,
+                        ready: np.ndarray) -> List[np.ndarray]:
+    """Greedy server assignment for one FIFO resource.
+
+    Members are walked in event-heap pop order ``(quantized ready,
+    issue, index)``; each pop takes the least-loaded server — min free
+    time, exactly the oracle's per-resource free-time heap — and
+    pushes ``max(free, ready) + svc`` back.  The per-server pop
+    sequences become coupling chains.  Greedy ``min(free)`` depends
+    only on the free-time *multiset*, so once ``ready`` is consistent
+    with the solved completions the chains reproduce the oracle's
+    begins exactly, for any mix of service classes."""
+    m = np.asarray(res.members, dtype=np.int64)
+    m = m[np.lexsort((m, graph.issue[m], _quantize(ready[m])))]
+    heap = [(0.0, j) for j in range(res.cap)]
+    chains: List[List[int]] = [[] for _ in range(res.cap)]
+    for e, r, s in zip(m.tolist(), ready[m].tolist(),
+                       graph.svc[m].tolist()):
+        free, j = heap[0]
+        heapq.heapreplace(heap, (max(free, r) + s, j))
+        chains[j].append(e)
+    return [np.asarray(c, dtype=np.int64) for c in chains if c]
+
+
+def _chains_equal(a: List[np.ndarray], b: List[np.ndarray]) -> bool:
+    return len(a) == len(b) and all(np.array_equal(x, y)
+                                    for x, y in zip(a, b))
 
 
 def _graph_ready(graph: ClusterGraph, edges: np.ndarray,
@@ -364,8 +401,8 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
                 np.asarray(res.members, dtype=np.int64), res.cap)))
         else:
             fifo_res.append(res)
-    # Exactness: cap-1 lanes are exact under any service mix; wider FIFO
-    # pools must be single-service-class.
+    # Service-class metadata (diagnostics only: the greedy replay is
+    # exact for any mix once the chains freeze).
     multiclass = tuple(sorted(
         res.label for res in fifo_res
         if res.cap > 1 and len(np.unique(graph.svc[res.members])) > 1))
@@ -382,42 +419,36 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
         base, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
         scan_backend=scan_backend, warn=False)
     ready = _graph_ready(graph, dag, comp)
-    prev_orders: Optional[List[np.ndarray]] = None
+    prev_chains: Optional[List[List[np.ndarray]]] = None
     program: ChainProgram = base
     refine_used, order_stable = 0, not fifo_res
     for it in range(max_refine + 1):
-        orders = [np.lexsort((np.asarray(r.members, dtype=np.int64),
-                              graph.issue[r.members],
-                              _quantize(ready[r.members])))
-                  for r in fifo_res]
-        if prev_orders is not None and \
-                all(np.array_equal(a, p)
-                    for a, p in zip(orders, prev_orders)):
+        rchains = [_fifo_replay_chains(r, graph, ready) for r in fifo_res]
+        if prev_chains is not None and \
+                all(_chains_equal(a, p)
+                    for a, p in zip(rchains, prev_chains)):
             order_stable = True
             break
         fams = list(static)
-        for r, o in zip(fifo_res, orders):
-            m = np.asarray(r.members, dtype=np.int64)[o]
-            fams.append((r.label, _lag_chains(m, r.cap)))
+        for r, ch in zip(fifo_res, rchains):
+            fams.append((r.label, ch))
         program = build_program(
             graph.issue, graph.svc, fams,
-            exact=not multiclass, multiclass_pools=multiclass)
+            exact=False, multiclass_pools=multiclass)
         comp, used, converged = solve_program(
             program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
             scan_backend=scan_backend, warn=False)
         refine_used = it + 1
         ready = _graph_ready(graph, dag, comp)
-        prev_orders = orders
+        prev_chains = rchains
+    unstable: List[str] = []
     if not order_stable:
         # Budget exhausted: report which FIFO pools are still flapping
         # instead of silently downgrading the program to ``exact=False``.
-        nxt = [np.lexsort((np.asarray(r.members, dtype=np.int64),
-                           graph.issue[r.members],
-                           _quantize(ready[r.members])))
-               for r in fifo_res]
-        unstable = [r.label for r, o, p in
-                    zip(fifo_res, nxt, prev_orders or nxt)
-                    if not np.array_equal(o, p)] or \
+        nxt = [_fifo_replay_chains(r, graph, ready) for r in fifo_res]
+        unstable = [r.label for r, a, p in
+                    zip(fifo_res, nxt, prev_chains or nxt)
+                    if not _chains_equal(a, p)] or \
             [r.label for r in fifo_res]
         warnings.warn(
             f"cluster order refinement exhausted max_refine={max_refine} "
@@ -427,6 +458,6 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
             f"--max-refine on the CLI)", RuntimeWarning, stacklevel=2)
     program = dataclasses.replace(
         program, refine_used=refine_used, order_stable=order_stable,
-        exact=bool(not multiclass and order_stable))
+        exact=bool(order_stable), unstable_pools=tuple(unstable))
     return CompiledCluster(graph=graph, program=program, comp=comp,
                            sweeps_used=used, converged=bool(converged))

@@ -9,8 +9,10 @@ sequential-log lag edges) as precedence.  Because a completion is never
 earlier than its predecessors' ready times, pop order is nondecreasing
 in ``ready`` and the greedy schedule is the exact M-server FIFO
 solution — the reference the compiled program must match to float
-tolerance on jitter-free single-class configs (see
-``tests/test_cluster.py``).
+tolerance on every config whose replayed chains froze
+(``order_stable``), multi-class service mixes included (see
+``tests/test_cluster.py``).  The oracle is a *test oracle only*: no
+production path falls back to it.
 
 This is the "per-server Python composition loop" the cluster bench
 gates against: O(n log n) Python per config, versus one vectorized

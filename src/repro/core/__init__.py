@@ -20,7 +20,7 @@ from .engine import (  # noqa: F401
 from .chain_program import (  # noqa: F401
     ChainProgram, CompileStats, build_program, clear_program_cache,
     compile_fleet_program, compile_program, concat_programs, extend_program,
-    last_compile_stats, program_cache_dir, program_cache_info,
+    force_layout, last_compile_stats, program_cache_dir, program_cache_info,
     program_chains, set_program_cache_dir, solve_program,
 )
 from .shard import (  # noqa: F401

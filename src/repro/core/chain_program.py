@@ -20,27 +20,31 @@ A :class:`ChainProgram` is the compiled artifact:
   vector, so every Gauss-Seidel step is one vectorized gather ->
   batched max-plus scan -> scatter-max per family (no per-device Python
   loops);
-* **pop-order pool chains**: server-pool families are split into
-  per-service-class subchains (class = identical jitter-free service
-  time) plus a cross-class coupling chain, each ordered by the event
-  engine's *processing* order -- ``ready = max(issue, completion of the
-  request qd earlier on the same thread)``, the key the event heap pops
-  by (zone/pool constraints apply after the pop, so they never affect
-  the order).  The order is found by *refinement*: solve the fixpoint
-  with the pool families removed (optimistic readiness), sort, rebuild,
-  re-solve from below, and freeze once the order stops changing.  A
-  FIFO lag-``capacity`` chain in pop order reproduces the event
-  engine's greedy server assignment exactly when the class's service
-  times are homogeneous -- which closes the event-vs-vectorized gap on
-  saturated same-size multi-thread pools (measured < 1e-12 relative,
-  vs ~1e2 for the issue-ordered chains).  Pools whose saturating
-  traffic mixes service classes, or whose order refinement does not
-  stabilize within the budget, are flagged ``exact=False`` (documented
-  approximation; the cross-class chain still couples them from below).
+* **pop-order pool chains**: server-pool families are ordered by the
+  event engine's *processing* order -- ``ready = max(issue, completion
+  of the request qd earlier on the same thread)``, the key the event
+  heap pops by (zone/pool constraints apply after the pop, so they
+  never affect the order).  The order is found by *refinement*: solve
+  the fixpoint with the pool families removed (optimistic readiness),
+  sort, rebuild, re-solve from below, and freeze once the order stops
+  changing.  Single-service-class pools keep the vectorized FIFO
+  lag-``capacity`` chains (round-robin in pop order IS the greedy
+  assignment when services are homogeneous).  Pools whose saturating
+  traffic mixes service classes -- and every saturated pool of a
+  jitter-aware compile (``jitter=True``: refinement re-sorts against
+  the *sampled* service vector) -- instead replay the event engine's
+  greedy heterogeneous server assignment per pop: one free-time heap
+  per pool reproduces ``argmin(free)`` exactly (server choice depends
+  only on the free-time *multiset*), emitting one exact per-server
+  coupling chain per slot plus pop-ordered per-zone write chains.
+  Both forms reproduce the event engine to float tolerance once the
+  pop order stabilizes; only budget exhaustion
+  (``order_stable=False``, with the offending pools listed in
+  ``unstable_pools``) leaves a documented lower-bound approximation.
 
 Programs are cached in a module-level LRU keyed by ``(trace digest,
-spec, params, refine)`` so experiment sweeps and the host layer's
-``compare_policies()`` stop re-lowering identical traces.
+spec, params, refine, jitter, seeds)`` so experiment sweeps and the
+host layer's ``compare_policies()`` stop re-lowering identical traces.
 
 :func:`solve_program` runs the fused fixpoint: the numpy driver
 iterates family blocks with the batched float64 doubling scan
@@ -54,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
 import os
 import pickle
 import sys
@@ -71,15 +76,13 @@ from .engine import (
 )
 from .fleet import length_buckets
 from .latency import resolve_params
-from .spec import ZNSDeviceSpec
+from .spec import OpType, ZNSDeviceSpec
 
-#: Default number of pop-order refinement solves at compile time.
-DEFAULT_REFINE = 2
-
-#: Sweep budget of the compile-time refinement solves (generous: these
-#: fix the *order*, so they should converge fully; runtime solves keep
-#: their own user-visible budget + warning).
-_REFINE_SWEEPS = 32
+#: Default pop-order refinement budget.  The greedy replay derives each
+#: pool's pop order dynamically, so any budget >= 1 freezes after one
+#: rebuild; ``refine=0`` disables refinement entirely (issue-ordered
+#: base pool chains, a warned, documented lower bound).
+DEFAULT_REFINE = 4
 
 #: Server-pool family kinds whose chains are re-ordered by readiness
 #: when refinement triggers (the event engine pops all of them from one
@@ -169,14 +172,21 @@ class ChainProgram:
 
     Solve with :func:`solve_program` after binding per-request service
     times (event order, concatenated across devices).  ``exact`` is the
-    compiler's exactness claim versus the event engine *for jitter-free
-    service times* (the experiment runner's and host layer's default):
-    every saturated pool is single-service-class and its pop order
-    stabilized during refinement (float-tolerance equality).  Jittered
-    runs perturb service times after the order/classes were frozen, so
-    saturated pools degrade to the usual chain approximation (order
-    1e-2 to 1e-1 relative on heavily saturated traces); inexact programs likewise
-    still converge to a documented chain approximation.
+    compiler's exactness claim versus the event engine for the service
+    vector the program was compiled against: jitter-free services by
+    default, or the seeded jittered draw when compiled with
+    ``jitter=True`` (``svc_seeds`` records which).  The claim holds for
+    single- AND multi-service-class pools — heterogeneous pools replay
+    the event engine's greedy ``argmin(free)`` server assignment into
+    per-server coupling chains — so the event engine is a test oracle,
+    never a fallback.  ``exact`` is ``False`` only when pop-order
+    refinement exhausted its budget before stabilizing
+    (``order_stable=False``; the offending pools are listed in
+    ``unstable_pools``), in which case completions remain a convergent
+    lower bound.  Solving an ``exact`` program against any *other*
+    service vector (e.g. a jittered draw on a jitter-free compile)
+    voids the claim: the frozen pop order no longer matches the event
+    heap's.
     """
 
     n_flat: int
@@ -193,6 +203,14 @@ class ChainProgram:
     multiclass_pools: Tuple[str, ...]   # pool kinds mixing service classes
     refine_used: int                    # refinement solves spent
     order_stable: bool                  # pop orders reached a fixpoint
+    #: ``"dev{i}:{kind}"`` labels of the pools whose pop order was still
+    #: changing when the refinement budget ran out (empty when
+    #: ``order_stable``).
+    unstable_pools: Tuple[str, ...] = ()
+    #: Per-device seeds of the jittered service draw the refinement ran
+    #: against, or ``None`` for a jitter-free compile.  The exactness
+    #: claim is relative to exactly this service vector.
+    svc_seeds: Optional[Tuple[int, ...]] = None
 
     @property
     def n_devices(self) -> int:
@@ -287,7 +305,9 @@ _DISK_CACHE_DIR: Optional[str] = os.environ.get(
 
 #: Bump when the ChainProgram layout or lowering semantics change: the
 #: on-disk key includes it, so stale pickles are never deserialized.
-_DISK_CACHE_VERSION = 1
+#: v2: exact multi-class/jitter-aware pool replay (``unstable_pools`` /
+#: ``svc_seeds`` fields; key gained the jitter/seeds components).
+_DISK_CACHE_VERSION = 3
 
 
 def last_compile_stats() -> CompileStats:
@@ -318,7 +338,7 @@ def program_cache_dir() -> Optional[str]:
 def _disk_cache_path(key) -> Optional[str]:
     if _DISK_CACHE_DIR is None:
         return None
-    digests, specs, params, refine = key
+    digests, specs, params, refine, skey = key
     h = hashlib.sha1()
     h.update(repr(_DISK_CACHE_VERSION).encode())
     for d in digests:
@@ -326,6 +346,7 @@ def _disk_cache_path(key) -> Optional[str]:
     h.update(repr(specs).encode())
     h.update(repr(params).encode())
     h.update(repr(int(refine)).encode())
+    h.update(repr(skey).encode())
     return os.path.join(_DISK_CACHE_DIR, f"program-{h.hexdigest()}.pkl")
 
 
@@ -410,10 +431,26 @@ class _DeviceLowering:
     reordered: Optional[list] = None    # [(label, perm, heads)] current
     needs_refine: bool = False
     multiclass: Tuple[str, ...] = ()
+    #: Refinement service vector (event order): ``svc0`` by default, the
+    #: seeded jittered draw under a jitter-aware compile.  Pop orders,
+    #: class splits, and the greedy replay all use this vector.
+    svcr: Optional[np.ndarray] = None
+    thread: Optional[np.ndarray] = None   # event-order thread ids
+    zone: Optional[np.ndarray] = None     # event-order zone ids
+    wr: Optional[np.ndarray] = None       # event-order zoned-write mask
+    #: True when any reordered pool mixes service classes under ``svcr``
+    #: with more than one server — the exact greedy replay path.
+    replay: bool = False
+    #: Base family labels the replay re-emits in pop order (the base
+    #: issue-ordered versions are dropped from the refined assembly).
+    replaced: Tuple[str, ...] = ()
+    #: Lag-qd same-thread predecessor per event (-1 at chain heads);
+    #: the closed-loop gate the replay applies dynamically.
+    pred: Optional[np.ndarray] = None
 
 
-def _lower_device(trace: Trace, spec: ZNSDeviceSpec, params
-                  ) -> _DeviceLowering:
+def _lower_device(trace: Trace, spec: ZNSDeviceSpec, params, *,
+                  jitter: bool = False, seed: int = 0) -> _DeviceLowering:
     n = len(trace)
     if n == 0:
         e = np.zeros(0, dtype=np.int64)
@@ -432,6 +469,11 @@ def _lower_device(trace: Trace, spec: ZNSDeviceSpec, params
     dev = _DeviceLowering(n=n, order=order, inv=inv,
                           issue=trace.issue[order], svc0=svc0, base=base,
                           caps={}, members={})
+    dev.thread = trace.thread[order].astype(np.int64)
+    dev.zone = trace.zone[order].astype(np.int64)
+    dev.wr = (trace.op[order] == OpType.WRITE) & (dev.zone >= 0)
+    dev.svcr = compute_service_times(
+        trace, params, seed=seed, jitter=True)[order] if jitter else svc0
     for kind, perm, heads in base:
         if kind == "thread":
             dev.tperm, dev.theads = perm, heads
@@ -440,62 +482,123 @@ def _lower_device(trace: Trace, spec: ZNSDeviceSpec, params
             dev.caps[kind] = _pool_capacity(kind, spec)
     dev.needs_refine = any(kind in dev.members
                            for kind in REFINE_TRIGGER_KINDS)
+    if dev.needs_refine:
+        dev.multiclass = tuple(
+            kind for kind in REORDERED_KINDS if kind in dev.members
+            and dev.caps[kind] > 1
+            and len(np.unique(dev.svc0[dev.members[kind]])) > 1)
+        # every refined pool goes through the exact greedy replay: even
+        # homogeneous pools need it, because the alternative (round-robin
+        # chains re-sorted against the previous solve) can limit-cycle
+        # and silently diverge from the event engine's greedy assignment
+        dev.replay = True
+        if bool(dev.wr.any()):
+            dev.replaced = ("zone_write",)
+        dev.pred = np.full(n, -1, dtype=np.int64)
+        tail = ~dev.theads[1:]
+        dev.pred[dev.tperm[1:][tail]] = dev.tperm[:-1][tail]
     return dev
 
 
-def _thread_ready(dev: _DeviceLowering, comp: np.ndarray) -> np.ndarray:
-    """Event-heap pop keys: max(issue, lag-qd same-thread completion)."""
-    ready = dev.issue.copy()
-    tp, th = dev.tperm, dev.theads
-    tail = ~th[1:]
-    idx = tp[1:][tail]
-    ready[idx] = np.maximum(ready[idx], comp[tp[:-1]][tail])
-    return ready
-
-
-def _fifo_chain(members: np.ndarray, key: np.ndarray, issue: np.ndarray,
-                cap: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Lag-``cap`` FIFO chains over ``members`` sorted by pop order
-    ``(key, issue, index)`` -- the event heap's tie-breaking."""
-    k = np.lexsort((members, issue[members], key[members]))
-    m = members[k]
-    cid = np.arange(len(m)) % cap
-    o = np.argsort(cid, kind="stable")
-    perm = m[o]
-    heads = np.r_[True, cid[o][1:] != cid[o][:-1]] if len(m) else \
-        np.zeros(0, dtype=bool)
+def _chain_family(chain_lists) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate chains into one ``(perm, heads)`` family."""
+    chs = [c for c in chain_lists if c]
+    perm = np.asarray([e for c in chs for e in c], dtype=np.int64)
+    heads = np.zeros(len(perm), dtype=bool)
+    pos = 0
+    for c in chs:
+        heads[pos] = True
+        pos += len(c)
     return perm, heads
 
 
-def _reorder_pools(dev: _DeviceLowering, comp: np.ndarray) -> list:
-    """Rebuild every reordered family from current readiness estimates:
-    per-service-class subchains + a cross-class coupling chain."""
-    ready = _thread_ready(dev, comp)
-    out = []
-    multi = []
-    for kind in REORDERED_KINDS:
-        if kind not in dev.members:
-            continue
-        members = dev.members[kind]
-        cap = dev.caps[kind]
-        classes = np.unique(dev.svc0[members])
-        if len(classes) > 1 and cap > 1:
-            multi.append(kind)
-            # cross-class coupling: FIFO over the whole pool in pop
-            # order (approximate: greedy heterogeneous assignment is
-            # not order-preserving), plus one exact-within-class
-            # subchain per service class.
-            out.append((kind, *_fifo_chain(members, ready, dev.issue, cap)))
-            for j, c in enumerate(classes):
-                sub = members[dev.svc0[members] == c]
-                out.append((f"{kind}/cls{j}",
-                            *_fifo_chain(sub, ready, dev.issue, cap)))
-        else:
-            # single service class — or a single server, where FIFO in
-            # pop order is exact regardless of service heterogeneity
-            out.append((kind, *_fifo_chain(members, ready, dev.issue, cap)))
-    dev.multiclass = tuple(multi)
+def _replay_pools(dev: _DeviceLowering) -> list:
+    """Exact greedy pool replay for every refined pool.
+
+    Walks the event-heap pop order once, keeping one ``(free, slot)``
+    heap per server pool, exactly as the event engine keeps free-time
+    arrays: each pop starts at ``max(closed-loop thread gate, zone
+    gate, min(free) of every touched pool)`` — appends touch the flash
+    *and* append pools jointly — and pushes its end back.  Greedy
+    ``argmin(free)`` depends only on the free-time *multiset*, so the
+    replay reproduces the event engine's begins exactly, event by
+    event; the per-slot event sequences become one coupling chain per
+    server.  Per-zone write chains are re-emitted in pop order too
+    (``dev.replaced`` drops the issue-ordered base family), since the
+    zone gate binds in pop order.
+
+    The pop order is derived *dynamically* along the walk, exactly as
+    the event heap builds it: each thread keeps one in-flight request
+    (the next is pushed with ``ready = max(issue, end of the lag-qd
+    predecessor — already popped)`` only after its predecessor pops),
+    and the walk always pops the smallest ``(ready, issue, index)``
+    key.  The rebuild is therefore deterministic — independent of any
+    solve-side readiness estimate — so refinement freezes after one
+    round trip instead of iterating order -> solve -> order to a
+    fixed point, which can limit-cycle even for homogeneous pools
+    (and wander for tens of round trips on heterogeneous ones).
+    """
+    kinds = [k for k in REORDERED_KINDS if k in dev.members]
+    in_kind = {}
+    for k in kinds:
+        m = np.zeros(dev.n, dtype=bool)
+        m[dev.members[k]] = True
+        in_kind[k] = m
+    heaps = {k: [(0.0, j) for j in range(dev.caps[k])] for k in kinds}
+    chains: Dict[str, list] = {k: [[] for _ in range(dev.caps[k])]
+                               for k in kinds}
+    zchains: Dict[int, list] = {}
+    zready: Dict[int, float] = {}
+    end = [0.0] * dev.n
+    issue_l = dev.issue.tolist()
+    svc_l = dev.svcr.tolist()
+    wr_l = dev.wr.tolist()
+    zone_l = dev.zone.tolist()
+    pred_l = dev.pred.tolist()
+    kind_l = {k: in_kind[k].tolist() for k in kinds}
+    # per-thread event queues in event order (the push discipline)
+    by_t = np.argsort(dev.thread, kind="stable")
+    tsort = dev.thread[by_t]
+    starts = np.flatnonzero(np.r_[True, tsort[1:] != tsort[:-1]])
+    queues = [q.tolist() for q in np.split(by_t, starts[1:])]
+    ptr = [0] * len(queues)
+    heap: list = []
+    for t, q in enumerate(queues):
+        e = q[0]
+        heapq.heappush(heap, (issue_l[e], issue_l[e], e, t))
+    while heap:
+        r, _, e, t = heapq.heappop(heap)
+        begin = r
+        if wr_l[e]:
+            begin = max(begin, zready.get(zone_l[e], 0.0))
+        touched = [k for k in kinds if kind_l[k][e]]
+        for k in touched:
+            begin = max(begin, heaps[k][0][0])
+        end[e] = begin + svc_l[e]
+        for k in touched:
+            _, j = heaps[k][0]
+            heapq.heapreplace(heaps[k], (end[e], j))
+            chains[k][j].append(e)
+        if wr_l[e]:
+            zready[zone_l[e]] = end[e]
+            zchains.setdefault(zone_l[e], []).append(e)
+        ptr[t] += 1
+        if ptr[t] < len(queues[t]):
+            x = queues[t][ptr[t]]
+            p = pred_l[x]
+            rx = issue_l[x] if p < 0 else max(issue_l[x], end[p])
+            heapq.heappush(heap, (rx, issue_l[x], x, t))
+    out = [(k, *_chain_family(chains[k])) for k in kinds]
+    if dev.replaced:
+        out.append(("zone_write",
+                    *_chain_family([zchains[z] for z in sorted(zchains)])))
     return out
+
+
+def _reorder_pools(dev: _DeviceLowering) -> list:
+    """Rebuild every reordered family by exact greedy replay
+    (:func:`_replay_pools`)."""
+    return _replay_pools(dev)
 
 
 def _family_lists(devs: Sequence[_DeviceLowering], *, include_reordered: bool
@@ -509,6 +612,9 @@ def _family_lists(devs: Sequence[_DeviceLowering], *, include_reordered: bool
         for kind, perm, heads in dev.base:
             if dev.needs_refine and kind in REORDERED_KINDS:
                 continue        # replaced by the reordered versions
+            if include_reordered and dev.needs_refine and dev.reordered \
+                    and kind in dev.replaced:
+                continue        # re-emitted in pop order by the replay
             fams.append((kind, perm, heads))
         if include_reordered and dev.needs_refine and dev.reordered:
             fams.extend(dev.reordered)
@@ -640,8 +746,9 @@ def _blocks_from_chains(chains: "OrderedDict[str, list]", n_flat: int
 
 
 def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
-              exact: bool, refine_used: int, order_stable: bool
-              ) -> ChainProgram:
+              exact: bool, refine_used: int, order_stable: bool,
+              unstable_pools: Tuple[str, ...] = (),
+              svc_seeds: Optional[Tuple[int, ...]] = None) -> ChainProgram:
     offsets, off = [], 0
     for dev in devs:
         offsets.append(off)
@@ -697,7 +804,8 @@ def _assemble(devs: Sequence[_DeviceLowering], fam_lists: Sequence[list], *,
         issue_flat=issue_flat, svc0_flat=svc0_flat,
         families=tuple(blocks), exact=exact,
         multiclass_pools=multiclass, refine_used=refine_used,
-        order_stable=order_stable)
+        order_stable=order_stable, unstable_pools=tuple(unstable_pools),
+        svc_seeds=svc_seeds)
 
 
 def compile_fleet_program(traces: Sequence[Trace],
@@ -705,22 +813,34 @@ def compile_fleet_program(traces: Sequence[Trace],
                           lats: Sequence, *,
                           refine: int = DEFAULT_REFINE,
                           cache: bool = True,
-                          dedup: bool = True) -> ChainProgram:
+                          dedup: bool = True,
+                          jitter: bool = False,
+                          seeds: Optional[Sequence[int]] = None
+                          ) -> ChainProgram:
     """Lower N devices' traces into one fused :class:`ChainProgram`.
 
     ``lats[i]`` may be a :class:`repro.core.LatencyModel` or a bare
     :class:`repro.core.LatencyParams` pytree.  Compilation is
-    deterministic in ``(traces, specs, params, refine)`` -- service
-    classes and pop-order refinement use jitter-free service times --
+    deterministic in ``(traces, specs, params, refine, jitter, seeds)``
     and cached in a module-level LRU on exactly that key (plus a
     persistent on-disk cache when :func:`set_program_cache_dir` or
     ``REPRO_PROGRAM_CACHE_DIR`` points somewhere).
 
+    Pop-order refinement sorts and replays against jitter-free service
+    times by default.  With ``jitter=True`` it uses the *sampled*
+    service vector of ``compute_service_times(trace, params,
+    seed=seeds[i], jitter=True)`` instead — the pop order, class
+    splits, and greedy pool replay then match the jittered run the
+    caller is about to solve, which is what makes jittered saturated
+    pools exact (``svc_seeds`` records the binding; ``seeds`` defaults
+    to ``0`` per device, matching ``simulate``'s default).
+
     With ``dedup`` (default), devices with identical (trace content,
-    spec, params) lower and refine once and share the result: the
-    fleet solve is block-diagonal per device, so replicas follow
-    identical refinement trajectories.  Mega-fleets replicating one
-    workload over thousands of devices lower in O(unique) time.
+    spec, params) — and, under ``jitter``, the same seed — lower and
+    refine once and share the result: the fleet solve is block-diagonal
+    per device, so replicas follow identical refinement trajectories.
+    Mega-fleets replicating one workload over thousands of devices
+    lower in O(unique) time.
     """
     global _LAST_STATS
     t0 = time.perf_counter()
@@ -729,11 +849,20 @@ def compile_fleet_program(traces: Sequence[Trace],
         raise ValueError(f"fleet shape mismatch: {B} traces, {len(specs)} "
                          f"specs, {len(lats)} latency models")
     params = [resolve_params(l) for l in lats]
+    jitter = bool(jitter)
+    if seeds is None:
+        seeds = [0] * B
+    else:
+        seeds = [int(s) for s in seeds]
+        if len(seeds) != B:
+            raise ValueError(f"fleet shape mismatch: {B} traces, "
+                             f"{len(seeds)} seeds")
+    skey = tuple(seeds) if jitter else None
     key = None
     digests: Optional[list] = None
     if cache:
         ikey = (tuple(id(t) for t in traces), tuple(specs), tuple(params),
-                int(refine))
+                int(refine), skey)
         ihit = _IDENTITY_CACHE.get(ikey)
         if ihit is not None and all(a is b for a, b in
                                     zip(ihit[0], traces)):
@@ -744,7 +873,8 @@ def compile_fleet_program(traces: Sequence[Trace],
         # replicated workloads pass the same trace object many times;
         # digest each object once (and memoize on the trace itself)
         digests = [_trace_digest(t) for t in traces]
-        key = (tuple(digests), tuple(specs), tuple(params), int(refine))
+        key = (tuple(digests), tuple(specs), tuple(params), int(refine),
+               skey)
         hit = _cache_get(key)
         disk = 0
         if hit is None:
@@ -769,7 +899,8 @@ def compile_fleet_program(traces: Sequence[Trace],
         urep: List[int] = []            # unique slot -> first device idx
         rep: List[int] = []             # device idx -> unique slot
         for b in range(B):
-            k = (digests[b], specs[b], params[b])
+            k = (digests[b], specs[b], params[b],
+                 seeds[b] if jitter else 0)
             s = slot.get(k)
             if s is None:
                 s = slot[k] = len(urep)
@@ -778,60 +909,74 @@ def compile_fleet_program(traces: Sequence[Trace],
     else:
         urep = list(range(B))
         rep = list(range(B))
-    udevs = [_lower_device(traces[b], specs[b], params[b]) for b in urep]
+    udevs = [_lower_device(traces[b], specs[b], params[b],
+                           jitter=jitter, seed=seeds[b]) for b in urep]
     refine_used = 0
     order_stable = True
-    if any(dev.needs_refine for dev in udevs) and refine > 0:
-        svc0_flat = np.concatenate([dev.svc0 for dev in udevs])
-        offsets = np.cumsum([0] + [dev.n for dev in udevs])
+    unstable: List[str] = []
+    if refine <= 0:
+        # no refinement budget: keep the issue-ordered base pool chains.
+        # This is the budget-exhaustion path — warn with the affected
+        # pool labels and record them on the program so RunResult /
+        # FleetRunResult diagnostics can surface which pools degraded.
+        unstable = sorted({f"dev{urep[d]}:{kind}"
+                           for d, dev in enumerate(udevs)
+                           if dev.needs_refine for kind in dev.members})
+        for dev in udevs:
+            dev.needs_refine = False
+        if unstable:
+            order_stable = False
+            warnings.warn(
+                f"pop-order refinement disabled (refine={int(refine)}) "
+                f"with server pools present; pool chains keep their "
+                f"issue-ordered bootstrap approximation; affected "
+                f"pools: {', '.join(unstable)}. Completions stay a "
+                f"convergent lower bound (exact=False); raise refine= "
+                f"to tighten.", RuntimeWarning, stacklevel=2)
+    elif any(dev.needs_refine for dev in udevs):
 
-        def _rebuild(comp) -> bool:
-            """Re-derive pop orders from ``comp``; True if any changed."""
-            changed = False
+        def _rebuild() -> List[str]:
+            """Re-derive every refined pool's chains by greedy replay;
+            returns the ``dev{i}:{label}`` names of families that
+            changed since the previous rebuild."""
+            changed: List[str] = []
             for d, dev in enumerate(udevs):
                 if not dev.needs_refine:
                     continue
-                new = _reorder_pools(dev, comp[offsets[d]:offsets[d + 1]])
-                if dev.reordered is None or len(new) != len(dev.reordered) \
-                        or any(not np.array_equal(a[1], b[1])
-                               for a, b in zip(new, dev.reordered)):
-                    changed = True
+                new = _reorder_pools(dev)
+                old = dev.reordered
+                if old is None or len(new) != len(old):
+                    changed.extend(f"dev{urep[d]}:{lab}"
+                                   for lab, _, _ in new)
+                else:
+                    changed.extend(
+                        f"dev{urep[d]}:{a[0]}" for a, b in zip(new, old)
+                        if not np.array_equal(a[1], b[1]))
                 dev.reordered = new
             return changed
 
-        # bootstrap: solve with the reordered families *removed* so the
-        # first readiness estimate is not poisoned by a wrong pool order
-        boot = _assemble(udevs,
-                         _family_lists(udevs, include_reordered=False),
-                         exact=False, refine_used=0, order_stable=False)
-        comp, _, _ = solve_program(boot, svc0_flat, sweeps=_REFINE_SWEEPS,
-                                   warn=False)
-        order_stable = False
-        for it in range(max(int(refine), 1)):
-            changed = _rebuild(comp)
-            if not changed and it > 0:
-                order_stable = True
-                break
-            prog_it = _assemble(udevs,
-                                _family_lists(udevs,
-                                              include_reordered=True),
-                                exact=False, refine_used=it + 1,
-                                order_stable=False)
-            comp, _, _ = solve_program(prog_it, svc0_flat,
-                                       sweeps=_REFINE_SWEEPS, warn=False)
-            refine_used = it + 1
-        else:
-            # budget exhausted: stable iff the final solve reproduces
-            # the frozen order (saves the flag; chains stay as frozen)
-            frozen = [dev.reordered for dev in udevs]
-            order_stable = not _rebuild(comp)
-            for dev, fams in zip(udevs, frozen):
-                dev.reordered = fams
-    exact = order_stable and not any(dev.multiclass for dev in udevs)
+        # the greedy replay derives each pop order dynamically under the
+        # refinement service vector, so a single rebuild freezes; the
+        # second rebuild is the stability certificate (it must reproduce
+        # the frozen chains — the replay is deterministic)
+        _rebuild()
+        refine_used = 1
+        unstable = sorted(set(_rebuild()))
+        order_stable = not unstable
+        if not order_stable:
+            warnings.warn(
+                f"pop-order refinement did not freeze "
+                f"(refine={int(refine)}): the greedy replay failed to "
+                f"reproduce its own chains; unstable pools: "
+                f"{', '.join(unstable)}. Completions stay a convergent "
+                f"lower bound (exact=False).",
+                RuntimeWarning, stacklevel=2)
+    exact = order_stable
     devs = [udevs[s] for s in rep]
     prog = _assemble(devs, _family_lists(devs, include_reordered=True),
                      exact=exact, refine_used=refine_used,
-                     order_stable=order_stable)
+                     order_stable=order_stable,
+                     unstable_pools=tuple(unstable), svc_seeds=skey)
     if cache and key is not None:
         _cache_put(key, prog)
         _disk_cache_put(key, prog)
@@ -846,12 +991,16 @@ def compile_fleet_program(traces: Sequence[Trace],
 
 def compile_program(trace: Trace, spec: ZNSDeviceSpec, lat, *,
                     refine: int = DEFAULT_REFINE,
-                    cache: bool = True) -> ChainProgram:
+                    cache: bool = True, jitter: bool = False,
+                    seed: int = 0) -> ChainProgram:
     """Single-device convenience wrapper of :func:`compile_fleet_program`.
 
+    ``jitter=True`` refines against the jittered service draw of
+    ``seed`` (see :func:`compile_fleet_program`), making the matching
+    jittered solve exact.
+
     Example (a saturated two-thread append pool — exact on the fast
-    backend because the pool is single-service-class and its pop order
-    stabilizes)::
+    backend because its pop order stabilizes during refinement)::
 
         >>> from repro.core import (KiB, WorkloadSpec, ZnsDevice,
         ...                         compile_program, solve_program)
@@ -868,7 +1017,7 @@ def compile_program(trace: Trace, spec: ZNSDeviceSpec, lat, *,
         True
     """
     return compile_fleet_program([trace], [spec], [lat], refine=refine,
-                                 cache=cache)
+                                 cache=cache, jitter=jitter, seeds=[seed])
 
 
 # ---------------------------------------------------------------------------
@@ -893,7 +1042,8 @@ def build_program(issue, svc0, families: Sequence[Tuple[str, Sequence]], *,
                   exact: bool = True,
                   multiclass_pools: Sequence[str] = (),
                   refine_used: int = 0,
-                  order_stable: bool = True) -> ChainProgram:
+                  order_stable: bool = True,
+                  unstable_pools: Sequence[str] = ()) -> ChainProgram:
     """Build a :class:`ChainProgram` from explicit chain families.
 
     The device compiler (:func:`compile_fleet_program`) derives its
@@ -930,7 +1080,8 @@ def build_program(issue, svc0, families: Sequence[Tuple[str, Sequence]], *,
         issue_flat=issue, svc0_flat=svc0,
         families=_blocks_from_chains(chains, n),
         exact=bool(exact), multiclass_pools=tuple(multiclass_pools),
-        refine_used=int(refine_used), order_stable=bool(order_stable))
+        refine_used=int(refine_used), order_stable=bool(order_stable),
+        unstable_pools=tuple(unstable_pools))
 
 
 def program_chains(program: ChainProgram) -> "OrderedDict[str, list]":
@@ -987,7 +1138,13 @@ def concat_programs(programs: Sequence[ChainProgram]) -> ChainProgram:
         multiclass_pools=tuple(sorted({k for p in programs
                                        for k in p.multiclass_pools})),
         refine_used=max(p.refine_used for p in programs),
-        order_stable=all(p.order_stable for p in programs))
+        order_stable=all(p.order_stable for p in programs),
+        unstable_pools=tuple(sorted({k for p in programs
+                                     for k in p.unstable_pools})),
+        svc_seeds=None if all(p.svc_seeds is None for p in programs)
+        else tuple(s for p in programs
+                   for s in (p.svc_seeds if p.svc_seeds is not None
+                             else (None,) * p.n_devices)))
 
 
 def extend_program(program: ChainProgram,
@@ -1022,6 +1179,32 @@ def extend_program(program: ChainProgram,
         exact=program.exact if exact is None else bool(exact),
         multiclass_pools=program.multiclass_pools
         if multiclass_pools is None else tuple(multiclass_pools))
+
+
+def force_layout(program: ChainProgram, layout: str) -> ChainProgram:
+    """Return the program with every family block stored in ``layout``.
+
+    ``"cols"`` (position loop) and ``"rows"`` (doubling scan) solve the
+    same chains with different arithmetic schedules; the compiler picks
+    per bucket by a cost model.  The exactness matrix and the layout
+    equivalence tests pin one layout for a whole solve.  The index
+    tensors are transposed copies — chain contents are unchanged.
+    """
+    if layout not in ("rows", "cols"):
+        raise ValueError(f"unknown layout {layout!r}; expected rows | cols")
+    blocks = []
+    for blk in program.families:
+        if blk.layout == layout:
+            blocks.append(blk)
+        elif layout == "rows":
+            g, h = blk.rows_view()
+            blocks.append(FamilyBlock(label=blk.label, gidx=g, heads=h,
+                                      layout="rows"))
+        else:
+            blocks.append(FamilyBlock(
+                label=blk.label, gidx=np.ascontiguousarray(blk.gidx.T),
+                heads=np.ascontiguousarray(blk.heads.T), layout="cols"))
+    return dataclasses.replace(program, families=tuple(blocks))
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -154,6 +154,29 @@ class RunResult:
         RuntimeWarning was emitted at solve time; re-run with a larger
         ``sweeps=``)."""
         return self.sim.converged
+
+    @property
+    def exact(self) -> Optional[bool]:
+        """Whether this run carries the compiler's exactness claim:
+        the program's pool chains replay the event engine's greedy
+        schedule for the solved service vector (jitter seed included).
+        ``True`` for the event engine itself; ``False`` when refinement
+        was disabled (``refine=0``) or the claim was voided by solving
+        a service vector the program was not compiled for."""
+        return self.sim.exact
+
+    @property
+    def order_stable(self) -> Optional[bool]:
+        """Whether every pool's pop order froze during compile-time
+        refinement (see :attr:`exact`; ``False`` names the culprits in
+        :attr:`unstable_pools`)."""
+        return self.sim.order_stable
+
+    @property
+    def unstable_pools(self) -> Tuple[str, ...]:
+        """``dev{i}:{pool}`` labels whose chains kept the issue-ordered
+        bootstrap approximation (empty when :attr:`order_stable`)."""
+        return tuple(self.sim.unstable_pools)
 
     def summary(self, metrics: Optional[Sequence[str]] = None
                 ) -> Dict[str, float]:
@@ -507,6 +530,25 @@ class FleetRunResult:
         """True unless any device's fixpoint exhausted its sweep budget
         (see :attr:`RunResult.converged`)."""
         return all(r.converged for r in self.results)
+
+    @property
+    def exact(self) -> bool:
+        """True when every device carries the compiler's exactness
+        claim (see :attr:`RunResult.exact`)."""
+        return all(bool(r.exact) for r in self.results)
+
+    @property
+    def order_stable(self) -> bool:
+        """True when every device's pool pop orders froze during
+        refinement (see :attr:`RunResult.order_stable`)."""
+        return all(bool(r.order_stable) for r in self.results)
+
+    @property
+    def unstable_pools(self) -> Tuple[str, ...]:
+        """Sorted union of every device's ``dev{i}:{pool}`` labels that
+        kept the bootstrap approximation (empty when exact)."""
+        return tuple(sorted({p for r in self.results
+                             for p in r.unstable_pools}))
 
     def latency_stats(self, op: Optional[OpType] = None, *,
                       from_issue: bool = False) -> LatencyStats:

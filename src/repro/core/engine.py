@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import sys
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -214,6 +214,17 @@ class SimResult:
     #: moving — completions are then a documented lower bound (a
     #: RuntimeWarning is emitted at solve time).
     converged: bool = True
+    #: Exactness claim of the backend that produced this result versus
+    #: the event engine: ``True`` for the event engine itself, the
+    #: compiled program's claim for the vectorized backends (``None``
+    #: when the backend predates the flag).
+    exact: Optional[bool] = None
+    #: Whether pop-order refinement reached a fixpoint at compile time
+    #: (``None`` when not applicable to the backend).
+    order_stable: Optional[bool] = None
+    #: ``"dev{i}:{kind}"`` labels of pools whose pop order was still
+    #: changing when the compile-time refinement budget ran out.
+    unstable_pools: Tuple[str, ...] = ()
 
     @property
     def in_device_latency(self) -> np.ndarray:
@@ -372,7 +383,8 @@ def simulate(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
         hist[t].append(end)
         _push_next(t)
 
-    return SimResult(start=start, complete=complete, service=svc)
+    return SimResult(start=start, complete=complete, service=svc,
+                     exact=True, order_stable=True)
 
 
 def _maxplus_scan_numpy(issue, svc, seg):
@@ -643,30 +655,37 @@ def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
     scan elsewhere.  ``sweeps`` bounds the iteration; exhaustion sets
     ``SimResult.converged = False`` and warns.
 
-    Exact (to float tolerance) versus :func:`simulate` on jitter-free
-    runs whenever every saturated server pool is single-service-class
-    and its pop order stabilizes during compilation — which covers the
-    paper's saturated multi-thread append pools (Obs#5–#7) and mixed
-    reset/I/O traces; multi-class saturated pools remain a documented
-    FIFO approximation (``ChainProgram.exact`` reports the compiler's
-    claim).  With ``jitter=True`` the service times are perturbed after
-    the pool order was frozen, so saturated pools are approximate
-    (order 1e-2 to 1e-1 relative) regardless of ``exact``.
+    Exact (to float tolerance) versus :func:`simulate` whenever the
+    compiled program's pop-order refinement stabilized
+    (``ChainProgram.exact`` / ``SimResult.exact`` report the claim) —
+    single- and multi-service-class saturated pools alike, the latter
+    via the compiler's greedy server-assignment replay.  ``jitter=True``
+    compiles jitter-aware (refinement re-sorts and replays against the
+    seeded jittered service draw), so jittered saturated pools are
+    exact too; only a refinement budget that runs out before the order
+    freezes leaves a lower-bound approximation (``order_stable=False``,
+    offending pools in ``unstable_pools``).  The event engine is the
+    test oracle the claim is verified against
+    (``benchmarks/exactness_matrix.py``), never a runtime fallback.
 
     ``program`` short-circuits compilation with a pre-compiled program
-    (must match the trace); ``refine`` overrides the pop-order
-    refinement budget (:data:`repro.core.chain_program.DEFAULT_REFINE`).
+    (must match the trace; the exactness claim only transfers when the
+    program was compiled for this ``jitter``/``seed`` binding);
+    ``refine`` overrides the pop-order refinement budget
+    (:data:`repro.core.chain_program.DEFAULT_REFINE`).
     """
     from . import chain_program as cp
     lat = lat or LatencyModel(spec)
     n = len(trace)
     if n == 0:
         z = np.zeros(0, dtype=np.float64)
-        return SimResult(start=z, complete=z.copy(), service=z.copy())
+        return SimResult(start=z, complete=z.copy(), service=z.copy(),
+                         exact=True, order_stable=True)
     if program is None:
         program = cp.compile_program(
             trace, spec, lat,
-            refine=cp.DEFAULT_REFINE if refine is None else refine)
+            refine=cp.DEFAULT_REFINE if refine is None else refine,
+            jitter=jitter, seed=seed)
     if jitter:
         svc_orig = compute_service_times(trace, lat, seed=seed, jitter=True)
         svc_flat = svc_orig[program.orders[0]]
@@ -678,7 +697,14 @@ def simulate_vectorized(trace: Trace, spec: ZNSDeviceSpec = ZNSDeviceSpec(),
         program, svc_flat, sweeps=sweeps, scan_backend=scan_backend,
         fixpoint=fixpoint)
     res = cp.unpack_results(program, comp, svc_flat, [svc_orig])[0]
-    return dataclasses.replace(res, sweeps_used=used, converged=converged)
+    # the compile-time exactness claim binds to the service vector the
+    # refinement ran against; solving any other draw voids it
+    seeds_bind = (int(seed),) if jitter else None
+    claimed = bool(program.exact) and program.svc_seeds == seeds_bind
+    return dataclasses.replace(res, sweeps_used=used, converged=converged,
+                               exact=claimed,
+                               order_stable=bool(program.order_stable),
+                               unstable_pools=tuple(program.unstable_pools))
 
 
 def _simulate_vectorized_unfused(trace: Trace,

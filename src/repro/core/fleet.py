@@ -114,7 +114,8 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
     if program is None:
         program = cp.compile_fleet_program(
             traces, specs, params,
-            refine=cp.DEFAULT_REFINE if refine is None else refine)
+            refine=cp.DEFAULT_REFINE if refine is None else refine,
+            jitter=jitter, seeds=seeds)
     if jitter:
         svc_origs = [compute_service_times(traces[b], params[b],
                                            seed=seeds[b], jitter=True)
@@ -131,8 +132,16 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
         program, svc_flat, sweeps=sweeps, scan_backend=scan_backend,
         fixpoint=fixpoint)
     results = cp.unpack_results(program, comp, svc_flat, svc_origs)
-    return [dataclasses.replace(r, sweeps_used=used, converged=converged)
-            for r in results]
+    # the compile-time exactness claim binds to the refinement service
+    # vector; a jittered solve of a jitter-free program (or a seed
+    # mismatch on a pre-compiled one) voids it
+    seeds_bind = tuple(int(s) for s in seeds) if jitter else None
+    claimed = bool(program.exact) and program.svc_seeds == seeds_bind
+    return [dataclasses.replace(
+        r, sweeps_used=used, converged=converged, exact=claimed,
+        order_stable=bool(program.order_stable),
+        unstable_pools=tuple(program.unstable_pools))
+        for r in results]
 
 
 def batched_sequential_completions(issues: Sequence[np.ndarray],

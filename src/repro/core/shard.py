@@ -177,7 +177,12 @@ def shard_program(program: ChainProgram, *,
     :data:`HOST_MAX_SHARDS` groups.  With ``n_shards=k`` (mesh
     executor) entries are LPT-balanced into ``<= k`` event-weighted
     bins.  Entries are connected components of the chain/device graph,
-    so cross-entry families from ``extend_program`` are never split.
+    so cross-entry families from ``extend_program`` are never split —
+    and neither are a refined pool's greedy-replay coupling chains,
+    which always live inside one device's component.  Sub-programs
+    inherit the parent's exactness contract verbatim (``exact``,
+    ``order_stable``, ``unstable_pools``, ``svc_seeds``), so the
+    sharded solve claims exactly what the single-chip solve would.
     """
     if program.n_devices == 0 or program.n_flat == 0:
         return ShardedProgram(base=program, shards=())
@@ -231,7 +236,9 @@ def shard_program(program: ChainProgram, *,
             exact=program.exact,
             multiclass_pools=program.multiclass_pools,
             refine_used=program.refine_used,
-            order_stable=program.order_stable)
+            order_stable=program.order_stable,
+            unstable_pools=program.unstable_pools,
+            svc_seeds=program.svc_seeds)
         shards.append(Shard(devices=dev_lists[g], program=sub, perm=perm))
     return ShardedProgram(base=program, shards=tuple(shards))
 

@@ -209,7 +209,10 @@ def zns_fixpoint_ref(comp0, svc, blocks, *, sweeps: int = 8):
     at ``n`` (a dead slot).  Each sweep gathers completions per block,
     runs the *sequential* batched scan oracle, and scatter-maxes back;
     stops when nothing moved.  Ground truth for
-    ``repro.kernels.zns_fixpoint``.
+    ``repro.kernels.zns_fixpoint``.  Family semantics (which chains a
+    block encodes — thread loops, zone chains, greedy-replay pool
+    couplings) live entirely in the compiler; every block is just
+    segmented max-plus to this oracle and the kernels alike.
     """
     rtol, atol = 1e-5, 1e-3          # float32 progress thresholds
     comp = jnp.append(comp0.astype(jnp.float32), jnp.float32(NEG_INF))

@@ -7,6 +7,15 @@ index ``n``).  One Gauss–Seidel sweep applies, per block, a segmented
 max-plus scan to the gathered completions and scatter-maxes the result
 back; sweeps repeat until an early-exit ``moved`` reduction clears.
 
+The blocks carry *all* of the compiler's chain families through one
+uniform metadata shape — per-thread closed-loop lag chains, per-zone
+write chains, the metadata engine, and the greedy-replay server-pool
+coupling chains (per-server pop sequences, multi-class and jittered
+alike).  Nothing pool-specific reaches this layer: exactness is decided
+entirely at compile time (``ChainProgram.exact``), and the kernels just
+run whatever segmented scans they are handed — which is what lets the
+fused solver replace the event engine everywhere outside tests.
+
 This module runs that whole fixpoint as one compiled artifact instead of
 ``sweeps × families`` host dispatches:
 

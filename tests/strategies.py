@@ -114,6 +114,27 @@ if HAVE_HYPOTHESIS:
         return mixed_workload(scale, with_mgmt=mgmt)
 
     @st.composite
+    def pool_workload_specs(draw, max_threads: int = 6):
+        """Saturated server-pool workloads for the exactness fuzz suite:
+        random thread count / QD and per-thread append sizes drawn from
+        distinct service classes, so total concurrency lands far above
+        ``append_parallelism`` and the pool chains must replay the
+        greedy heterogeneous server assignment.  Optionally mixes in
+        zone resets to queue the metadata engine too."""
+        threads = draw(st.integers(2, max_threads))
+        qd = draw(st.integers(1, 4))
+        n = draw(st.integers(15, 50))
+        wl = WorkloadSpec()
+        for t in range(threads):
+            size = draw(st.sampled_from([4, 8, 16, 64])) * KiB
+            wl = wl.appends(n=n, size=size, qd=qd, zone=t * 4, nzones=4)
+        if draw(st.booleans()):
+            wl = wl.resets(n=max(n // 2, 4), occupancy=1.0,
+                           nzones=max(n // 2, 4), io_ctx=OpType.APPEND,
+                           zone=500)
+        return wl
+
+    @st.composite
     def allocation_requests(draw, spec: ZNSDeviceSpec):
         """A feasible list of (nbytes, stream, lifetime) allocations:
         total stays under half the device capacity so every policy can

@@ -180,12 +180,13 @@ def test_program_matches_oracle_jitter_free(scheme, policy, durability,
     assert np.all(lat_p > 0)
 
 
-def test_program_is_exact_single_class_and_flags_multiclass():
+def test_program_is_exact_single_class_and_multiclass():
     res = Cluster(small_spec()).run(SMALL_WL)
     assert res.compiled.program.exact
     assert res.compiled.program.multiclass_pools == ()
     # Mixed object sizes through a queuing cap>1 pool (a narrow device
-    # read pool, write-through so GETs hit flash) are flagged inexact.
+    # read pool, write-through so GETs hit flash): the greedy replay
+    # keeps the program exact; multiclass_pools stays as metadata.
     from repro.cluster import CLUSTER_DEVICE_SPEC, compile_graph
     spec = small_spec(
         durability="write-through",
@@ -198,8 +199,12 @@ def test_program_is_exact_single_class_and_flags_multiclass():
            for op in ops]
     graph = build_graph(spec, ops, qd=1, seed=0)
     compiled = compile_graph(graph)
-    assert not compiled.program.exact
+    assert compiled.program.exact and compiled.program.order_stable
+    assert compiled.program.unstable_pools == ()
     assert compiled.program.multiclass_pools
+    oracle = simulate_graph(graph)
+    np.testing.assert_allclose(compiled.comp, oracle, rtol=1e-9,
+                               atol=1e-6)
 
 
 def test_oracle_rejects_cyclic_graph():

@@ -64,6 +64,24 @@ def test_docstring_examples_run(module):
     assert res.failed == 0, f"{module}: {res.failed} doctest failures"
 
 
+def test_exactness_matrix_doc_in_sync_with_benchmark():
+    """docs/architecture.md's exactness-matrix table must cover every
+    axis and tolerance the CI gate (benchmarks/exactness_matrix.py)
+    actually enforces."""
+    import sys
+    sys.path.insert(0, str(REPO))
+    from benchmarks.exactness_matrix import (
+        LAYOUTS, TOL_JITTER_FREE, TOL_JITTERED, WORKLOADS)
+    text = (REPO / "docs" / "architecture.md").read_text(encoding="utf-8")
+    for token in (*WORKLOADS, *LAYOUTS):
+        assert f"`{token}`" in text, \
+            f"docs/architecture.md exactness matrix is missing `{token}`"
+    for tol in (TOL_JITTER_FREE, TOL_JITTERED):
+        tok = f"{tol:.0e}".replace("e-0", "e-")
+        assert f"`{tok}`" in text, \
+            f"docs/architecture.md is missing gate tolerance `{tok}`"
+
+
 def test_observations_doc_in_sync_with_registry():
     from repro.experiments import all_experiments
     text = (REPO / "docs" / "observations.md").read_text(encoding="utf-8")

@@ -1,0 +1,93 @@
+"""Golden-trace regression for multi-class and jittered pool exactness.
+
+Companion to ``tests/test_host_golden.py`` for the shapes the greedy
+pool replay newly solves exactly: a heterogeneous (8 KiB + 64 KiB)
+saturated append pool, jitter-free and jittered.  Each fixture under
+``tests/golden/`` pins the built workload's digest and the **event
+engine's** completion times, and the test asserts the vectorized
+backend still reproduces them at the exactness-matrix tolerances — so
+any regression of ``ChainProgram.exact`` shows up as a byte-visible
+fixture diff in review, not a silently widened tolerance.
+
+Regenerate after an *intentional* model change with::
+
+    pytest tests/test_pool_golden.py --regen-golden
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import KiB, OpType, WorkloadSpec, ZNSDeviceSpec, ZnsDevice
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+#: (case name, jitter, seed) pinned by a fixture each.
+GOLDEN_CASES = (
+    ("pool-multiclass", False, 0),
+    ("pool-multiclass-jittered", True, 3),
+    ("pool-reset-mixed", False, 0),
+)
+
+RTOL = {False: 1e-9, True: 1e-8}     # exactness-matrix tolerances
+
+
+def _workload(case: str):
+    wl = WorkloadSpec()
+    for t in range(4):
+        wl = wl.appends(n=50, size=8 * KiB, qd=4, zone=t * 4, nzones=4)
+        wl = wl.appends(n=50, size=64 * KiB, qd=4, zone=t * 4, nzones=4)
+    if case == "pool-reset-mixed":
+        wl = wl.resets(n=20, occupancy=1.0, nzones=20,
+                       io_ctx=OpType.APPEND, zone=500)
+    return wl.build()
+
+
+def _trace_digest(trace) -> str:
+    h = hashlib.sha256()
+    for field in ("op", "zone", "size", "issue", "thread", "qd",
+                  "occupancy", "was_finished", "io_ctx"):
+        h.update(np.ascontiguousarray(getattr(trace, field)).tobytes())
+    return h.hexdigest()
+
+
+def _compute(case: str, jitter: bool, seed: int) -> dict:
+    trace = _workload(case)
+    dev = ZnsDevice(ZNSDeviceSpec())
+    res = dev.run(trace, backend="event", seed=seed, jitter=jitter)
+    return {
+        "case": case, "jitter": jitter, "seed": seed,
+        "n_requests": len(trace),
+        "workload_sha256": _trace_digest(trace),
+        "complete_us": [float(c) for c in res.sim.complete],
+    }
+
+
+@pytest.mark.parametrize("case,jitter,seed", GOLDEN_CASES,
+                         ids=lambda v: str(v))
+def test_pool_golden_regression(request, case, jitter, seed):
+    path = GOLDEN_DIR / f"{case}.json"
+    got = _compute(case, jitter, seed)
+    if request.config.getoption("--regen-golden"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=0)
+        pytest.skip(f"regenerated {path.name}")
+    assert path.exists(), \
+        f"missing golden fixture {path}; run pytest --regen-golden"
+    with open(path) as f:
+        want = json.load(f)
+    assert got["workload_sha256"] == want["workload_sha256"], \
+        "workload builder drifted: rebuilt trace differs from fixture"
+    np.testing.assert_allclose(got["complete_us"], want["complete_us"],
+                               rtol=1e-12)
+    # the exactness claim: vectorized reproduces the pinned oracle times
+    dev = ZnsDevice(ZNSDeviceSpec())
+    vc = dev.run(_workload(case), backend="vectorized", seed=seed,
+                 jitter=jitter)
+    assert vc.exact is True and vc.order_stable is True
+    np.testing.assert_allclose(vc.sim.complete,
+                               np.asarray(want["complete_us"]),
+                               rtol=RTOL[jitter], atol=1e-6)
