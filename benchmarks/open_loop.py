@@ -1,0 +1,90 @@
+"""Open-loop lowering overhead gate.
+
+The arrival-process layer (``StreamSpec.arrival``, qd=0 open loop) must
+stay a lowering-time detail: stamping explicit issue times and raising
+the closed-loop gate to ``qd=n`` may not make the compile+solve path
+measurably slower than an equivalent closed-loop stream.  The gate
+compares cold (cache-cleared) vectorized runs of a 100k-request
+open-loop workload against its closed-loop twin and fails the row
+(``=FAIL``, picked up by CI's benchmark smoke) when the open-loop side
+is more than 10% slower.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (KiB, OpType, PoissonArrivals, WorkloadSpec,
+                        ZnsDevice, clear_program_cache)
+
+OVERHEAD_GATE = 1.10    # open loop may cost at most 10% over closed loop
+REPEATS = 5
+
+
+def _streams(wl: WorkloadSpec, n: int, *, open_loop: bool) -> WorkloadSpec:
+    """Four-thread mixed workload; the open-loop variant swaps the
+    closed-loop qd=64 threads for qd=0 Poisson streams of the same size
+    and count, so both lower to one pool/zone chain structure."""
+    kw = (dict(qd=0, arrival=PoissonArrivals(rate_per_s=2e5, seed=5))
+          if open_loop else dict(qd=64))
+    return (wl
+            .writes(n=n, size=4 * KiB, zone=0, **kw)
+            .reads(n=n, size=4 * KiB, zone=100, nzones=64, **kw)
+            .appends(n=n // 2, size=8 * KiB, zone=300, nzones=8, **kw)
+            .resets(n=max(n // 100, 2), occupancy=1.0,
+                    nzones=max(n // 100, 2), io_ctx=OpType.READ, **kw))
+
+
+def _cold_run_pair_s(dev: ZnsDevice, closed: WorkloadSpec,
+                     opened: WorkloadSpec):
+    """Cold (cache-cleared) runs, *interleaved* so machine drift hits
+    both variants equally; returns (best_closed_s, best_open_s,
+    median_per_rep_overhead).  The gate uses the median of per-rep
+    ratios — each rep's pair runs back to back, so the ratio cancels
+    slow drift that best-of-N block timing cannot."""
+    times = [[], []]
+    for _ in range(REPEATS):
+        for i, wl in enumerate((closed, opened)):
+            clear_program_cache()
+            t0 = time.perf_counter()
+            dev.run(wl, backend="vectorized", jitter=False)
+            times[i].append(time.perf_counter() - t0)
+    ratios = sorted(o / max(c, 1e-9) for c, o in zip(*times))
+    return min(times[0]), min(times[1]), ratios[len(ratios) // 2]
+
+
+def run(quick: bool = False):
+    n = 8_000 if quick else 40_000      # 4 streams -> 20k / 100k requests
+    dev = ZnsDevice()
+    closed = _streams(WorkloadSpec(), n, open_loop=False)
+    opened = _streams(WorkloadSpec(), n, open_loop=True)
+    n_req = len(opened.build())
+    assert len(closed.build()) == n_req
+
+    t_closed, t_open, overhead = _cold_run_pair_s(dev, closed, opened)
+    gate_ok = overhead <= OVERHEAD_GATE
+
+    # the arrival stamping itself, isolated (pure lowering, no engine)
+    proc = PoissonArrivals(rate_per_s=2e5, seed=5)
+    proc.issue_times(n)                  # warmup
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        times = proc.issue_times(n)
+    t_stamp = (time.perf_counter() - t0) / REPEATS
+    assert bool(np.all(np.diff(times) >= 0.0))
+
+    return [
+        (f"open_loop/closed_cold/n{n_req}", t_closed * 1e6,
+         f"{n_req / t_closed:.0f}req_per_s"),
+        (f"open_loop/open_cold/n{n_req}", t_open * 1e6,
+         f"overhead_x={overhead:.3f};gate<={OVERHEAD_GATE:.2f}"
+         + ("" if gate_ok else "=FAIL")),
+        (f"open_loop/issue_times/n{n}", t_stamp * 1e6,
+         f"{n / max(t_stamp, 1e-9) / 1e6:.1f}Mreq_per_s"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -19,7 +19,7 @@ MODULES = (
     "fig6_gc_interference", "fig7_reset_interference", "fig8_qd",
     "table1_insights", "device_bench", "fleet_bench", "chain_program",
     "checkpoint_bench", "host_policies", "kernel_bench", "cluster_bench",
-    "mega_fleet", "exactness_matrix",
+    "mega_fleet", "exactness_matrix", "open_loop",
 )
 
 

@@ -25,5 +25,5 @@ from .oracle import oracle_op_latencies, simulate_graph, touched_servers  # noqa
 from .cluster import Cluster, ClusterRunResult  # noqa: F401
 from .capacity import (  # noqa: F401
     CapacityCurve, CapacityPoint, CapacityReport, ClusterConfig,
-    plan_capacity, users_at_slo,
+    plan_capacity, rate_at_slo, users_at_slo,
 )

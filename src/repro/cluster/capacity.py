@@ -1,14 +1,24 @@
 """Capacity planning: users-per-rack at a p99 latency SLO.
 
 The planner compiles every point of a (stripe width x redundancy scheme
-x placement policy) x users-ladder x (normal | degraded) sweep to its
+x placement policy) x load-ladder x (normal | degraded) sweep to its
 own :class:`~repro.core.ChainProgram`, concatenates them with
 :func:`repro.core.concat_programs`, and solves the whole rack sweep in
 **one** :func:`repro.core.solve_program` call.  Per-config curves are
-then sliced back out, the p99-vs-users curve is interpolated against
+then sliced back out, the p99-vs-load curve is interpolated against
 the SLO (log-space in latency), and configurations are ranked by the
-user count the rack can serve inside the SLO — with a degraded-mode
-row (one server down, reconstruction reads) next to every normal row.
+load the rack can serve inside the SLO — with a degraded-mode row
+(one server down, reconstruction reads) next to every normal row.
+
+The ladder comes in two flavours:
+
+* ``users_ladder`` — closed-loop: each rung scales ``n_users`` and the
+  figure of merit is **users-at-SLO**;
+* ``rate_ladder`` — open-loop: each rung keeps the user population
+  fixed but stamps Poisson arrivals (``ClusterWorkload.arrival``) at
+  that offered rate (objects/s) with ``qd >= ops_per_user`` so the
+  closed-loop edges vanish; the figure of merit becomes
+  **arrival-rate-at-SLO**.
 """
 from __future__ import annotations
 
@@ -17,7 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import concat_programs, solve_program
+from repro.core import PoissonArrivals, concat_programs, solve_program
 from repro.core.metrics import DEFAULT_SLO_US, LatencyStats, violation_rate
 
 from .cluster import Cluster
@@ -40,36 +50,60 @@ class ClusterConfig:
 
 @dataclasses.dataclass(frozen=True)
 class CapacityPoint:
-    """One solved sweep point (a config at one users-ladder rung)."""
+    """One solved sweep point (a config at one load-ladder rung).
+
+    ``offered_rate`` is the open-loop arrival rate (objects/s) of a
+    ``rate_ladder`` rung; ``None`` on closed-loop (users-ladder) points.
+    """
 
     users: int
     objects_per_sec: float
     lat: LatencyStats
     slo_violation_rate: float
     converged: bool
+    offered_rate: Optional[float] = None
 
     def to_json(self) -> Dict[str, float]:
-        return {"users": self.users,
-                "objects_per_sec": self.objects_per_sec,
-                "p50_us": self.lat.p50_us, "p99_us": self.lat.p99_us,
-                "p999_us": self.lat.p999_us,
-                "slo_violation_rate": self.slo_violation_rate,
-                "converged": self.converged}
+        out = {"users": self.users,
+               "objects_per_sec": self.objects_per_sec,
+               "p50_us": self.lat.p50_us, "p99_us": self.lat.p99_us,
+               "p999_us": self.lat.p999_us,
+               "slo_violation_rate": self.slo_violation_rate,
+               "converged": self.converged}
+        if self.offered_rate is not None:
+            out["offered_rate"] = self.offered_rate
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
 class CapacityCurve:
-    """The p99-vs-users curve of one (config, mode)."""
+    """The p99-vs-load curve of one (config, mode).
+
+    ``rate_at_slo`` (objects/s) is set on open-loop (``rate_ladder``)
+    sweeps and becomes the ranking key; ``users_at_slo`` keeps its
+    closed-loop meaning otherwise.
+    """
 
     config: ClusterConfig
     degraded: bool
     points: Tuple[CapacityPoint, ...]
     users_at_slo: float
+    rate_at_slo: Optional[float] = None
+
+    @property
+    def load_at_slo(self) -> float:
+        """The curve's figure of merit: offered rate at the SLO when
+        open-loop, users at the SLO otherwise."""
+        return self.rate_at_slo if self.rate_at_slo is not None \
+            else self.users_at_slo
 
     def to_json(self) -> Dict:
-        return {"config": self.config.name, "degraded": self.degraded,
-                "users_at_slo": self.users_at_slo,
-                "points": [p.to_json() for p in self.points]}
+        out = {"config": self.config.name, "degraded": self.degraded,
+               "users_at_slo": self.users_at_slo,
+               "points": [p.to_json() for p in self.points]}
+        if self.rate_at_slo is not None:
+            out["rate_at_slo"] = self.rate_at_slo
+        return out
 
 
 @dataclasses.dataclass
@@ -88,9 +122,10 @@ class CapacityReport:
     order_unstable: Tuple[str, ...] = ()
 
     def ranking(self) -> List[CapacityCurve]:
-        """Normal-mode curves, best (most users inside SLO) first."""
+        """Normal-mode curves, best (most load inside SLO) first —
+        offered rate on open-loop sweeps, users otherwise."""
         normal = [c for c in self.curves if not c.degraded]
-        return sorted(normal, key=lambda c: -c.users_at_slo)
+        return sorted(normal, key=lambda c: -c.load_at_slo)
 
     def degraded_curve(self, config: ClusterConfig
                        ) -> Optional[CapacityCurve]:
@@ -107,28 +142,45 @@ class CapacityReport:
                 "curves": [c.to_json() for c in self.curves]}
 
 
-def users_at_slo(points: Sequence[CapacityPoint], slo_us: float) -> float:
-    """Largest user count whose p99 stays inside the SLO, interpolating
+def _load_at_slo(loads: Sequence[float], p99s: Sequence[float],
+                 slo_us: float) -> float:
+    """Largest load whose p99 stays inside the SLO, interpolating
     (log-space in latency) between the ladder rungs that straddle it.
 
-    0.0 when even the smallest rung violates; the top rung's user count
-    when no rung violates (the rack wasn't driven to the SLO).
+    0.0 when even the smallest rung violates; the top rung's load when
+    no rung violates (the rack wasn't driven to the SLO).
     """
-    if not points:
+    if not len(loads):
         return 0.0
-    p99 = np.asarray([p.lat.p99_us for p in points])
-    users = np.asarray([float(p.users) for p in points])
+    p99 = np.asarray(p99s, dtype=np.float64)
+    load = np.asarray(loads, dtype=np.float64)
     over = np.nonzero(p99 > slo_us)[0]
     if len(over) == 0:
-        return float(users[-1])
+        return float(load[-1])
     i = int(over[0])
     if i == 0:
         return 0.0
     lo, hi = p99[i - 1], p99[i]
     if not (hi > lo > 0.0):
-        return float(users[i - 1])
+        return float(load[i - 1])
     frac = (np.log(slo_us) - np.log(lo)) / (np.log(hi) - np.log(lo))
-    return float(users[i - 1] + frac * (users[i] - users[i - 1]))
+    return float(load[i - 1] + frac * (load[i] - load[i - 1]))
+
+
+def users_at_slo(points: Sequence[CapacityPoint], slo_us: float) -> float:
+    """Closed-loop figure of merit: user count at the p99 SLO."""
+    return _load_at_slo([float(p.users) for p in points],
+                        [p.lat.p99_us for p in points], slo_us)
+
+
+def rate_at_slo(points: Sequence[CapacityPoint], slo_us: float
+                ) -> Optional[float]:
+    """Open-loop figure of merit: offered arrival rate (objects/s) at
+    the p99 SLO; ``None`` unless every point carries an offered rate."""
+    if not points or any(p.offered_rate is None for p in points):
+        return None
+    return _load_at_slo([float(p.offered_rate) for p in points],
+                        [p.lat.p99_us for p in points], slo_us)
 
 
 def _can_degrade(scheme: RedundancyScheme) -> bool:
@@ -140,45 +192,67 @@ def plan_capacity(configs: Sequence[ClusterConfig],
                   base_spec: Optional[ClusterSpec] = None,
                   workload: Optional[ClusterWorkload] = None,
                   slo_us: float = DEFAULT_SLO_US,
+                  rate_ladder: Optional[Sequence[float]] = None,
                   degraded: bool = True, down_server: int = 0,
                   sweeps: int = 512, fixpoint: str = "loop",
                   scan_backend: str = "auto",
                   max_refine: Optional[int] = None) -> CapacityReport:
     """Compile the whole sweep, solve it as ONE fleet-level program,
-    and slice the capacity curves back out."""
+    and slice the capacity curves back out.
+
+    ``rate_ladder`` switches the sweep to open-loop offered load: each
+    rung keeps the workload's user population but stamps Poisson
+    arrivals at that rate (objects/s, ``qd`` raised to ``ops_per_user``
+    so the closed-loop edges vanish), ``users_ladder`` is ignored, and
+    curves rank by :func:`rate_at_slo` instead of :func:`users_at_slo`.
+    """
     base_spec = base_spec if base_spec is not None else ClusterSpec()
     workload = workload if workload is not None else ClusterWorkload()
-    entries: List[Tuple[ClusterConfig, bool, int, CompiledCluster]] = []
+    open_loop = rate_ladder is not None
+    rungs = [float(r) for r in rate_ladder] if open_loop \
+        else [int(u) for u in users_ladder]
+    entries: List[Tuple[ClusterConfig, bool, int, Optional[float],
+                        CompiledCluster]] = []
     for cfg in configs:
         spec = dataclasses.replace(base_spec, scheme=cfg.scheme,
                                    placement=cfg.placement)
         modes = [None] + ([down_server] if degraded
                           and _can_degrade(cfg.scheme) else [])
         for down in modes:
-            for users in users_ladder:
-                wl = dataclasses.replace(workload, n_users=int(users))
+            for rung in rungs:
+                if open_loop:
+                    wl = dataclasses.replace(
+                        workload,
+                        arrival=PoissonArrivals(rate_per_s=float(rung),
+                                                seed=workload.seed),
+                        qd=max(workload.qd, workload.ops_per_user))
+                    users, rate = workload.n_users, float(rung)
+                else:
+                    wl = dataclasses.replace(workload, n_users=int(rung))
+                    users, rate = int(rung), None
                 kw = {} if max_refine is None else {"max_refine": max_refine}
                 compiled = Cluster(spec).compile(
                     wl, down=down, sweeps=sweeps, fixpoint=fixpoint,
                     scan_backend=scan_backend, **kw)
-                entries.append((cfg, down is not None, int(users), compiled))
+                entries.append((cfg, down is not None, users, rate,
+                                compiled))
 
     # ONE fleet-level call over every config x rung x mode.  The
     # per-entry fixpoints found during compilation are exact lower
     # bounds of the concatenated program, so they seed the fleet solve
     # (comp0) and it converges in one verification sweep.
-    program = concat_programs([c.program for _, _, _, c in entries])
-    svc = np.concatenate([c.graph.svc for _, _, _, c in entries])
+    program = concat_programs([c.program for *_, c in entries])
+    svc = np.concatenate([c.graph.svc for *_, c in entries])
     comp, used, converged = solve_program(
         program, svc, sweeps=sweeps, fixpoint=fixpoint,
         scan_backend=scan_backend, warn=False,
-        comp0=np.concatenate([c.comp for _, _, _, c in entries]))
+        comp0=np.concatenate([c.comp for *_, c in entries]))
 
     curves: List[CapacityCurve] = []
     off = 0
     by_key: Dict[Tuple[str, bool], List[CapacityPoint]] = {}
     key_cfg: Dict[Tuple[str, bool], ClusterConfig] = {}
-    for cfg, is_degraded, users, compiled in entries:
+    for cfg, is_degraded, users, rate, compiled in entries:
         g = compiled.graph
         sl = comp[off:off + g.n]
         off += g.n
@@ -189,21 +263,24 @@ def plan_capacity(configs: Sequence[ClusterConfig],
             objects_per_sec=len(lats) / span * 1e6 if span > 0 else 0.0,
             lat=LatencyStats.from_samples(lats),
             slo_violation_rate=violation_rate(lats, slo_us),
-            converged=bool(converged and compiled.converged))
+            converged=bool(converged and compiled.converged),
+            offered_rate=rate)
         key = (cfg.name, is_degraded)
         by_key.setdefault(key, []).append(point)
         key_cfg[key] = cfg
     for key, points in by_key.items():
-        points = sorted(points, key=lambda p: p.users)
+        points = sorted(points, key=lambda p: (
+            p.offered_rate if p.offered_rate is not None else p.users))
         curves.append(CapacityCurve(
             config=key_cfg[key], degraded=key[1], points=tuple(points),
-            users_at_slo=users_at_slo(points, slo_us)))
+            users_at_slo=users_at_slo(points, slo_us),
+            rate_at_slo=rate_at_slo(points, slo_us)))
     unstable = tuple(sorted({
-        cfg.name for cfg, _, _, c in entries
+        cfg.name for cfg, *_, c in entries
         if not c.program.order_stable}))
     return CapacityReport(
         curves=curves, slo_us=slo_us, n_programs=len(entries),
         n_events=program.n_flat, sweeps_used=used,
         converged=bool(converged) and all(
-            c.converged for _, _, _, c in entries),
+            c.converged for *_, c in entries),
         order_unstable=unstable)

@@ -25,7 +25,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import KiB, MiB, ZNSDeviceSpec
+from repro.core import ArrivalProcess, KiB, MiB, ZNSDeviceSpec
 
 from .codec import RedundancyScheme, erasure
 
@@ -148,6 +148,13 @@ class ClusterWorkload:
     uniform (``object_bytes``) so every network/CPU/device service class
     stays homogeneous and the compiled cluster program is *exact*
     against the event-engine oracle.  Deterministic in ``seed``.
+
+    ``arrival`` stamps *open-loop offered load* onto the op stream: the
+    canonical interleaved order gets explicit issue times from the
+    :class:`repro.core.ArrivalProcess` instead of ``issue=0`` (pair it
+    with ``qd >= ops_per_user`` so the per-client closed-loop edges
+    vanish and the rack sees the arrival clock alone — that is what
+    :func:`repro.cluster.plan_capacity`'s ``rate_ladder`` mode does).
     """
 
     n_users: int = 8
@@ -157,6 +164,7 @@ class ClusterWorkload:
     delete_fraction: float = 0.0
     qd: int = 1
     seed: int = 0
+    arrival: Optional[ArrivalProcess] = None
 
     def __post_init__(self):
         if self.n_users < 1 or self.ops_per_user < 1:
@@ -173,15 +181,20 @@ class ClusterWorkload:
         order is fair.  A GET/DELETE only targets objects whose PUT sits
         at least ``qd`` slots earlier on the same client (closed-loop
         read-your-writes: the PUT's completion is guaranteed to gate
-        it)."""
+        it).  Open-loop streams (``arrival`` set) use a window of one
+        slot instead — the op mix must not collapse to all-PUTs when
+        the planner raises ``qd`` to disable the closed-loop edges, and
+        shard-level consistency is enforced by the compiler's
+        ``seq``/``wb_data``/``rd_data`` edges regardless."""
         rng = np.random.default_rng(self.seed)
+        window = 1 if self.arrival is not None else self.qd
         per_client: List[List[Tuple[int, int, int]]] = []
         next_obj = 0
         for c in range(self.n_users):
             ops: List[Tuple[int, int, int]] = []
             live: List[Tuple[int, int]] = []     # (obj, put slot)
             for slot in range(self.ops_per_user):
-                readable = [o for o, s in live if s <= slot - self.qd]
+                readable = [o for o, s in live if s <= slot - window]
                 r = float(rng.random())
                 if slot > 0 and readable and r < self.get_fraction:
                     obj = readable[int(rng.integers(len(readable)))]
@@ -197,11 +210,15 @@ class ClusterWorkload:
                     live.append((obj, slot))
                     ops.append((OP_PUT, obj, self.object_bytes))
             per_client.append(ops)
+        n_ops = self.n_users * self.ops_per_user
+        times = (self.arrival.issue_times(n_ops, size=self.object_bytes)
+                 if self.arrival is not None else np.zeros(n_ops))
         out: List[ObjectOp] = []
         for slot in range(self.ops_per_user):
             for c in range(self.n_users):
                 kind, obj, nbytes = per_client[c][slot]
                 out.append(ObjectOp(
                     seq=len(out), client=c, gateway=c % n_gateways,
-                    kind=kind, obj=obj, nbytes=nbytes, issue=0.0))
+                    kind=kind, obj=obj, nbytes=nbytes,
+                    issue=float(times[len(out)])))
         return out

@@ -33,6 +33,10 @@ from .metrics import (  # noqa: F401
     register_metric, slo_violations, throughput_timeseries,
     unregister_metric, violation_rate,
 )
+from .arrival import (  # noqa: F401
+    ArrivalProcess, DeterministicRate, MarkovModulated, PoissonArrivals,
+    TraceReplay, spread_into_windows,
+)
 from .workload import StreamSpec, WorkloadSpec  # noqa: F401
 from .fleet import batched_sequential_completions, simulate_fleet_vectorized  # noqa: F401
 from .device import (  # noqa: F401

@@ -185,6 +185,24 @@ for _f in ("mean_us", "p50_us", "p95_us", "p99_us", "p999_us"):
 del _f
 
 
+def _qlat_metric(field):
+    """Submission-to-completion ("queueing-inclusive") latency reducer:
+    measured from the trace's issue times, so open-loop streams charge
+    the time a burst spends waiting to be served — the quantity the
+    tail-latency SLO scenarios gate on."""
+    def fn(result) -> float:
+        if not len(result.trace):
+            return 0.0
+        lat = result.sim.latency_from(result.trace.issue)
+        return getattr(LatencyStats.from_samples(lat), field)
+    return fn
+
+
+for _f in ("p50_us", "p99_us", "p999_us"):
+    register_metric(f"qlat_{_f}", _qlat_metric(_f))
+del _f
+
+
 #: Threshold of the default registered SLO-violation extractor
 #: (``slo_violations_10ms`` in every ``RunResult.summary()``).
 DEFAULT_SLO_US = 10_000.0

@@ -1,12 +1,15 @@
 """Declarative workload builder for the :class:`repro.core.ZnsDevice` API.
 
 A :class:`WorkloadSpec` is an immutable, chainable description of a
-benchmark workload as a set of closed-loop *streams* — mirroring how the
-paper drives fio/SPDK (§III-A): each stream is one thread issuing one
+benchmark workload as a set of *streams* — mirroring how the paper
+drives fio/SPDK (§III-A): each stream is one thread issuing one
 operation type at a queue depth, with optional rate limiting, intra- vs
 inter-zone layouts, occupancy sweeps for zone-management ops, and phases
-(time offsets).  ``build()`` lowers the spec to the struct-of-arrays
-:class:`repro.core.Trace` consumed by the simulation backends.
+(time offsets).  Streams are closed-loop by default; an
+:class:`repro.core.arrival.ArrivalProcess` (``arrival=``, with ``qd=0``
+for unbounded in-flight) paces them open-loop instead.  ``build()``
+lowers the spec to the struct-of-arrays :class:`repro.core.Trace`
+consumed by the simulation backends.
 
     wl = (WorkloadSpec()
           .writes(n=10_000, size=4 * KiB, qd=4, zone=0)
@@ -24,6 +27,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .arrival import ArrivalProcess, DeterministicRate
 from .engine import Trace
 from .spec import KiB, LBAFormat, OpType, Stack
 
@@ -32,17 +36,26 @@ _IO_OPS = (OpType.READ, OpType.WRITE, OpType.APPEND)
 
 @dataclasses.dataclass(frozen=True)
 class StreamSpec:
-    """One closed-loop stream of a single operation type."""
+    """One stream of a single operation type.
+
+    Closed-loop by default (``qd`` gates issue on completions).  An
+    :class:`repro.core.arrival.ArrivalProcess` (``arrival=``) paces the
+    stream open-loop instead; ``qd=0`` means "unbounded in-flight" —
+    the closed-loop gate never binds and the stream runs purely on its
+    arrival clock.  The legacy ``every_us`` / ``rate_bytes_per_s`` knobs
+    lower through :class:`repro.core.arrival.DeterministicRate`.
+    """
 
     op: OpType
     n: int
     size: int = 0
-    qd: int = 1
+    qd: int = 1                     # 0 = open loop (unbounded in-flight)
     zone: int = 0
     nzones: int = 1                 # round-robin over [zone, zone + nzones)
     thread: Optional[int] = None    # auto-assigned at build() when None
     rate_bytes_per_s: Optional[float] = None
     every_us: Optional[float] = None  # fixed inter-issue spacing
+    arrival: Optional[ArrivalProcess] = None
     start_us: float = 0.0
     # zone-management parameters
     occupancy: float = 0.0
@@ -53,37 +66,93 @@ class StreamSpec:
     was_finished: bool = False
     io_ctx: int = -1                # OpType running concurrently (Obs#13)
 
+    def __post_init__(self):
+        if self.qd < 0:
+            raise ValueError(f"qd must be >= 0 (0 = open loop), "
+                             f"got {self.qd}")
+        if self.rate_bytes_per_s is not None:
+            if not self.rate_bytes_per_s > 0.0:
+                raise ValueError(
+                    f"rate_bytes_per_s must be > 0, got "
+                    f"{self.rate_bytes_per_s}; drop it for a purely "
+                    f"closed-loop stream")
+            if self.op in _IO_OPS and self.size <= 0:
+                raise ValueError(
+                    "rate_bytes_per_s pacing needs size > 0 — a "
+                    "zero-size stream would silently degrade to "
+                    "closed-loop (pace 0)")
+        if self.every_us is not None and self.every_us < 0.0:
+            raise ValueError(f"every_us must be >= 0, got {self.every_us}")
+        if self.arrival is not None and (
+                self.every_us is not None
+                or self.rate_bytes_per_s is not None):
+            raise ValueError(
+                "arrival= conflicts with the legacy every_us / "
+                "rate_bytes_per_s pacing knobs; use one or the other "
+                "(DeterministicRate subsumes both)")
+        if self.occupancies is not None and self.n != self.n_per_level:
+            raise ValueError(
+                f"occupancies= sizes the stream by n_per_level "
+                f"(={self.n_per_level}), so n={self.n} conflicts; pass "
+                f"n=n_per_level or use reset_sweep()/finish_sweep()")
+
     def lower(self, thread: int) -> Trace:
         if self.op in _IO_OPS:
             return self._lower_io(thread)
         return self._lower_mgmt(thread)
 
+    def _resolved_arrival(self) -> Optional[ArrivalProcess]:
+        """The stream's arrival process, with legacy pacing knobs lowered
+        through :class:`DeterministicRate` (None = purely closed-loop)."""
+        if self.arrival is not None:
+            return self.arrival
+        if self.every_us is not None:
+            return DeterministicRate(every_us=float(self.every_us)) \
+                if self.every_us > 0.0 else None
+        if self.rate_bytes_per_s is not None:
+            return DeterministicRate(
+                rate_bytes_per_s=float(self.rate_bytes_per_s))
+        return None
+
+    def _lowered_qd(self, n: int) -> int:
+        # qd=0 (open loop): lower with qd >= n so the closed-loop gate
+        # (request p waits on completion p-qd) can never bind.
+        return self.qd if self.qd > 0 else max(n, 1)
+
     # -- I/O streams --------------------------------------------------------
     def _lower_io(self, thread: int) -> Trace:
         n = self.n
         zones = self.zone + (np.arange(n) % max(self.nzones, 1))
-        if self.every_us is not None:
-            pace = float(self.every_us)
-        elif self.rate_bytes_per_s is not None:
-            pace = self.size / self.rate_bytes_per_s * 1e6
+        arrival = self._resolved_arrival()
+        if arrival is not None:
+            issue = arrival.issue_times(n, start_us=self.start_us,
+                                        size=self.size)
         else:
-            pace = 0.0              # purely closed-loop: QD gates everything
-        issue = self.start_us + np.arange(n, dtype=np.float64) * pace
+            issue = np.full(n, self.start_us, dtype=np.float64)
         return Trace.build(
             op=np.full(n, int(self.op)), zone=zones,
             size=np.full(n, self.size), issue=issue,
-            thread=np.full(n, thread), qd=np.full(n, self.qd))
+            thread=np.full(n, thread), qd=np.full(n, self._lowered_qd(n)))
 
     # -- zone-management streams -------------------------------------------
     def _lower_mgmt(self, thread: int) -> Trace:
         ops, occs, fin, issue, ctx = [], [], [], [], []
-        t = self.start_us
         levels = self.occupancies if self.occupancies is not None \
             else (self.occupancy,)
+        per = self.n_per_level if self.occupancies is not None else self.n
+        arrival = self.arrival
+        base = arrival.issue_times(len(levels) * per,
+                                   start_us=self.start_us) \
+            if arrival is not None else None
+        t = self.start_us
+        slot = 0
         for occ in levels:
-            for _ in range(self.n_per_level if self.occupancies is not None
-                           else self.n):
-                t += self.pause_us
+            for _ in range(per):
+                if base is not None:
+                    t = float(base[slot]) + self.pause_us
+                else:
+                    t += self.pause_us
+                slot += 1
                 if self.op == OpType.RESET and self.finish_first \
                         and 0.0 < occ < 1.0:
                     ops.append(int(OpType.FINISH)); occs.append(occ)
@@ -95,13 +164,13 @@ class StreamSpec:
                     ops.append(int(self.op)); occs.append(occ)
                     fin.append(self.was_finished); issue.append(t)
                     ctx.append(self.io_ctx)
-                if self.every_us is not None:
+                if base is None and self.every_us is not None:
                     t += self.every_us
         n = len(ops)
         zones = self.zone + (np.arange(n) % max(self.nzones, 1))
         return Trace.build(
             op=ops, zone=zones, size=None, issue=issue,
-            thread=np.full(n, thread), qd=np.full(n, self.qd),
+            thread=np.full(n, thread), qd=np.full(n, self._lowered_qd(n)),
             occupancy=occs, was_finished=fin, io_ctx=ctx)
 
 
@@ -235,7 +304,10 @@ class WorkloadSpec:
                     if n == 0:
                         continue
                     if s.occupancies is not None:
-                        st.append(dataclasses.replace(s, n_per_level=n))
+                        # n mirrors n_per_level on sweep streams (the
+                        # conflicting combination is rejected at
+                        # construction), so shard both together.
+                        st.append(dataclasses.replace(s, n=n, n_per_level=n))
                     else:
                         st.append(dataclasses.replace(s, n=n))
                 shards.append(dataclasses.replace(self, streams=tuple(st),

@@ -4,9 +4,11 @@ The paper's contribution is 13 key observations about ZNS SSD behavior;
 this package makes each one an executable :class:`Experiment` (device
 spec + latency profile + workload sweep + metric extractors + a
 ``check`` asserting the qualitative claim) and runs any subset of them
-as **one** batched :class:`repro.core.DeviceFleet` computation.
+as **one** batched :class:`repro.core.DeviceFleet` computation.  Two
+scenario extensions (obs14/obs15, :mod:`repro.experiments.traffic`)
+replay the interference observations under open-loop arrival processes.
 
-    python -m repro.experiments run --all        # all 13, one fleet sweep
+    python -m repro.experiments run --all        # all 15, one fleet sweep
     python -m repro.experiments list             # what's registered
 
     >>> from repro.experiments import ExperimentRunner, get_experiment
@@ -27,3 +29,4 @@ from .runner import (  # noqa: F401
     render_report,
 )
 from . import observations  # noqa: F401  (populates the registry)
+from . import traffic  # noqa: F401  (obs14/obs15 open-loop scenarios)

@@ -20,7 +20,8 @@ policy ranking (see docs/host.md).  ``cluster`` compiles a (redundancy
 scheme x placement policy) x users-ladder x (normal | degraded) rack
 sweep to one fleet-level :class:`repro.core.ChainProgram`, solves it in
 a single call, and ranks configurations by the user count served inside
-the p99 latency SLO (see docs/cluster.md).
+the p99 latency SLO (see docs/cluster.md); ``--rates`` swaps the ladder
+for open-loop Poisson offered load and ranks by arrival-rate-at-SLO.
 """
 from __future__ import annotations
 
@@ -161,13 +162,16 @@ def _cmd_cluster(args) -> int:
         print(f"cluster: {e.args[0]}", file=sys.stderr)
         return 2
     ladder = [int(u) for u in args.users.split(",") if u]
+    rate_ladder = [float(r) for r in args.rates.split(",") if r] or None
     workload = ClusterWorkload(
         ops_per_user=args.objects_per_user,
         object_bytes=int(args.object_mib * (1 << 20)),
-        get_fraction=args.get_fraction, seed=args.seed)
+        get_fraction=args.get_fraction, seed=args.seed,
+        n_users=ladder[-1] if rate_ladder and ladder else 8)
     report = plan_capacity(
         configs, ladder, base_spec=base_spec, workload=workload,
-        slo_us=args.slo_ms * 1e3, degraded=not args.no_degraded,
+        slo_us=args.slo_ms * 1e3, rate_ladder=rate_ladder,
+        degraded=not args.no_degraded,
         sweeps=args.sweeps, max_refine=args.max_refine)
 
     os.makedirs(args.out, exist_ok=True)
@@ -177,26 +181,29 @@ def _cmd_cluster(args) -> int:
     csv_path = os.path.join(args.out, "capacity_curves.csv")
     with open(csv_path, "w") as f:
         f.write("config,degraded,users,objects_per_sec,p50_us,p99_us,"
-                "p999_us,slo_violation_rate\n")
+                "p999_us,slo_violation_rate,offered_rate\n")
         for c in report.curves:
             for p in c.points:
+                rate = "" if p.offered_rate is None \
+                    else f"{p.offered_rate:.3f}"
                 f.write(f"{c.config.name},{int(c.degraded)},{p.users},"
                         f"{p.objects_per_sec:.3f},{p.lat.p50_us:.3f},"
                         f"{p.lat.p99_us:.3f},{p.lat.p999_us:.3f},"
-                        f"{p.slo_violation_rate:.6f}\n")
+                        f"{p.slo_violation_rate:.6f},{rate}\n")
 
     width = max(len(c.config.name) for c in report.curves)
-    print(f"{'config':{width}s} {'mode':8s} {'users@SLO':>9s} "
+    fom = "rate@SLO" if rate_ladder else "users@SLO"
+    print(f"{'config':{width}s} {'mode':8s} {fom:>9s} "
           f"{'p99(us) by rung':>24s}")
     for c in report.ranking():
         rungs = " ".join(f"{p.lat.p99_us:7.1f}" for p in c.points)
         print(f"{c.config.name:{width}s} {'normal':8s} "
-              f"{c.users_at_slo:9.2f} {rungs:>24s}")
+              f"{c.load_at_slo:9.2f} {rungs:>24s}")
         d = report.degraded_curve(c.config)
         if d is not None:
             rungs = " ".join(f"{p.lat.p99_us:7.1f}" for p in d.points)
             print(f"{'':{width}s} {'degraded':8s} "
-                  f"{d.users_at_slo:9.2f} {rungs:>24s}")
+                  f"{d.load_at_slo:9.2f} {rungs:>24s}")
     print(f"\n{report.n_programs} programs ({report.n_events} events) in "
           f"one fleet-level solve ({report.sweeps_used} sweeps, SLO "
           f"p99 <= {report.slo_us / 1e3:g}ms); results: {json_path}")
@@ -247,6 +254,11 @@ def main(argv=None) -> int:
     clu.add_argument("--servers", type=int, default=8)
     clu.add_argument("--users", default="2,4,8",
                      help="comma-separated users-per-rack ladder")
+    clu.add_argument("--rates", default="",
+                     help="comma-separated open-loop offered-load ladder "
+                          "(objects/s, Poisson arrivals); switches the "
+                          "figure of merit to arrival-rate-at-SLO and "
+                          "fixes the population at the last --users rung")
     clu.add_argument("--slo-ms", type=float, default=10.0,
                      help="p99 latency SLO in milliseconds")
     clu.add_argument("--objects-per-user", type=int, default=6)

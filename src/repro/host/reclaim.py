@@ -23,11 +23,12 @@ foreground workload on either backend.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import MiB, OpType, WorkloadSpec, ZnsDevice, ZoneError
+from repro.core import (MiB, OpType, TraceReplay, WorkloadSpec, ZnsDevice,
+                        ZoneError, spread_into_windows)
 
 from .allocator import Extent, ZoneAllocator
 
@@ -201,11 +202,20 @@ class ReclaimScheduler:
 
     # -- workload compilation ------------------------------------------------
     def reclaim_workload(self, *, base: Optional[WorkloadSpec] = None,
-                         thread: Optional[int] = None) -> WorkloadSpec:
+                         thread: Optional[int] = None,
+                         windows: Optional[Sequence[Tuple[float, float]]]
+                         = None) -> WorkloadSpec:
         """Compile the backlog into reset (+ relocation append) streams on
         ``base`` **without draining it** — running the returned spec on a
         device models reclaim concurrent with whatever else is in
-        ``base``.  Occupancies are read from live zone state."""
+        ``base``.  Occupancies are read from live zone state.
+
+        ``windows`` schedules the resets *open-loop into load troughs*:
+        issue times are spread over the given ``(start_us, end_us)``
+        windows proportionally to window length (diurnal scheduling —
+        reclaim runs when foreground traffic is quiet) instead of
+        back-to-back from time zero.  Omitting it keeps the legacy
+        closed-loop drain."""
         wl = base if base is not None else WorkloadSpec()
         if not self.backlog:
             return wl
@@ -216,6 +226,10 @@ class ReclaimScheduler:
         relocate = sum(self.valid_bytes(z) for z in self.backlog)
         ctx = -1 if self.io_ctx is None else int(self.io_ctx)
         kw = {} if thread is None else {"thread": thread}
+        if windows is not None:
+            times = spread_into_windows(len(occs), windows)
+            kw.update(qd=0,
+                      arrival=TraceReplay(times_us=tuple(map(float, times))))
         wl = wl.stream(OpType.RESET, n=1, occupancies=occs, n_per_level=1,
                        zone=self.backlog[0], io_ctx=ctx, **kw)
         if relocate > 0:

@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import (
-    KiB, MiB, OpType, Trace, WorkloadSpec, ZNSDeviceSpec,
+    DeterministicRate, KiB, MarkovModulated, MiB, OpType, PoissonArrivals,
+    Trace, TraceReplay, WorkloadSpec, ZNSDeviceSpec,
 )
 from repro.core.emulator_models import EMULATOR_PROFILES
 
@@ -132,6 +133,53 @@ if HAVE_HYPOTHESIS:
             wl = wl.resets(n=max(n // 2, 4), occupancy=1.0,
                            nzones=max(n // 2, 4), io_ctx=OpType.APPEND,
                            zone=500)
+        return wl
+
+    def arrival_processes():
+        """Every :mod:`repro.core.arrival` process kind, with sane
+        parameter ranges (rates that keep a few-hundred-request stream
+        inside ~1 s of simulated time)."""
+        deterministic = st.one_of(
+            st.builds(DeterministicRate,
+                      every_us=st.floats(1.0, 500.0)),
+            st.builds(DeterministicRate,
+                      rate_per_s=st.floats(2e3, 1e6)))
+        poisson = st.builds(PoissonArrivals,
+                            rate_per_s=st.floats(2e3, 1e6),
+                            seed=st.integers(0, 7))
+        mmpp = st.builds(MarkovModulated,
+                         rate_on_per_s=st.floats(1e4, 1e6),
+                         rate_off_per_s=st.sampled_from([0.0, 1e3]),
+                         mean_on_us=st.floats(100.0, 5e3),
+                         mean_off_us=st.floats(100.0, 5e3),
+                         seed=st.integers(0, 7),
+                         start_on=st.booleans())
+        replay = st.builds(
+            lambda times: TraceReplay(times_us=tuple(times)),
+            st.lists(st.floats(0.0, 1e5), min_size=400, max_size=400))
+        return st.one_of(deterministic, poisson, mmpp, replay)
+
+    @st.composite
+    def open_loop_workload_specs(draw, max_streams: int = 3):
+        """Mixed open-loop workloads: each stream gets its own arrival
+        process and ``qd=0`` (pure open loop) or a small binding qd, so
+        the differential suite exercises both the unbounded path and
+        rate-limited closed loops."""
+        n_streams = draw(st.integers(1, max_streams))
+        wl = WorkloadSpec()
+        for t in range(n_streams):
+            op = draw(st.sampled_from(
+                [OpType.READ, OpType.WRITE, OpType.APPEND]))
+            wl = wl.stream(
+                op, n=draw(st.integers(20, 120)),
+                size=draw(st.sampled_from([4 * KiB, 16 * KiB])),
+                qd=draw(st.sampled_from([0, 0, 2])),
+                zone=t * 8, nzones=draw(st.integers(1, 8)),
+                arrival=draw(arrival_processes()))
+        if draw(st.booleans()):
+            wl = wl.resets(n=8, occupancy=1.0, nzones=8, zone=400, qd=0,
+                           io_ctx=OpType.READ,
+                           arrival=draw(arrival_processes()))
         return wl
 
     @st.composite

@@ -18,6 +18,7 @@ MD_FILES = sorted(p for p in REPO.glob("**/*.md")
 
 #: Public modules whose docstring examples must be runnable.
 DOCTEST_MODULES = (
+    "repro.core.arrival",
     "repro.core.chain_program",
     "repro.core.device",
     "repro.core.workload",

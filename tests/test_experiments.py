@@ -1,7 +1,8 @@
 """Observation registry + fleet-batched experiment runner.
 
-Acceptance: all 13 observation experiments execute as ONE fleet-batched
-sweep and every ``check()`` passes on both simulation backends.
+Acceptance: all 15 experiments (13 paper observations + the obs14/obs15
+open-loop scenario extensions) execute as ONE fleet-batched sweep and
+every ``check()`` passes on both simulation backends.
 """
 import json
 import warnings
@@ -20,8 +21,8 @@ from repro.experiments.__main__ import main as cli_main
 # -- registry ------------------------------------------------------------------
 def test_registry_has_all_13_observations():
     exps = all_experiments()
-    assert [e.obs for e in exps] == list(range(1, 14))
-    assert len({e.name for e in exps}) == 13
+    assert [e.obs for e in exps] == list(range(1, 16))
+    assert len({e.name for e in exps}) == 15
 
 
 def test_get_experiment_lookup_forms():
@@ -64,7 +65,7 @@ def test_register_experiment_collision_warns_and_unregister_roundtrip():
 
 def test_experiment_validation():
     with pytest.raises(ValueError, match="obs must be"):
-        _dummy_experiment(obs=14)
+        _dummy_experiment(obs=0)
     bad = _dummy_experiment()
     with pytest.raises(ValueError, match="duplicate sweep-point labels"):
         Experiment(name="x", obs=1, title="t", claim="c", figure="f",
@@ -76,7 +77,7 @@ def test_experiment_validation():
 @pytest.mark.parametrize("backend", ["vectorized", "event"])
 def test_all_13_checks_pass_on_backend(backend):
     results = ExperimentRunner(backend=backend).run()
-    assert len(results) == 13
+    assert len(results) == 15
     failures = [str(c) for r in results for c in r.checks if not c.ok]
     assert not failures, failures
     assert all(r.backend == backend for r in results)
