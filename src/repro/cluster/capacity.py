@@ -23,6 +23,7 @@ The ladder comes in two flavours:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -32,8 +33,74 @@ from repro.core.metrics import DEFAULT_SLO_US, LatencyStats, violation_rate
 
 from .cluster import Cluster
 from .codec import RedundancyScheme
-from .compiler import CompiledCluster, op_latencies
+from .compiler import CompiledCluster, build_graph, compile_graph, \
+    op_latencies
 from .spec import ClusterSpec, ClusterWorkload
+
+
+def _op_digest(graph, i: int) -> bytes:
+    """Content digest of op ``i``'s event slice: stage labels and
+    service times.  Two rungs map an op onto each other only when
+    these agree — same stages, same service demands.  Issue times are
+    deliberately excluded: a rate ladder re-stamps every arrival, yet
+    the op is still the same work (and the warm solve re-derives any
+    slot the new clock makes stale)."""
+    s, e = graph.op_slices[i]
+    h = hashlib.sha1()
+    h.update("|".join(graph.labels[s:e]).encode())
+    h.update(np.ascontiguousarray(graph.svc[s:e]).tobytes())
+    return h.digest()
+
+
+def _rung_comp0(prev_graph, prev_comp: np.ndarray, graph
+                ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+    """Warm-start arrays for the next ladder rung, mapped per-op from
+    the previous rung's completions: ``(cand, seed)``.
+
+    ``cand`` joins ops on their ``(client, slot)`` identity and accepts
+    a slice only when the op's content digest (:func:`_op_digest`)
+    matches — the shared clients of a users-ladder rung re-draw
+    identical op streams, but e.g. a GET's device-read stage can appear
+    or vanish as the global interleave shifts flush timing, and
+    open-loop rate ladders re-stamp every arrival.  Unmatched slots
+    stay ``-inf`` (the solver's additive identity), so a partial join
+    is still a usable candidate for the verified completion warm start.
+
+    ``seed`` additionally estimates the *new* clients' slots from
+    their modulo twin (client ``c % prev_n_users``, same slot, no
+    digest required) so every op sits on the previous rung's time
+    scale — that is what makes it a usable FIFO pop-*order* seed,
+    unlike ``cand``, whose unmatched ``-inf`` slots would interleave
+    bootstrap-scale events into previous-rung-scale queues.
+
+    ``(None, None)`` when nothing matches at all."""
+    if prev_graph.op_slices is None or graph.op_slices is None or \
+            prev_graph.op_keys is None or graph.op_keys is None:
+        return None, None
+    prev_by_key = {k: i for i, k in enumerate(prev_graph.op_keys)}
+    prev_users = 1 + max(c for c, _ in prev_graph.op_keys)
+    comp0 = np.full(graph.n, -np.inf)
+    seed = np.full(graph.n, -np.inf)
+    hits = 0
+    for i, (client, slot) in enumerate(graph.op_keys):
+        s, e = graph.op_slices[i]
+        j = prev_by_key.get((client, slot))
+        if j is not None:
+            ps, pe = prev_graph.op_slices[j]
+            if e - s == pe - ps and _op_digest(graph, i) == \
+                    _op_digest(prev_graph, j):
+                comp0[s:e] = prev_comp[ps:pe]
+                seed[s:e] = prev_comp[ps:pe]
+                hits += 1
+                continue
+        j = prev_by_key.get((client % prev_users, slot))
+        if j is not None:
+            ps, pe = prev_graph.op_slices[j]
+            if e - s == pe - ps:
+                seed[s:e] = prev_comp[ps:pe]
+    if not hits:
+        return None, None
+    return comp0, seed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +187,11 @@ class CapacityReport:
     #: (``order_stable=False``) — their curves are still reported, but
     #: the underlying programs are approximate, not exact.
     order_unstable: Tuple[str, ...] = ()
+    #: Warm-ladder telemetry: rung compiles whose previous-rung warm
+    #: start survived the tightness verification / rungs where a warm
+    #: start was attempted (0/0 when ``warm_ladder=False``).
+    warm_hits: int = 0
+    warm_attempts: int = 0
 
     def ranking(self) -> List[CapacityCurve]:
         """Normal-mode curves, best (most load inside SLO) first —
@@ -139,6 +211,8 @@ class CapacityReport:
                 "n_events": self.n_events, "sweeps_used": self.sweeps_used,
                 "converged": self.converged,
                 "order_unstable": list(self.order_unstable),
+                "warm_hits": self.warm_hits,
+                "warm_attempts": self.warm_attempts,
                 "curves": [c.to_json() for c in self.curves]}
 
 
@@ -196,7 +270,8 @@ def plan_capacity(configs: Sequence[ClusterConfig],
                   degraded: bool = True, down_server: int = 0,
                   sweeps: int = 512, fixpoint: str = "loop",
                   scan_backend: str = "auto",
-                  max_refine: Optional[int] = None) -> CapacityReport:
+                  max_refine: Optional[int] = None,
+                  warm_ladder: bool = False) -> CapacityReport:
     """Compile the whole sweep, solve it as ONE fleet-level program,
     and slice the capacity curves back out.
 
@@ -205,6 +280,21 @@ def plan_capacity(configs: Sequence[ClusterConfig],
     arrivals at that rate (objects/s, ``qd`` raised to ``ops_per_user``
     so the closed-loop edges vanish), ``users_ladder`` is ignored, and
     curves rank by :func:`rate_at_slo` instead of :func:`users_at_slo`.
+
+    ``warm_ladder=True`` threads each rung's completions into the next
+    rung's refined solves as ``comp0`` (ops joined per ``(client,
+    slot)`` key when their content digests match), seeds the FIFO
+    pop-order refinement from the previous rung's orders, and — on
+    rate ladders, whose rungs share their entire structure — reuses
+    the previous rung's graph with the new arrival clock re-stamped
+    instead of rebuilding placement and shard planning from scratch.
+    Rung monotonicity is not assumed: the warm solve only sticks when
+    the tightness verification proves it equal to the cold result (see
+    :func:`repro.cluster.compiler.compile_graph`), so the report is
+    identical either way — ``warm_hits`` / ``warm_attempts`` expose
+    how often the shortcut landed.  Rate ladders pay best (graph reuse
+    plus order carry-over); users ladders rebuild each rung's graph
+    and warm only the solves.
     """
     base_spec = base_spec if base_spec is not None else ClusterSpec()
     workload = workload if workload is not None else ClusterWorkload()
@@ -213,13 +303,22 @@ def plan_capacity(configs: Sequence[ClusterConfig],
         else [int(u) for u in users_ladder]
     entries: List[Tuple[ClusterConfig, bool, int, Optional[float],
                         CompiledCluster]] = []
+    warm_hits = warm_attempts = 0
     for cfg in configs:
         spec = dataclasses.replace(base_spec, scheme=cfg.scheme,
                                    placement=cfg.placement)
         modes = [None] + ([down_server] if degraded
                           and _can_degrade(cfg.scheme) else [])
         for down in modes:
-            for rung in rungs:
+            prev: Optional[Tuple[object, np.ndarray, object]] = None
+            # Open-loop rungs thread best top-down: a sparser Poisson
+            # clock (lower rate, same seed) only stretches issue times,
+            # so the *higher*-rate rung's completions are lower bounds
+            # for the next rung almost everywhere.  Curve points are
+            # re-sorted by load afterwards, so rung order is free.
+            sweep_rungs = sorted(rungs, reverse=True) \
+                if warm_ladder and open_loop else rungs
+            for rung in sweep_rungs:
                 if open_loop:
                     wl = dataclasses.replace(
                         workload,
@@ -231,9 +330,41 @@ def plan_capacity(configs: Sequence[ClusterConfig],
                     wl = dataclasses.replace(workload, n_users=int(rung))
                     users, rate = int(rung), None
                 kw = {} if max_refine is None else {"max_refine": max_refine}
-                compiled = Cluster(spec).compile(
-                    wl, down=down, sweeps=sweeps, fixpoint=fixpoint,
-                    scan_backend=scan_backend, **kw)
+                if warm_ladder:
+                    chains0 = None
+                    if open_loop and prev is not None:
+                        # Rate rungs share their entire structure: the
+                        # op mix is drawn before the clock is stamped
+                        # and placement/shard planning never read issue
+                        # times.  Reuse the previous rung's graph with
+                        # the new arrival clock re-stamped on the op
+                        # heads instead of rebuilding it.
+                        times = wl.arrival.issue_times(
+                            wl.n_users * wl.ops_per_user,
+                            size=wl.object_bytes)
+                        issue = prev[0].issue.copy()
+                        issue[prev[0].op_head] = times
+                        graph = dataclasses.replace(prev[0], issue=issue)
+                        # Identical slot indexing: the previous rung's
+                        # replayed pop orders are a valid first iterate.
+                        chains0 = prev[2]
+                    else:
+                        ops = wl.build(spec.n_gateways)
+                        graph = build_graph(spec, ops, qd=wl.qd,
+                                            down=down, seed=wl.seed)
+                    comp0, seed = (None, None) if prev is None else \
+                        _rung_comp0(prev[0], prev[1], graph)
+                    warm_attempts += comp0 is not None
+                    compiled = compile_graph(
+                        graph, sweeps=sweeps, fixpoint=fixpoint,
+                        scan_backend=scan_backend, comp0=comp0,
+                        order_seed=seed, chains0=chains0, **kw)
+                    warm_hits += compiled.warm_start_used
+                    prev = (graph, compiled.comp, compiled.fifo_chains)
+                else:
+                    compiled = Cluster(spec).compile(
+                        wl, down=down, sweeps=sweeps, fixpoint=fixpoint,
+                        scan_backend=scan_backend, **kw)
                 entries.append((cfg, down is not None, users, rate,
                                 compiled))
 
@@ -283,4 +414,5 @@ def plan_capacity(configs: Sequence[ClusterConfig],
         n_events=program.n_flat, sweeps_used=used,
         converged=bool(converged) and all(
             c.converged for *_, c in entries),
-        order_unstable=unstable)
+        order_unstable=unstable,
+        warm_hits=int(warm_hits), warm_attempts=int(warm_attempts))

@@ -87,13 +87,14 @@ class Cluster:
     def compile(self, workload: ClusterWorkload, *,
                 down: Optional[int] = None, sweeps: int = 512,
                 fixpoint: str = "loop", scan_backend: str = "auto",
-                max_refine: int = MAX_REFINE) -> CompiledCluster:
+                max_refine: int = MAX_REFINE,
+                comp0=None) -> CompiledCluster:
         ops = workload.build(self.spec.n_gateways)
         graph = build_graph(self.spec, ops, qd=workload.qd, down=down,
                             seed=workload.seed)
         return compile_graph(graph, sweeps=sweeps, fixpoint=fixpoint,
                              scan_backend=scan_backend,
-                             max_refine=max_refine)
+                             max_refine=max_refine, comp0=comp0)
 
     def run(self, workload: ClusterWorkload, *, down: Optional[int] = None,
             sweeps: int = 512, fixpoint: str = "loop",

@@ -99,6 +99,11 @@ class ClusterGraph:
     op_tail: np.ndarray                 # (n_ops,) completion event per op
     servers: List[StorageServer]
     plans: List[OpPlan]
+    #: (n_ops, 2) contiguous [start, end) event slice of each op, in
+    #: plan order — the warm-ladder slot mapping joins rungs on these.
+    op_slices: Optional[np.ndarray] = None
+    #: (client, per-client slot) identity of each op, in plan order.
+    op_keys: Optional[List[Tuple[int, int]]] = None
 
     @property
     def n(self) -> int:
@@ -170,9 +175,16 @@ def build_graph(spec: ClusterSpec, ops: Sequence[ObjectOp], *, qd: int = 1,
     ack_gates: List[Tuple[int, int, int]] = []    # (server, stx_ev, hi)
     read_gates: List[Tuple[int, int, int]] = []   # (server, dread_ev, hi)
     insert_evs: Dict[int, List[int]] = {r: [] for r in range(spec.n_servers)}
+    op_slices = np.zeros((len(ops), 2), dtype=np.int64)
+    op_keys: List[Tuple[int, int]] = [(0, 0)] * len(ops)
+    client_slot: Dict[int, int] = {}
 
     for plan in plans:
         op = plan.op
+        slot = client_slot.get(op.client, 0)
+        client_slot[op.client] = slot + 1
+        op_keys[op.seq] = (int(op.client), slot)
+        op_slices[op.seq, 0] = len(b.issue)
         g = op.gateway
         head = b.ev("gw_cpu", gw.cpu_us, issue=op.issue,
                     res=f"gw_cpu/g{g}", cap=gw.cpu_cores)
@@ -243,6 +255,7 @@ def build_graph(spec: ClusterSpec, ops: Sequence[ObjectOp], *, qd: int = 1,
                 chain = [src, gtx, lnk, srx, scpu, *mid, stx, lnk2, grx,
                          join]
             b.paths.setdefault(f"flow/s{sh.slot}", []).append(chain)
+        op_slices[op.seq, 1] = len(b.issue)
 
     # Closed loop: client op i waits for the ack of its op i - qd, and
     # clients prepare requests in program order (op i's gateway stage
@@ -294,7 +307,8 @@ def build_graph(spec: ClusterSpec, ops: Sequence[ObjectOp], *, qd: int = 1,
         edges=b.edges,
         resources=[b.resources[k] for k in sorted(b.resources)],
         op_head=op_head, op_tail=op_tail,
-        servers=servers, plans=list(plans))
+        servers=servers, plans=list(plans),
+        op_slices=op_slices, op_keys=op_keys)
 
 
 def edge_families(edges: Sequence[Tuple[str, int, int]]
@@ -366,6 +380,15 @@ class CompiledCluster:
     comp: np.ndarray          # completions from the final refinement solve
     sweeps_used: int
     converged: bool
+    #: True when a caller-provided ``comp0`` warm start survived the
+    #: tightness verification (False: cold, or verification fell back).
+    warm_start_used: bool = False
+    #: Final replayed FIFO pop-order chains (one list per contended
+    #: unordered resource, in ``graph.resources`` order).  On a reused
+    #: graph (identical slot indexing — e.g. a rate ladder's re-stamped
+    #: rung) they are a valid ``chains0`` first iterate for the next
+    #: :func:`compile_graph` call.
+    fifo_chains: Optional[Tuple[Tuple[np.ndarray, ...], ...]] = None
 
     def op_latencies(self) -> np.ndarray:
         """Per-object-op latency: join completion minus the instant the
@@ -382,11 +405,113 @@ def op_latencies(graph: ClusterGraph, comp: np.ndarray) -> np.ndarray:
     return comp[graph.op_tail] - ready[graph.op_head]
 
 
+def _warm_refined_solve(program: ChainProgram, graph: ClusterGraph,
+                        boot_comp: np.ndarray, cand: np.ndarray, *,
+                        sweeps: int, fixpoint: str, scan_backend: str,
+                        max_rounds: int = 4):
+    """One refined solve warm-started from ``max(boot_comp, cand)``,
+    repaired slot-wise until provably exact.
+
+    The candidate is not a certified lower bound, so the warm result is
+    checked for tightness; any unjustified slot is necessarily one the
+    candidate pushed above the least fixpoint (``boot_comp`` is a
+    certified lower bound and converged scatters are justified by their
+    predecessors), so those slots are dropped from the candidate and
+    the solve re-runs.  Each round either ends tight — the positive
+    service times make a tight point *the* least fixpoint, identical to
+    a cold solve — or strictly shrinks the candidate.  After
+    ``max_rounds`` (or a non-converged solve) the candidate is
+    abandoned and the solve falls back to ``boot_comp`` alone.
+
+    Returns ``(comp, used, converged, cand | None, warm_ok)``; the
+    returned candidate keeps the pruning, so later refinement
+    iterations skip the slots that already proved anomalous.
+    """
+    from repro.core.chain_program import unjustified_slots
+    for rnd in range(max_rounds):
+        comp, used, converged = solve_program(
+            program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
+            scan_backend=scan_backend, warn=False,
+            comp0=np.maximum(boot_comp, cand))
+        if not converged:
+            break
+        bad = unjustified_slots(program, graph.svc, comp)
+        if bad.size == 0:
+            return comp, used, converged, cand, True
+        cand = np.array(cand, copy=True)
+        cand[bad] = -np.inf
+        if graph.op_slices is not None and len(graph.op_slices):
+            # An anomalous slot rarely travels alone — its op's whole
+            # chain is usually inflated with it, and unjustified_slots
+            # only exposes the chain's *sources* (the rest is "justified"
+            # by an inflated predecessor), which would unravel one slot
+            # per round.  Dropping the enclosing op slices collapses the
+            # repair to one or two rounds.
+            starts = graph.op_slices[:, 0]
+            op = np.searchsorted(starts, bad, side="right") - 1
+            op = op[(op >= 0) & (bad < graph.op_slices[op, 1])]
+            for s, e in graph.op_slices[np.unique(op)]:
+                cand[s:e] = -np.inf
+        if rnd >= 1:
+            # Anomalies surviving a surgical round cascade: pruning an
+            # inflated op exposes the next op it was justifying, two
+            # slots at a time, past any round budget.  A converged
+            # ``comp`` is a topological potential (service times are
+            # positive, so every chain edge strictly increases it), so
+            # the whole cascade lives at or above the earliest anomaly
+            # — drop every candidate entry there in one cut.
+            cand[cand >= comp[bad].min()] = -np.inf
+    comp, used, converged = solve_program(
+        program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
+        scan_backend=scan_backend, warn=False, comp0=boot_comp)
+    return comp, used, converged, None, False
+
+
 def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
                   fixpoint: str = "loop", scan_backend: str = "auto",
-                  max_refine: int = MAX_REFINE) -> CompiledCluster:
+                  max_refine: int = MAX_REFINE,
+                  comp0: Optional[np.ndarray] = None,
+                  order_seed: Optional[np.ndarray] = None,
+                  chains0: Optional[Sequence[Sequence[np.ndarray]]] = None
+                  ) -> CompiledCluster:
     """Lower a cluster graph to a ChainProgram, refining FIFO pop
-    orders to their fixpoint (see module docstring)."""
+    orders to their fixpoint (see module docstring).
+
+    ``comp0`` carries candidate completion lower bounds (e.g. the
+    previous capacity-ladder rung's completions mapped onto this
+    graph's events).  The bootstrap solve ignores them — the DAG-only
+    fixpoint sits *below* any contended solution, so a previous rung's
+    completions would overshoot it — and the candidate instead seeds
+    every *refined* solve as ``max(boot_comp, comp0)``.  Ladder rungs
+    are not provably monotone (a bigger rung's greedy schedule can
+    anomalously finish an op earlier), so each warm refined solve is
+    accepted only once it is provably tight: every service time is
+    positive, so a tight point is *the* least fixpoint, identical to
+    the cold result.  Anomalous candidate slots are pruned and
+    re-solved rather than discarding the whole candidate (see
+    :func:`_warm_refined_solve`); ``warm_start_used`` reports whether
+    the candidate survived.
+
+    ``order_seed`` (completion estimates on this graph's slots, any
+    coverage, exactness not required) seeds the initial FIFO pop-order
+    estimate so refinement starts near the previous rung's replay
+    orders instead of the contention-free bootstrap's.  It biases only
+    the refinement *trajectory*, never a solved value.
+    Refinement solves always warm-start from at least the bootstrap
+    completions: the DAG-only constraints are a subset of every refined
+    program's, so the bootstrap fixpoint is a valid lower bound.
+
+    ``chains0`` (a previous compile's ``fifo_chains`` on a graph with
+    identical slot indexing, e.g. the re-stamped previous rung of a
+    rate ladder) replaces the first iteration's *replayed* chains
+    outright, starting the trajectory at the previous rung's actual
+    pop orders instead of a time-scale estimate of them (and skipping
+    one replay walk).  When the rungs pop identically refinement
+    confirms stability in two iterations; when they drift the usual
+    replay loop takes over.  Like ``order_seed`` it biases only the
+    trajectory: the accepted program still has to replay its own
+    chains verbatim.
+    """
     static: List[Tuple[str, List[np.ndarray]]] = []
     for label, chains in graph.paths:
         static.append((label, [np.asarray(c, dtype=np.int64)
@@ -415,15 +540,32 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
     # FIFO chains from index order instead can thread a chain against
     # the DAG and make the first refinement solve cyclic (divergent).
     base = build_program(graph.issue, graph.svc, static)
+    cand = None if comp0 is None else np.array(comp0, dtype=np.float64)
+    warm_used = False
     comp, used, converged = solve_program(
         base, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
         scan_backend=scan_backend, warn=False)
-    ready = _graph_ready(graph, dag, comp)
+    boot_comp = comp
+    # ``order_seed`` seeds the *initial* pop-order estimate: the
+    # previous rung's completions rank the contended events far closer
+    # to this rung's replay fixpoint than the contention-free bootstrap
+    # does, so refinement starts within a hop or two of its fixpoint
+    # instead of re-discovering the queue orders from scratch.  The
+    # loop's stability criterion (replayed chains reproduce themselves)
+    # is unchanged — the seed only moves the starting point.  Slots the
+    # seed does not cover fall back to the bootstrap completions.
+    ready = _graph_ready(graph, dag, comp if order_seed is None
+                         else np.maximum(comp, order_seed))
     prev_chains: Optional[List[List[np.ndarray]]] = None
     program: ChainProgram = base
     refine_used, order_stable = 0, not fifo_res
     for it in range(max_refine + 1):
-        rchains = [_fifo_replay_chains(r, graph, ready) for r in fifo_res]
+        if it == 0 and chains0 is not None and len(chains0) == len(fifo_res):
+            rchains = [[np.asarray(c, dtype=np.int64) for c in ch]
+                       for ch in chains0]
+        else:
+            rchains = [_fifo_replay_chains(r, graph, ready)
+                       for r in fifo_res]
         if prev_chains is not None and \
                 all(_chains_equal(a, p)
                     for a, p in zip(rchains, prev_chains)):
@@ -435,9 +577,15 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
         program = build_program(
             graph.issue, graph.svc, fams,
             exact=False, multiclass_pools=multiclass)
-        comp, used, converged = solve_program(
-            program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
-            scan_backend=scan_backend, warn=False)
+        if cand is None:
+            comp, used, converged = solve_program(
+                program, graph.svc, sweeps=sweeps, fixpoint=fixpoint,
+                scan_backend=scan_backend, warn=False, comp0=boot_comp)
+        else:
+            comp, used, converged, cand, ok = _warm_refined_solve(
+                program, graph, boot_comp, cand, sweeps=sweeps,
+                fixpoint=fixpoint, scan_backend=scan_backend)
+            warm_used = warm_used or ok
         refine_used = it + 1
         ready = _graph_ready(graph, dag, comp)
         prev_chains = rchains
@@ -460,4 +608,6 @@ def compile_graph(graph: ClusterGraph, *, sweeps: int = 512,
         program, refine_used=refine_used, order_stable=order_stable,
         exact=bool(order_stable), unstable_pools=tuple(unstable))
     return CompiledCluster(graph=graph, program=program, comp=comp,
-                           sweeps_used=used, converged=bool(converged))
+                           sweeps_used=used, converged=bool(converged),
+                           warm_start_used=warm_used,
+                           fifo_chains=tuple(tuple(ch) for ch in rchains))

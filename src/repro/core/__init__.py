@@ -18,14 +18,17 @@ from .engine import (  # noqa: F401
     zone_sequential_completions, zone_sequential_completions_batched,
 )
 from .chain_program import (  # noqa: F401
-    ChainProgram, CompileStats, build_program, clear_program_cache,
-    compile_fleet_program, compile_program, concat_programs, extend_program,
-    force_layout, last_compile_stats, program_cache_dir, program_cache_info,
+    ChainProgram, CompileStats, SolveStats, block_adjacency, build_program,
+    clear_program_cache, compile_fleet_program, compile_program,
+    concat_programs, extend_program, force_layout, last_compile_stats,
+    last_solve_stats, program_cache_dir, program_cache_info,
     program_chains, set_program_cache_dir, solve_program,
+    unjustified_slots, verify_fixpoint,
 )
 from .shard import (  # noqa: F401
-    Shard, ShardedProgram, clear_shard_plans, shard_program,
-    solve_program_sharded,
+    Shard, ShardedProgram, Window, WindowedProgram, clear_shard_plans,
+    shard_program, solve_program_sharded, solve_program_windowed,
+    window_program,
 )
 from .conventional import ConventionalSSD, zns_write_pressure_series  # noqa: F401
 from .metrics import (  # noqa: F401

@@ -315,6 +315,41 @@ def last_compile_stats() -> CompileStats:
     return _LAST_STATS
 
 
+@dataclasses.dataclass(frozen=True)
+class SolveStats:
+    """Telemetry of the most recent :func:`solve_program` call.
+
+    ``active_blocks[s]`` counts the family blocks the active-set
+    Gauss–Seidel driver actually gathered/scanned during sweep ``s``
+    (converged blocks whose inputs did not change are dropped from the
+    sweep entirely); ``residuals[s]`` is the largest completion-time
+    increase any event saw during that sweep (``0.0`` on a pure
+    verification sweep).  Kernel and sharded drivers report the sweep
+    count and leave the per-sweep trajectories empty.
+    """
+
+    driver: str = "loop"
+    sweeps: int = 0
+    converged: bool = True
+    n_blocks: int = 0
+    active_blocks: Tuple[int, ...] = ()
+    residuals: Tuple[float, ...] = ()
+
+    def to_json(self) -> Dict[str, object]:
+        return {"driver": self.driver, "sweeps": self.sweeps,
+                "converged": self.converged, "n_blocks": self.n_blocks,
+                "active_blocks": list(self.active_blocks),
+                "residuals": list(self.residuals)}
+
+
+_LAST_SOLVE_STATS = SolveStats()
+
+
+def last_solve_stats() -> SolveStats:
+    """Stats of the most recent :func:`solve_program` call."""
+    return _LAST_SOLVE_STATS
+
+
 def set_program_cache_dir(path: Optional[str]) -> Optional[str]:
     """Set (or with ``None`` disable) the persistent program cache.
 
@@ -1226,6 +1261,59 @@ def _posloop_scan(cur: np.ndarray, svc: np.ndarray) -> np.ndarray:
     return out
 
 
+def block_adjacency(program: ChainProgram) -> np.ndarray:
+    """Symmetric ``(F, F)`` bool matrix: ``adj[i, j]`` iff family blocks
+    ``i`` and ``j`` gather overlapping flat-event slots (dead/padding
+    slot excluded), i.e. a scatter by one can change the other's inputs.
+
+    This is the dependency structure the active-set sweep driver uses to
+    decide which converged blocks a moving block re-activates.  The
+    diagonal is False: a block is at its own fixpoint immediately after
+    its scan, so it never re-activates itself.  Memoized on the program
+    (frozen but not slotted, same trick as the trace digest memo).
+    """
+    cached = getattr(program, "_adjacency_memo", None)
+    if cached is not None:
+        return cached
+    nf = len(program.families)
+    adj = np.zeros((nf, nf), dtype=bool)
+    if nf > 1:
+        dead = program.n_flat
+        parts, owners = [], []
+        for f, blk in enumerate(program.families):
+            flat = blk.gidx.ravel()
+            flat = flat[flat != dead]
+            parts.append(flat)
+            owners.append(np.full(len(flat), f, dtype=np.int32))
+        idx = np.concatenate(parts)
+        own = np.concatenate(owners)
+        order = np.argsort(idx, kind="stable")
+        idx, own = idx[order], own[order]
+        # Runs of equal index mark every pair of owning blocks adjacent.
+        # An index appears at most once per block, so run length <= F and
+        # comparing each shift k < F covers all within-run pairs.
+        for k in range(1, nf):
+            same = idx[k:] == idx[:-k]
+            if not same.any():
+                break
+            a, b = own[k:][same], own[:-k][same]
+            adj[a, b] = True
+            adj[b, a] = True
+        np.fill_diagonal(adj, False)
+    try:
+        object.__setattr__(program, "_adjacency_memo", adj)
+    except Exception:        # pragma: no cover - slotted subclass
+        pass
+    return adj
+
+
+#: Benchmark baseline escape hatch: ``False`` restores the pre-active-set
+#: full sweep loop (every block gathered + edge-checked every sweep).
+#: The active-set path is bit-identical; this exists only so
+#: ``benchmarks/mega_fleet.py`` can measure the win.
+_ACTIVE_SET = True
+
+
 def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
                  sweeps: int, scan_backend: str,
                  comp0: Optional[np.ndarray] = None
@@ -1238,9 +1326,40 @@ def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
     svc_mats = [svc_ext[blk.gidx] for blk in program.families]
     used, converged = 0, True
     budget = max(int(sweeps), 1)
+    nf = len(program.families)
+    adj = block_adjacency(program)
+    # Active-set sweeps: a block is processed only while "dirty" — its
+    # gather slots may have changed since its last fixpoint check.  A
+    # moving block re-dirties its neighbours (shared flat slots): those
+    # later in the sweep order immediately (Gauss–Seidel sees the update
+    # this sweep, exactly as the full loop would), earlier ones for the
+    # next sweep.  Skipping a clean block is bit-identical to checking
+    # it: its inputs did not change, so the edge check would find no
+    # violated lanes and fall through.
+    dirty_now = np.ones(nf, dtype=bool)
+    dirty_next = np.zeros(nf, dtype=bool)
+    active_counts: List[int] = []
+    residuals: List[float] = []
     for s in range(budget):
+        if not _ACTIVE_SET:
+            # benchmark baseline: pre-active-set full sweeps (every
+            # block gathered + edge-checked every sweep)
+            dirty_now[:] = True
+        if not dirty_now.any():
+            # Nothing can have moved since every block's last check:
+            # this sweep is the full loop's no-op verification sweep.
+            used, converged = s + 1, True
+            active_counts.append(0)
+            residuals.append(0.0)
+            break
         moved = False
-        for blk, svc_m in zip(program.families, svc_mats):
+        n_active = 0
+        residual = 0.0
+        dirty_next[:] = False
+        for f, (blk, svc_m) in enumerate(zip(program.families, svc_mats)):
+            if not dirty_now[f]:
+                continue
+            n_active += 1
             cur = comp[blk.gidx]
             cols = blk.layout == "cols"
             if s == 0 and not warm:
@@ -1299,11 +1418,35 @@ def _solve_numpy(program: ChainProgram, svc_flat: np.ndarray, *,
             # slots all collapse onto the dead slot, reset below.
             comp[gidx_s] = upd
             comp[-1] = -np.inf
+            # Residual + dirty propagation.  A violated lane strictly
+            # increases at least one slot, so any processed block in the
+            # check path moved; the first full sweep measures movement
+            # directly (padding masked — it gathers the -inf sentinel).
+            nonpad = gidx_s != len(comp) - 1
+            diff = upd[nonpad] - cur_s[nonpad]
+            if diff.size:
+                residual = max(residual, float(diff.max()))
+            blk_moved = bool((diff > 0.0).any()) if full and s == 0 \
+                else True
+            if blk_moved and nf > 1:
+                nbr = adj[f]
+                # neighbours later in the sweep order see this scatter
+                # within the current sweep (Gauss–Seidel), earlier ones
+                # on the next sweep.
+                dirty_now[f + 1:] |= nbr[f + 1:]
+                dirty_next[:f] |= nbr[:f]
         used = s + 1
+        active_counts.append(n_active)
+        residuals.append(residual)
+        dirty_now, dirty_next = dirty_next, dirty_now
         if not moved:
             converged = True
             break
         converged = False
+    global _LAST_SOLVE_STATS
+    _LAST_SOLVE_STATS = SolveStats(
+        driver="loop", sweeps=used, converged=converged, n_blocks=nf,
+        active_blocks=tuple(active_counts), residuals=tuple(residuals))
     return comp[:-1], used, converged
 
 
@@ -1318,8 +1461,78 @@ def _solve_kernel(program: ChainProgram, svc_flat: np.ndarray, *,
     comp, used, converged = kops.zns_fixpoint(
         init, svc_flat,
         tuple(blk.rows_view() for blk in program.families),
-        sweeps=max(int(sweeps), 1), impl=impl)
+        sweeps=max(int(sweeps), 1), impl=impl,
+        adj=block_adjacency(program))
     return (np.asarray(comp, dtype=np.float64), int(used), bool(converged))
+
+
+def verify_fixpoint(program: ChainProgram, svc_flat: np.ndarray,
+                    comp: np.ndarray, *, rtol: float = 1e-12,
+                    atol: float = 1e-9) -> bool:
+    """True iff ``comp`` is (to tolerance) the *least* fixpoint of the
+    program at ``svc_flat`` — i.e. every event is **tight**: its
+    completion equals the max of its own init (``issue + svc``) and its
+    incoming chain-edge lower bounds (``comp[pred] + svc``), with no
+    slack.
+
+    A converged solve warm-started from a valid lower bound is always
+    tight; one warm-started from an *invalid* ``comp0`` (e.g. a
+    previous capacity-ladder rung whose greedy schedule anomalously
+    completed some op later) keeps the unjustified value and fails this
+    check — the caller then falls back to a cold solve.  The tightness
+    ⇒ least-fixpoint argument needs every justifying chain to
+    terminate, which strictly positive service times guarantee; with
+    any ``svc <= 0`` the check conservatively returns False.
+    """
+    if program.n_flat == 0:
+        return True
+    svc = np.asarray(svc_flat, dtype=np.float64)
+    if not np.all(svc > 0.0):
+        return False
+    comp = np.asarray(comp, dtype=np.float64)
+    target = _fixpoint_target(program, svc, comp)
+    tol = np.maximum(np.abs(target) * rtol, atol)
+    return bool(np.all(np.abs(comp - target) <= tol))
+
+
+def _fixpoint_target(program: ChainProgram, svc: np.ndarray,
+                     comp: np.ndarray) -> np.ndarray:
+    """Per-event justification: ``max(issue + svc, comp[pred] + svc)``
+    over every incoming chain edge — what each completion *should* be
+    if the rest of ``comp`` is taken as given."""
+    ext = np.append(comp, -np.inf)
+    svc_ext = np.append(svc, 0.0)
+    text = np.append(program.issue_flat + svc, -np.inf)
+    for blk in program.families:
+        g, h = blk.gidx, blk.heads
+        if blk.layout == "cols":
+            pred, me, hh = g[:-1], g[1:], h[1:]
+        else:
+            pred, me, hh = g[:, :-1], g[:, 1:], h[:, 1:]
+        mask = ~hh
+        cand = ext[pred[mask]] + svc_ext[me[mask]]
+        np.maximum.at(text, me[mask], cand)
+    return text[:-1]
+
+
+def unjustified_slots(program: ChainProgram, svc_flat: np.ndarray,
+                      comp: np.ndarray, *, rtol: float = 1e-12,
+                      atol: float = 1e-9) -> np.ndarray:
+    """Indices whose completion exceeds its justification (init and
+    every incoming edge) — the slots an invalid warm start ``comp0``
+    pushed above the least fixpoint.  In a *converged* warm solve only
+    candidate-dominated slots can be unjustified (everything else is
+    explained by its predecessors), so a caller can drop exactly these
+    slots from the candidate and re-solve — each round either ends
+    tight or strictly shrinks the candidate (see
+    :func:`repro.cluster.compiler.compile_graph`)."""
+    if program.n_flat == 0:
+        return np.zeros(0, dtype=np.int64)
+    svc = np.asarray(svc_flat, dtype=np.float64)
+    comp = np.asarray(comp, dtype=np.float64)
+    target = _fixpoint_target(program, svc, comp)
+    tol = np.maximum(np.abs(target) * rtol, atol)
+    return np.nonzero(comp - target > tol)[0]
 
 
 def _auto_sharded() -> bool:
@@ -1360,9 +1573,14 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
     entry axis across shards (:mod:`repro.core.shard`) — the mesh
     executor spreads them over local jax devices via ``shard_map``,
     the host executor groups them into signature buckets with
-    independent convergence; ``"auto"`` picks the kernel on TPU, the
+    independent convergence; ``"windowed"`` partitions the *request*
+    axis of a single mega-entry into issue-time windows solved as a
+    pipeline (:func:`repro.core.shard.solve_program_windowed`) with
+    per-window bounded memory; ``"auto"`` picks the kernel on TPU, the
     sharded driver on multi-chip accelerator hosts for multi-device
-    programs, and the float64 loop elsewhere.  When the sweep budget
+    programs, and the float64 loop elsewhere.  Every driver records
+    :class:`SolveStats` telemetry, readable via
+    :func:`last_solve_stats`.  When the sweep budget
     is exhausted while constraints are still moving the result is a
     documented under-approximation -- a :class:`RuntimeWarning` is
     emitted unless ``warn=False``.
@@ -1398,14 +1616,24 @@ def solve_program(program: ChainProgram, svc_flat: np.ndarray, *,
             program, np.asarray(svc_flat, dtype=np.float64),
             sweeps=sweeps, scan_backend=scan_backend, comp0=comp0,
             warn=False)
+    elif fixpoint == "windowed":
+        from .shard import solve_program_windowed
+        comp, used, converged = solve_program_windowed(
+            program, np.asarray(svc_flat, dtype=np.float64),
+            sweeps=sweeps, scan_backend=scan_backend, comp0=comp0,
+            warn=False)
     elif fixpoint in ("xla", "pallas", "interpret"):
         comp, used, converged = _solve_kernel(
             program, np.asarray(svc_flat, dtype=np.float64),
             sweeps=sweeps, impl=fixpoint, comp0=comp0)
+        global _LAST_SOLVE_STATS
+        _LAST_SOLVE_STATS = SolveStats(
+            driver=fixpoint, sweeps=used, converged=converged,
+            n_blocks=len(program.families))
     else:
         raise ValueError(f"unknown fixpoint driver {fixpoint!r}; expected "
-                         f"auto | loop | sharded | xla | pallas | "
-                         f"interpret")
+                         f"auto | loop | sharded | windowed | xla | "
+                         f"pallas | interpret")
     if not converged and warn:
         warnings.warn(
             f"chain-program fixpoint exhausted its sweep budget "

@@ -43,7 +43,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .chain_program import CompileStats, last_compile_stats
+from .chain_program import CompileStats, SolveStats, last_compile_stats, \
+    last_solve_stats
 from .conventional import ConventionalSSD, PressureResult, \
     zns_write_pressure_series
 from .engine import (
@@ -97,6 +98,12 @@ class RunResult:
     #: to compile vs solve with ``compile_stats.lowering_ms`` and the
     #: cache ``hits``/``misses``.
     compile_stats: Optional["CompileStats"] = None
+    #: Solver telemetry of the fixpoint that produced this result
+    #: (:func:`repro.core.last_solve_stats` snapshot; ``None`` for the
+    #: event engine).  ``solve_stats.sweeps`` is the sweep count,
+    #: ``active_blocks``/``residuals`` trace the active-set driver's
+    #: per-sweep work and convergence trajectory.
+    solve_stats: Optional["SolveStats"] = None
     _stats_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
 
@@ -378,8 +385,9 @@ class ZnsDevice:
         sim = _BACKENDS[name](trace, self.spec, self.lat, seed=seed,
                               jitter=jitter, **backend_opts)
         stats = last_compile_stats() if name == "vectorized" else None
+        sstats = last_solve_stats() if name == "vectorized" else None
         return RunResult(trace=trace, sim=sim, backend=name,
-                         compile_stats=stats)
+                         compile_stats=stats, solve_stats=sstats)
 
     # -- closed-form model (Figs. 3/4/8) ------------------------------------
     def steady_state(self, op: OpType, size_bytes: int, *, qd: int = 1,
@@ -501,6 +509,10 @@ class FleetRunResult:
     #: (``None`` on non-vectorized backends); see
     #: :attr:`RunResult.compile_stats`.
     compile_stats: Optional["CompileStats"] = None
+    #: Solver telemetry of the fleet's one fused fixpoint solve
+    #: (``None`` on non-vectorized backends); see
+    #: :attr:`RunResult.solve_stats`.
+    solve_stats: Optional["SolveStats"] = None
 
     def __len__(self) -> int:
         return len(self.results)
@@ -709,24 +721,50 @@ class DeviceFleet:
         # The device-axis-batched engine implements the built-in
         # "vectorized" backend; a third-party replacement of that name is
         # honored by falling back to the per-device loop.
-        stats = None
+        stats = sstats = None
         if name == "vectorized" and _BACKENDS[name] is _vectorized_backend:
             sims = simulate_fleet_vectorized(
                 traces, self.specs, [d.lat for d in self.devices],
                 seeds=list(seeds), jitter=jitter, **backend_opts)
             stats = last_compile_stats()
+            sstats = last_solve_stats()
         else:
-            sims = [
-                _BACKENDS[name](traces[i], self.devices[i].spec,
-                                self.devices[i].lat, seed=seeds[i],
-                                jitter=jitter, **backend_opts)
-                for i in range(self.n)
-            ]
+            # The per-device loop would emit one sweep-budget
+            # RuntimeWarning per device with no budget context; collapse
+            # them into a single fleet-level warning naming the
+            # offending entries (other warnings pass through untouched).
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                sims = [
+                    _BACKENDS[name](traces[i], self.devices[i].spec,
+                                    self.devices[i].lat, seed=seeds[i],
+                                    jitter=jitter, **backend_opts)
+                    for i in range(self.n)
+                ]
+            budget_hit = False
+            for w in caught:
+                if issubclass(w.category, RuntimeWarning) \
+                        and "sweep budget" in str(w.message):
+                    budget_hit = True
+                    continue
+                warnings.warn_explicit(w.message, w.category, w.filename,
+                                       w.lineno)
+            if budget_hit:
+                bad = [i for i in range(self.n) if not sims[i].converged]
+                used = [sims[i].sweeps_used for i in bad]
+                budget = backend_opts.get("sweeps", "the default")
+                warnings.warn(
+                    f"fleet sweep budget exhausted on {len(bad)} of "
+                    f"{self.n} devices (indices {bad}; sweeps_used="
+                    f"{used}, budget={budget}); those completions are "
+                    f"a lower bound. Raise sweeps= or inspect "
+                    f"FleetRunResult.converged.",
+                    RuntimeWarning, stacklevel=2)
         results = tuple(RunResult(trace=traces[i], sim=sims[i], backend=name,
-                                  compile_stats=stats)
+                                  compile_stats=stats, solve_stats=sstats)
                         for i in range(self.n))
         return FleetRunResult(results=results, backend=name,
-                              compile_stats=stats)
+                              compile_stats=stats, solve_stats=sstats)
 
     def sequential_completions(self, issues, svcs, segment_starts, *,
                                backend: str = "auto") -> List[np.ndarray]:

@@ -21,6 +21,7 @@ apply family blocks in the same canonical order.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -69,6 +70,36 @@ def length_buckets(lens: Sequence[int], *, ratio: float = BUCKET_RATIO
             buckets.append([i])
             base = max(lens[i], 1)
     return [sorted(b) for b in buckets]
+
+
+def _warn_fleet_budget(program, svc_flat: np.ndarray, comp: np.ndarray,
+                       used: int, budget: int) -> None:
+    """One aggregated sweep-budget RuntimeWarning per fleet solve.
+
+    The per-device warning of :func:`repro.core.solve_program` would
+    fire once per fleet call anyway (one fused solve), but it names no
+    devices; this one lists the entry indices whose completions are
+    still moving (found by one Bellman-target evaluation of the final
+    iterate) together with the sweeps used and the budget.
+    """
+    from . import chain_program as cp
+    target = cp._fixpoint_target(program, np.asarray(svc_flat), comp)
+    moving = np.nonzero(target > comp + 1e-9)[0]
+    if len(moving):
+        edges = np.asarray(program.offsets + (program.n_flat,))
+        devs = np.unique(np.searchsorted(edges, moving, side="right") - 1)
+        detail = (f"completions are still moving on {len(devs)} of "
+                  f"{program.n_devices} entries (indices {devs.tolist()}) "
+                  f"and are a lower bound there")
+    else:
+        detail = ("the final iterate verifies as the fixpoint post-hoc "
+                  "on every entry; the budget only precluded in-solve "
+                  "verification")
+    warnings.warn(
+        f"fleet chain-program fixpoint exhausted its sweep budget "
+        f"(sweeps_used={used}, budget={budget}): {detail}. Raise "
+        f"sweeps= or inspect FleetRunResult.converged.",
+        RuntimeWarning, stacklevel=3)
 
 
 def simulate_fleet_vectorized(traces: Sequence[Trace],
@@ -130,7 +161,9 @@ def simulate_fleet_vectorized(traces: Sequence[Trace],
                      for b in range(B)]
     comp, used, converged = cp.solve_program(
         program, svc_flat, sweeps=sweeps, scan_backend=scan_backend,
-        fixpoint=fixpoint)
+        fixpoint=fixpoint, warn=False)
+    if not converged:
+        _warn_fleet_budget(program, svc_flat, comp, used, sweeps)
     results = cp.unpack_results(program, comp, svc_flat, svc_origs)
     # the compile-time exactness claim binds to the refinement service
     # vector; a jittered solve of a jitter-free program (or a seed

@@ -42,8 +42,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .chain_program import (ChainProgram, _blocks_from_chains,
-                            _solve_numpy, program_chains)
+import hashlib
+
+from .chain_program import (ChainProgram, SolveStats, _blocks_from_chains,
+                            _solve_numpy, block_adjacency, program_chains)
 
 #: Environment override for the sharded executor: ``mesh`` | ``host``
 #: force one, ``off`` disables auto-sharding in ``solve_program``.
@@ -244,23 +246,57 @@ def shard_program(program: ChainProgram, *,
 
 
 # ---------------------------------------------------------------------------
-# Plan cache (keyed by program object identity, like the compile cache)
+# Plan cache: program object identity fast path + content-digest
+# fallback (mirrors the lowering cache), so rebuilding an identical
+# program — e.g. across capacity-ladder rungs — still hits.
 # ---------------------------------------------------------------------------
 _PLAN_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _PLAN_CACHE_MAX = 4
 
 
+def _program_digest(program: ChainProgram) -> bytes:
+    """Content digest of a compiled program's solve-relevant structure
+    (flat size, entry offsets, family tensors), memoized on the program
+    object — same trick as the trace digest memo."""
+    cached = getattr(program, "_shard_digest_memo", None)
+    if cached is not None:
+        return cached
+    h = hashlib.sha1()
+    h.update(np.int64(program.n_flat).tobytes())
+    h.update(np.asarray(program.offsets, dtype=np.int64).tobytes())
+    for blk in program.families:
+        h.update(blk.label.encode())
+        h.update(blk.layout.encode())
+        h.update(np.ascontiguousarray(blk.gidx).tobytes())
+        h.update(np.ascontiguousarray(blk.heads).tobytes())
+    d = h.digest()
+    try:
+        object.__setattr__(program, "_shard_digest_memo", d)
+    except Exception:        # pragma: no cover - slotted subclass
+        pass
+    return d
+
+
 def _plan(program: ChainProgram,
           n_shards: Optional[int]) -> ShardedProgram:
-    key = (id(program), n_shards)
-    hit = _PLAN_CACHE.get(key)
+    ikey = ("id", id(program), n_shards)
+    hit = _PLAN_CACHE.get(ikey)
     if hit is not None and hit[0] is program:
-        _PLAN_CACHE.move_to_end(key)
+        _PLAN_CACHE.move_to_end(ikey)
         return hit[1]
-    sp = shard_program(program, n_shards=n_shards)
-    _PLAN_CACHE[key] = (program, sp)
-    _PLAN_CACHE.move_to_end(key)
-    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+    dkey = ("sha", _program_digest(program), n_shards)
+    hit = _PLAN_CACHE.get(dkey)
+    if hit is not None:
+        sp = hit[1]
+        _PLAN_CACHE.move_to_end(dkey)
+    else:
+        sp = shard_program(program, n_shards=n_shards)
+        _PLAN_CACHE[dkey] = (None, sp)
+    # (re)bind the identity fast path for this object; the digest entry
+    # keeps serving identical rebuilds after this object dies.
+    _PLAN_CACHE[ikey] = (program, sp)
+    _PLAN_CACHE.move_to_end(ikey)
+    while len(_PLAN_CACHE) > 2 * _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)
     return sp
 
@@ -292,6 +328,13 @@ def _solve_host(program: ChainProgram, svc: np.ndarray, *, sweeps: int,
                 ) -> Tuple[np.ndarray, int, bool]:
     plan = _plan(program, None)
     if len(plan.shards) <= 1:
+        if program.n_flat >= WINDOW_AUTO_MIN:
+            # homogeneous mega-entry: the entry axis gives no
+            # parallelism, but the request axis still pipelines into
+            # issue-time windows with bounded per-window memory
+            return solve_program_windowed(
+                program, svc, sweeps=sweeps, scan_backend=scan_backend,
+                comp0=comp0, warn=False)
         # one signature group: the grouped solve IS the base solve
         return _solve_numpy(program, svc, sweeps=sweeps,
                             scan_backend=scan_backend, comp0=comp0)
@@ -337,7 +380,15 @@ def _mesh_static(plan: ShardedProgram, ndev: int) -> dict:
                 gidx[s, :g.shape[0], :g.shape[1]] = g
                 heads[s, :h.shape[0], :h.shape[1]] = h
         blocks.append((gidx, heads))
-    cached = {"S": S, "n_max": n_max, "blocks": tuple(blocks)}
+    # per-shard block adjacency for the in-kernel active-set mask,
+    # padded to the stacked family-slot count (padding slots gather
+    # only the dead index, so they are adjacent to nothing)
+    adjS = np.zeros((S, F, F), dtype=bool)
+    for s, sh in enumerate(shards):
+        a = block_adjacency(sh.program)
+        adjS[s, :a.shape[0], :a.shape[1]] = a
+    cached = {"S": S, "n_max": n_max, "blocks": tuple(blocks),
+              "adj": adjS}
     plan._mesh_cache[ndev] = cached
     return cached
 
@@ -368,7 +419,8 @@ def _solve_mesh(program: ChainProgram, svc: np.ndarray, *, sweeps: int,
         svcS[s, :len(v)] = v
     with enable_x64():
         comp_s, used_s, conv_s = zns_fixpoint_sharded(
-            init, svcS, st["blocks"], sweeps=sweeps, devices=devices)
+            init, svcS, st["blocks"], sweeps=sweeps, devices=devices,
+            adj=st["adj"])
         comp_s = np.asarray(comp_s, dtype=np.float64)
         used_s = np.asarray(used_s)
         conv_s = np.asarray(conv_s)
@@ -418,9 +470,223 @@ def solve_program_sharded(program: ChainProgram, svc_flat, *,
         comp, used, conv = _solve_mesh(program, svc, sweeps=sweeps,
                                        scan_backend=scan_backend,
                                        comp0=comp0)
+    import repro.core.chain_program as _cp
+    _cp._LAST_SOLVE_STATS = SolveStats(
+        driver=f"sharded/{executor}", sweeps=used, converged=conv,
+        n_blocks=len(program.families))
     if not conv and warn:
         warnings.warn(
             f"sharded chain-program fixpoint exhausted its sweep budget "
             f"({sweeps}) while still moving; completions are a lower "
             f"bound.", RuntimeWarning, stacklevel=2)
+    return comp, used, conv
+
+
+# ---------------------------------------------------------------------------
+# Intra-entry time-window sharding
+# ---------------------------------------------------------------------------
+#: Default issue-time window size (events) when ``n_windows`` is not
+#: given: large enough that per-window solver overhead vanishes, small
+#: enough that the per-window float64 scratch stays ~tens of MB.
+WINDOW_TARGET_EVENTS = 1 << 18
+
+#: ``solve_program_sharded`` auto-windows a degenerate 1-shard plan
+#: only above this event count — smaller programs keep the documented
+#: bit-identical numpy fallback.
+WINDOW_AUTO_MIN = 2_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """One issue-time window of a windowed program.
+
+    ``perm`` maps the window's flat event order back to base flat
+    indices; ``bnd_local``/``bnd_pred`` are the pipeline boundary: the
+    window-local index of each chain-segment head whose predecessor
+    completed in an earlier window, and that predecessor's base flat
+    index.  The boundary condition ``comp0[head] >= comp[pred] +
+    svc[head]`` re-creates the cut chain edge exactly (the fixpoint is
+    monotone from below, so a lower bound installed at init holds
+    permanently)."""
+
+    program: ChainProgram
+    perm: np.ndarray
+    bnd_local: np.ndarray
+    bnd_pred: np.ndarray
+
+
+@dataclasses.dataclass
+class WindowedProgram:
+    """A partition of one program's request axis into issue-time
+    windows, solved as a pipelined sequence (earlier windows feed later
+    ones their completion frontier)."""
+
+    base: ChainProgram
+    windows: Tuple[Window, ...]
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.windows)
+
+    def __repr__(self) -> str:
+        return (f"WindowedProgram(windows={len(self.windows)}, "
+                f"events={[len(w.perm) for w in self.windows]})")
+
+
+def window_program(program: ChainProgram, *,
+                   n_windows: Optional[int] = None,
+                   window_events: Optional[int] = None
+                   ) -> WindowedProgram:
+    """Partition a program's request axis into issue-time windows.
+
+    Events are bucketed by issue-time rank into ``n_windows`` (default
+    ``ceil(n_flat / window_events)``) near-equal windows, then the
+    window index is repaired to be non-decreasing along every chain of
+    every family (a running max per chain, iterated across families to
+    a fixpoint) — so every cross-window chain edge points forward and
+    the pipelined solve is exact.  Each window becomes a sub-program
+    over its own events plus a boundary list of (segment head,
+    upstream predecessor) pairs.  Results are memoized on the program
+    per window count.
+    """
+    n = program.n_flat
+    if n_windows is None:
+        we = int(window_events) if window_events else WINDOW_TARGET_EVENTS
+        n_windows = -(-n // we) if n else 1
+    k = max(min(int(n_windows), n if n else 1), 1)
+    memo = getattr(program, "_window_memo", None)
+    if memo is not None and k in memo:
+        return memo[k]
+
+    w = np.empty(n, dtype=np.int64)
+    order = np.argsort(program.issue_flat, kind="stable")
+    w[order] = (np.arange(n, dtype=np.int64) * k) // max(n, 1)
+    chains_by_label = program_chains(program)
+    all_chains = [c for chs in chains_by_label.values() for c in chs]
+    # monotone repair: raising an event's window can break another
+    # chain through that event, so iterate to a fixpoint (bounded by
+    # k passes; in practice 1-2)
+    changed = True
+    while changed:
+        changed = False
+        for c in all_chains:
+            wc = w[c]
+            acc = np.maximum.accumulate(wc)
+            if (acc != wc).any():
+                w[c] = acc
+                changed = True
+
+    perms = [np.nonzero(w == j)[0] for j in range(k)]
+    loc = np.empty(n, dtype=np.int64)
+    for p in perms:
+        loc[p] = np.arange(len(p))
+    chain_maps: List["OrderedDict[str, list]"] = \
+        [OrderedDict() for _ in range(k)]
+    bnds: List[Tuple[list, list]] = [([], []) for _ in range(k)]
+    for label, chs in chains_by_label.items():
+        for c in chs:
+            wc = w[c]
+            cut = np.nonzero(np.diff(wc))[0] + 1
+            starts = np.concatenate(([0], cut))
+            ends = np.concatenate((cut, [len(c)]))
+            for a, b in zip(starts, ends):
+                j = int(wc[a])
+                chain_maps[j].setdefault(label, []).append(loc[c[a:b]])
+                if a > 0:
+                    bnds[j][0].append(int(loc[c[a]]))
+                    bnds[j][1].append(int(c[a - 1]))
+
+    windows = []
+    for j in range(k):
+        p = perms[j]
+        m = len(p)
+        oj = np.arange(m, dtype=np.int64)
+        sub = ChainProgram(
+            n_flat=m, offsets=(0,), orders=(oj,), invs=(oj,),
+            issue_flat=program.issue_flat[p],
+            svc0_flat=program.svc0_flat[p],
+            families=_blocks_from_chains(chain_maps[j], m),
+            exact=program.exact,
+            multiclass_pools=program.multiclass_pools,
+            refine_used=program.refine_used,
+            order_stable=program.order_stable,
+            unstable_pools=program.unstable_pools,
+            svc_seeds=program.svc_seeds)
+        windows.append(Window(
+            program=sub, perm=p,
+            bnd_local=np.asarray(bnds[j][0], dtype=np.int64),
+            bnd_pred=np.asarray(bnds[j][1], dtype=np.int64)))
+    wp = WindowedProgram(base=program, windows=tuple(windows))
+    if memo is None:
+        memo = {}
+        try:
+            object.__setattr__(program, "_window_memo", memo)
+        except Exception:    # pragma: no cover - slotted subclass
+            pass
+    memo[k] = wp
+    return wp
+
+
+def solve_program_windowed(program: ChainProgram, svc_flat, *,
+                           sweeps: int = 8, scan_backend: str = "auto",
+                           comp0: Optional[np.ndarray] = None,
+                           n_windows: Optional[int] = None,
+                           window_events: Optional[int] = None,
+                           warn: bool = True
+                           ) -> Tuple[np.ndarray, int, bool]:
+    """Solve one program as a pipeline of issue-time windows.
+
+    Window ``j+1`` starts from window ``j``'s completion frontier: each
+    cut chain edge becomes a ``comp0`` lower bound ``comp[pred] +
+    svc[head]`` on its downstream head, which the monotone fixpoint
+    enforces permanently — so the pipelined result equals the full
+    solve (and hence the event oracle, when ``program.exact``) to
+    float64 fixpoint tolerance, while the solver's per-sweep scratch
+    (gathers + the per-family float64 service matrices) is bounded by
+    the largest window instead of the whole program.  ``sweeps`` is a
+    per-window budget; ``sweeps_used`` reports the hungriest window.
+    """
+    svc = np.asarray(svc_flat, dtype=np.float64)
+    if program.n_flat == 0:
+        return np.zeros(0, dtype=np.float64), 0, True
+    if len(svc) != program.n_flat:
+        raise ValueError(f"service vector has {len(svc)} entries for a "
+                         f"{program.n_flat}-request program")
+    if comp0 is not None and len(comp0) != program.n_flat:
+        raise ValueError(f"comp0 has {len(comp0)} entries for a "
+                         f"{program.n_flat}-request program")
+    wp = window_program(program, n_windows=n_windows,
+                        window_events=window_events)
+    if wp.n_windows <= 1:
+        return _solve_numpy(program, svc, sweeps=sweeps,
+                            scan_backend=scan_backend, comp0=comp0)
+    comp = np.empty(program.n_flat, dtype=np.float64)
+    used, conv = 0, True
+    for win in wp.windows:
+        p = win.perm
+        if not len(p):
+            continue
+        svc_w = svc[p]
+        lb = None
+        if comp0 is not None:
+            lb = np.asarray(comp0, dtype=np.float64)[p].copy()
+        if len(win.bnd_local):
+            if lb is None:
+                lb = np.full(len(p), -np.inf)
+            np.maximum.at(lb, win.bnd_local,
+                          comp[win.bnd_pred] + svc_w[win.bnd_local])
+        c, u, ok = _solve_numpy(win.program, svc_w, sweeps=sweeps,
+                                scan_backend=scan_backend, comp0=lb)
+        comp[p] = c
+        used = max(used, u)
+        conv = conv and ok
+    import repro.core.chain_program as _cp
+    _cp._LAST_SOLVE_STATS = SolveStats(
+        driver="windowed", sweeps=used, converged=conv,
+        n_blocks=len(program.families))
+    if not conv and warn:
+        warnings.warn(
+            f"windowed chain-program fixpoint exhausted its per-window "
+            f"sweep budget ({sweeps}) while still moving; completions "
+            f"are a lower bound.", RuntimeWarning, stacklevel=2)
     return comp, used, conv

@@ -172,7 +172,8 @@ def _cmd_cluster(args) -> int:
         configs, ladder, base_spec=base_spec, workload=workload,
         slo_us=args.slo_ms * 1e3, rate_ladder=rate_ladder,
         degraded=not args.no_degraded,
-        sweeps=args.sweeps, max_refine=args.max_refine)
+        sweeps=args.sweeps, max_refine=args.max_refine,
+        warm_ladder=args.warm_ladder)
 
     os.makedirs(args.out, exist_ok=True)
     json_path = os.path.join(args.out, "capacity.json")
@@ -207,6 +208,10 @@ def _cmd_cluster(args) -> int:
     print(f"\n{report.n_programs} programs ({report.n_events} events) in "
           f"one fleet-level solve ({report.sweeps_used} sweeps, SLO "
           f"p99 <= {report.slo_us / 1e3:g}ms); results: {json_path}")
+    if args.warm_ladder:
+        print(f"warm ladder: {report.warm_hits}/{report.warm_attempts} "
+              f"rung seeds verified tight (misses fall back cold; curves "
+              f"are identical either way)")
     if report.order_unstable:
         print("WARNING: pop-order refinement budget exhausted for "
               f"{', '.join(report.order_unstable)} — their curves are "
@@ -269,6 +274,11 @@ def main(argv=None) -> int:
     clu.add_argument("--no-degraded", action="store_true",
                      help="skip the one-server-down rows")
     clu.add_argument("--sweeps", type=int, default=512)
+    clu.add_argument("--warm-ladder", action="store_true",
+                     help="thread each rung's completions into the next "
+                          "rung's fixpoint seed (per-op content-digest "
+                          "slot mapping; bit-identical curves, pays on "
+                          "--rates ladders)")
     clu.add_argument("--max-refine", type=int, default=None,
                      help="pop-order refinement budget per config "
                           "(default: compiler MAX_REFINE)")

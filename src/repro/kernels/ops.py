@@ -88,23 +88,30 @@ def zns_event_scan_batched(issue, svc, seg_start, *, impl: str | None = None):
 
 
 def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
-                 impl: str | None = None):
+                 impl: str | None = None, adj=None):
     """Fused chain-program fixpoint: all sweeps × family blocks in one
     compiled call (the ``ZnsDevice``/``DeviceFleet`` vectorized-backend
     hot loop on TPU).
 
     ``blocks``: tuple of ``(gidx, heads)`` padded index/head matrices
-    from :class:`repro.core.ChainProgram`.  Returns ``(completions,
-    sweeps_used, converged)``.  ``impl='xla'`` runs the jitted
-    ``lax.while_loop`` form, ``'pallas'``/``'interpret'`` the Pallas
-    kernel (compiled / interpret mode).
+    from :class:`repro.core.ChainProgram`.  ``adj`` is the symmetric
+    block-adjacency matrix (``repro.core.chain_program.block_adjacency``)
+    driving the in-kernel active-set mask; computed from the blocks when
+    omitted.  Returns ``(completions, sweeps_used, converged)``.
+    ``impl='xla'`` runs the jitted ``lax.while_loop`` form,
+    ``'pallas'``/``'interpret'`` the Pallas kernel (compiled / interpret
+    mode).
     """
+    from .zns_fixpoint import blocks_adjacency
     impl = _resolve(impl)
     blocks = tuple((jnp.asarray(g, dtype=jnp.int32), jnp.asarray(h, bool))
                    for g, h in blocks)
     comp0 = jnp.asarray(comp0, dtype=jnp.float32)
     svc = jnp.asarray(svc, dtype=jnp.float32)
+    if adj is None:
+        adj = blocks_adjacency([g for g, _ in blocks], comp0.shape[0])
+    adj = jnp.asarray(adj, dtype=bool)
     if impl == "xla":
-        return _zns_fixpoint_xla(comp0, svc, blocks, sweeps=int(sweeps))
-    return _zns_fixpoint(comp0, svc, blocks, sweeps=int(sweeps),
+        return _zns_fixpoint_xla(comp0, svc, blocks, adj, sweeps=int(sweeps))
+    return _zns_fixpoint(comp0, svc, blocks, adj, sweeps=int(sweeps),
                          interpret=(impl == "interpret"))

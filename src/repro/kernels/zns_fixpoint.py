@@ -98,57 +98,113 @@ def _rows_maxplus(start, svc, heads):
     return b
 
 
-def _fixpoint_core(comp_ext, svc_ext, blocks, sweeps: int):
+def blocks_adjacency(gidxs, n: int) -> np.ndarray:
+    """Symmetric ``(F, F)`` bool block adjacency from raw gather-index
+    matrices: ``adj[i, j]`` iff blocks ``i`` and ``j`` address a common
+    flat slot (padding at ``n`` excluded).  Diagonal False — a block is
+    at its own fixpoint right after its scan.  Host-side numpy; the
+    kernels consume the result as a traced bool array."""
+    nf = len(gidxs)
+    adj = np.zeros((nf, nf), dtype=bool)
+    if nf > 1:
+        parts, owners = [], []
+        for f, g in enumerate(gidxs):
+            flat = np.asarray(g).ravel()
+            flat = flat[flat != n]
+            parts.append(flat)
+            owners.append(np.full(len(flat), f, dtype=np.int32))
+        idx = np.concatenate(parts)
+        own = np.concatenate(owners)
+        order = np.argsort(idx, kind="stable")
+        idx, own = idx[order], own[order]
+        # an index appears at most once per block, so runs of equal
+        # index are <= F long; shifted compares cover all in-run pairs
+        for k in range(1, nf):
+            same = idx[k:] == idx[:-k]
+            if not same.any():
+                break
+            adj[own[k:][same], own[:-k][same]] = True
+            adj[own[:-k][same], own[k:][same]] = True
+        np.fill_diagonal(adj, False)
+    return adj
+
+
+def _fixpoint_core(comp_ext, svc_ext, blocks, sweeps: int, adj=None):
     """``lax.while_loop`` fixpoint shared by the XLA and Pallas forms.
 
     ``comp_ext``/``svc_ext``: flat ``(n + 1,)`` vectors (dead slot
-    last); ``blocks``: static tuple of ``(gidx, heads)`` pairs.
-    Returns ``(comp_ext, sweeps_used, moved)``.
+    last); ``blocks``: static tuple of ``(gidx, heads)`` pairs; ``adj``
+    the ``(F, F)`` bool block adjacency driving the active-set mask (a
+    converged block costs one predicate evaluation instead of a full
+    gather + scan until a neighbour's scatter re-activates it; ``None``
+    keeps every block active every sweep).  Returns ``(comp_ext,
+    sweeps_used, moved)`` where ``moved`` means "blocks still active at
+    exit" — its negation is the convergence flag.
     """
 
     dead = comp_ext.shape[0] - 1
     dt = comp_ext.dtype
     ninf = _pad_value(dt)
     rtol, atol = _moved_tol(dt)
+    nf = len(blocks)
+    if adj is None:
+        adj = jnp.zeros((nf, nf), dtype=bool) if nf == 0 \
+            else jnp.ones((nf, nf), bool) & ~jnp.eye(nf, dtype=bool)
+    later_f = [jnp.arange(nf) > f for f in range(nf)]
 
     def body(carry):
-        comp, s, _ = carry
-        moved = jnp.bool_(False)
-        for gidx, heads in blocks:
-            svc_m = svc_ext[gidx]
-            cur = comp[gidx]
-            out = _rows_maxplus(cur - svc_m, svc_m, heads)
-            # padding gathers the sentinel, which would trivially
-            # satisfy the relative-progress test — mask it out
-            moved = moved | jnp.any(
-                (out > cur * (1.0 + rtol) + atol)
-                & (gidx < dead))
-            comp = comp.at[gidx].max(jnp.maximum(cur, out))
-            comp = comp.at[-1].set(ninf)
-        return comp, s + 1, moved
+        comp, s, active = carry
+        act_now = active
+        act_next = jnp.zeros_like(active)
+        for f, (gidx, heads) in enumerate(blocks):
 
-    return jax.lax.while_loop(
-        lambda c: (c[1] < sweeps) & c[2],
-        body, (comp_ext, jnp.int32(0), jnp.bool_(True)))
+            def run(comp, gidx=gidx, heads=heads):
+                svc_m = svc_ext[gidx]
+                cur = comp[gidx]
+                out = _rows_maxplus(cur - svc_m, svc_m, heads)
+                # padding gathers the sentinel, which would trivially
+                # satisfy the relative-progress test — mask it out
+                mv = jnp.any((out > cur * (1.0 + rtol) + atol)
+                             & (gidx < dead))
+                comp = comp.at[gidx].max(jnp.maximum(cur, out))
+                comp = comp.at[-1].set(ninf)
+                return comp, mv
+
+            comp, mv = jax.lax.cond(
+                act_now[f], run, lambda c: (c, jnp.bool_(False)), comp)
+            # a moving block re-activates neighbours: later blocks see
+            # the scatter within this sweep (Gauss–Seidel order),
+            # earlier ones on the next sweep
+            nbr = adj[f] & mv
+            act_now = act_now | (nbr & later_f[f])
+            act_next = act_next | (nbr & ~later_f[f])
+        return comp, s + 1, act_next
+
+    comp, used, active = jax.lax.while_loop(
+        lambda c: (c[1] < sweeps) & jnp.any(c[2]),
+        body, (comp_ext, jnp.int32(0), jnp.ones((max(nf, 1),), bool)))
+    return comp, used, jnp.any(active)
 
 
 @functools.partial(jax.jit, static_argnames=("sweeps",))
-def zns_fixpoint_xla(comp0, svc, blocks, *, sweeps: int = 8):
+def zns_fixpoint_xla(comp0, svc, blocks, adj=None, *, sweeps: int = 8):
     """Fused fixpoint as a jitted ``lax.while_loop`` (no Pallas).
 
     ``comp0``: (n,) initial completions (``issue + svc``); ``svc``: (n,)
     service times; ``blocks``: tuple of ``(gidx int32 (R, L), heads
-    bool (R, L))`` with padding indexed at ``n``.  Returns ``(comp (n,),
-    sweeps_used, converged)``.
+    bool (R, L))`` with padding indexed at ``n``; ``adj``: optional
+    ``(F, F)`` bool block adjacency for the active-set mask.  Returns
+    ``(comp (n,), sweeps_used, converged)``.
     """
     comp_ext = jnp.append(comp0.astype(jnp.float32),
                           jnp.float32(NEG_INF))
     svc_ext = jnp.append(svc.astype(jnp.float32), jnp.float32(0.0))
-    comp, used, moved = _fixpoint_core(comp_ext, svc_ext, blocks, sweeps)
+    comp, used, moved = _fixpoint_core(comp_ext, svc_ext, blocks, sweeps,
+                                       adj)
     return comp[:-1], used, ~moved
 
 
-def _kernel(comp_ref, svc_ref, *rest, sweeps: int):
+def _kernel(comp_ref, svc_ref, adj_ref, *rest, sweeps: int):
     """Single-program Pallas kernel: the whole fixpoint in-kernel.
 
     ``rest`` interleaves the per-block ``gidx``/``heads`` refs and ends
@@ -159,25 +215,28 @@ def _kernel(comp_ref, svc_ref, *rest, sweeps: int):
     blocks = tuple((block_refs[i][...], block_refs[i + 1][...])
                    for i in range(0, len(block_refs), 2))
     comp, used, moved = _fixpoint_core(
-        comp_ref[...], svc_ref[...], blocks, sweeps)
+        comp_ref[...], svc_ref[...], blocks, sweeps, adj_ref[...])
     out_refs[0][...] = comp
     out_refs[1][...] = used[None]
     out_refs[2][...] = (~moved)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
-def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
+def zns_fixpoint(comp0, svc, blocks, adj=None, *, sweeps: int = 8,
                  interpret: bool = True):
     """Pallas form of :func:`zns_fixpoint_xla` (one ``pallas_call``).
 
     The flat completion vector stays resident across all sweeps ×
-    family blocks; sweep iteration and the early-exit ``moved``
-    reduction run in-kernel.
+    family blocks; sweep iteration, the active-set block mask, and the
+    early-exit ``moved`` reduction run in-kernel.
     """
     n = comp0.shape[0]
+    nf = len(blocks)
     comp_ext = jnp.append(comp0.astype(jnp.float32), jnp.float32(NEG_INF))
     svc_ext = jnp.append(svc.astype(jnp.float32), jnp.float32(0.0))
-    ins = [comp_ext, svc_ext]
+    if adj is None:
+        adj = jnp.ones((nf, nf), bool) & ~jnp.eye(nf, dtype=bool)
+    ins = [comp_ext, svc_ext, jnp.asarray(adj, dtype=bool)]
     for gidx, heads in blocks:
         ins += [gidx.astype(jnp.int32), heads.astype(bool)]
     comp, used, conv = pl.pallas_call(
@@ -195,23 +254,24 @@ def zns_fixpoint(comp0, svc, blocks, *, sweeps: int = 8,
 # ---------------------------------------------------------------------------
 # Mesh-sharded form: independent per-shard fixpoints across local chips
 # ---------------------------------------------------------------------------
-def _stack_solve(comp0, svc, *flat_blocks, sweeps: int):
+def _stack_solve(comp0, svc, adj, *flat_blocks, sweeps: int):
     """Solve a stack of independent shard fixpoints (leading axis).
 
-    ``comp0``/``svc``: ``(s, n_max + 1)``; ``flat_blocks`` interleaves
-    ``gidx (s, R_f, L_f)`` / ``heads (s, R_f, L_f)`` per family slot.
+    ``comp0``/``svc``: ``(s, n_max + 1)``; ``adj``: ``(s, F, F)``
+    per-shard block adjacency; ``flat_blocks`` interleaves ``gidx
+    (s, R_f, L_f)`` / ``heads (s, R_f, L_f)`` per family slot.
     ``lax.map`` runs one ``while_loop`` per shard, so every shard keeps
     its own trip count (early convergence on one shard never pays for a
     slower sibling's sweeps).
     """
 
     def one(args):
-        c, v, *bl = args
+        c, v, a, *bl = args
         blocks = tuple((bl[i], bl[i + 1]) for i in range(0, len(bl), 2))
-        comp, used, moved = _fixpoint_core(c, v, blocks, sweeps)
+        comp, used, moved = _fixpoint_core(c, v, blocks, sweeps, a)
         return comp, used, ~moved
 
-    return jax.lax.map(one, (comp0, svc) + tuple(flat_blocks))
+    return jax.lax.map(one, (comp0, svc, adj) + tuple(flat_blocks))
 
 
 @functools.lru_cache(maxsize=8)
@@ -239,7 +299,7 @@ def _sharded_fn(devices, n_arrays: int, sweeps: int):
 
 
 def zns_fixpoint_sharded(comp0, svc, blocks, *, sweeps: int = 8,
-                         devices=None):
+                         devices=None, adj=None):
     """Shard independent fixpoints across every local chip.
 
     ``comp0``/``svc``: ``(S, n_max + 1)`` stacked extended vectors (one
@@ -263,5 +323,11 @@ def zns_fixpoint_sharded(comp0, svc, blocks, *, sweeps: int = 8,
     flat = []
     for gidx, heads in blocks:
         flat += [gidx, heads]
-    fn = _sharded_fn(devices, 2 + len(flat), max(int(sweeps), 1))
-    return fn(comp0, svc, *flat)
+    if adj is None:
+        n_max = comp0.shape[1] - 1
+        adj = np.stack([
+            blocks_adjacency([np.asarray(g)[s] for g, _ in blocks], n_max)
+            for s in range(comp0.shape[0])]) if blocks else \
+            np.zeros((comp0.shape[0], 0, 0), dtype=bool)
+    fn = _sharded_fn(devices, 3 + len(flat), max(int(sweeps), 1))
+    return fn(comp0, svc, np.asarray(adj, dtype=bool), *flat)

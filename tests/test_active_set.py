@@ -1,0 +1,295 @@
+"""Active-set sweeps + windowed pipeline solver (PR 10).
+
+The acceptance bar is the ISSUE gate: the active-set Gauss-Seidel
+driver and the issue-time-window pipeline must equal the full solve to
+1e-12 across pool and open-loop workloads, both block layouts, the
+host and mesh shard executors, with and without a ``comp0`` warm
+start.  Equality is checked against an *independent* Bellman (Jacobi)
+reference that never touches the production sweep loop, plus the
+:func:`repro.core.chain_program.verify_fixpoint` tightness oracle.
+
+Rides along: regression tests for the PR 10 satellites — the
+shard-plan digest cache key, ``unjustified_slots``, and warm-started
+capacity ladders (bit-identical curves + warm-hit accounting).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    KiB, WorkloadSpec, ZnsDevice, ZNSDeviceSpec, clear_shard_plans,
+    compile_program, force_layout, last_solve_stats, solve_program,
+    solve_program_sharded, solve_program_windowed, window_program,
+)
+from repro.core import chain_program as cp
+from repro.core import shard as shard_mod
+from strategies import HAVE_HYPOTHESIS
+
+SPEC = ZNSDeviceSpec()
+
+
+def _compile(wl: WorkloadSpec, *, seed: int = 0) -> tuple:
+    dev = ZnsDevice(SPEC)
+    trace = wl.build()
+    prog = compile_program(trace, dev.spec, dev.lat, cache=False, seed=seed)
+    return prog, prog.svc0_flat
+
+
+def _jacobi_reference(program, svc, *, max_iters: int = 100_000):
+    """Independent fixpoint: iterate the Bellman target to convergence.
+
+    Uses only :func:`cp._fixpoint_target` (a one-shot vectorized
+    justification evaluation), never the production sweep loop — Jacobi
+    from the same ``issue + svc`` lower bound converges to the same
+    least fixpoint the Gauss-Seidel driver must find.
+    """
+    comp = program.issue_flat + svc
+    for _ in range(max_iters):
+        nxt = np.maximum(comp, cp._fixpoint_target(program, svc, comp))
+        if np.array_equal(nxt, comp):
+            return comp
+        comp = nxt
+    raise AssertionError("Jacobi reference did not converge")
+
+
+def _assert_close(got, ref):
+    np.testing.assert_allclose(got, ref, rtol=1e-12, atol=1e-9)
+
+
+def _check_all_drivers(prog, svc, *, warm: bool):
+    ref = _jacobi_reference(prog, svc)
+    comp0 = None
+    if warm:
+        # a valid (partial) lower bound: the solved completions of the
+        # first half of the events, -inf elsewhere
+        comp0 = np.full(prog.n_flat, -np.inf)
+        comp0[: prog.n_flat // 2] = ref[: prog.n_flat // 2]
+    for layout in ("rows", "cols"):
+        p = force_layout(prog, layout)
+        got, used, conv = solve_program(p, svc, sweeps=512,
+                                        fixpoint="loop", comp0=comp0)
+        assert conv
+        _assert_close(got, ref)
+        assert cp.verify_fixpoint(p, svc, got)
+        st = last_solve_stats()
+        assert st.driver == "loop" and st.sweeps == used
+        assert len(st.active_blocks) == used == len(st.residuals)
+        # the final sweep is a verification pass: nothing moved
+        assert st.residuals[-1] == 0.0
+        # windowed pipeline, a handful of window counts
+        for k in (2, 3, 7):
+            gw, _, cw = solve_program_windowed(p, svc, sweeps=512,
+                                               n_windows=k, comp0=comp0)
+            assert cw
+            _assert_close(gw, ref)
+    return ref
+
+
+# -- hypothesis sweep: pool + open-loop workloads ----------------------------
+if HAVE_HYPOTHESIS:
+    import hypothesis.strategies as st_h
+    from hypothesis import given, settings
+
+    from strategies import open_loop_workload_specs, pool_workload_specs
+
+    @given(pool_workload_specs(), st_h.booleans())
+    @settings(max_examples=15, deadline=None)
+    def test_active_set_and_windowed_match_reference_pool(wl, warm):
+        prog, svc = _compile(wl)
+        _check_all_drivers(prog, svc, warm=warm)
+
+    @given(open_loop_workload_specs(), st_h.booleans())
+    @settings(max_examples=15, deadline=None)
+    def test_active_set_and_windowed_match_reference_open_loop(wl, warm):
+        prog, svc = _compile(wl)
+        _check_all_drivers(prog, svc, warm=warm)
+
+
+# -- deterministic acceptance cases (run even without hypothesis) ------------
+def _pool_wl(threads=4, qd=2, n=60):
+    wl = WorkloadSpec()
+    for t in range(threads):
+        wl = wl.appends(n=n, size=8 * KiB, qd=qd, zone=t * 4, nzones=4)
+    return wl
+
+
+def test_active_set_matches_reference_deterministic():
+    prog, svc = _compile(_pool_wl())
+    _check_all_drivers(prog, svc, warm=False)
+    _check_all_drivers(prog, svc, warm=True)
+
+
+def test_active_set_skips_converged_blocks():
+    prog, svc = _compile(_pool_wl(threads=6, n=80))
+    _, used, conv = solve_program(prog, svc, sweeps=512, fixpoint="loop")
+    st = last_solve_stats()
+    assert conv and used >= 2
+    # sweep 1 touches every block; converged blocks drop out of later
+    # sweeps (a dirty block whose edge check passes stays counted but
+    # costs O(L), not a scan), so the set shrinks by the final sweep
+    assert st.active_blocks[0] == st.n_blocks
+    assert st.active_blocks[-1] < st.n_blocks
+    assert st.residuals[-1] == 0.0
+
+
+def test_windowed_solve_matches_sharded_host_executor():
+    from repro.core import DeviceFleet, compile_fleet_program
+    wls = [_pool_wl(threads=3, n=40),
+           WorkloadSpec().writes(n=150, qd=4, zone=7),
+           WorkloadSpec().reads(n=200, size=4 * KiB, qd=4, nzones=64)]
+    traces = [w.build() for w in wls]
+    devs = [ZnsDevice(SPEC) for _ in traces]
+    prog = compile_fleet_program(traces, [d.spec for d in devs],
+                                 [d.lat for d in devs], cache=False)
+    svc = prog.svc0_flat
+    ref = _jacobi_reference(prog, svc)
+    hosted, _, ch = solve_program_sharded(prog, svc, sweeps=512,
+                                          executor="host")
+    assert ch
+    _assert_close(hosted, ref)
+    for k in (2, 5):
+        gw, _, cw = solve_program_windowed(prog, svc, sweeps=512,
+                                           n_windows=k)
+        assert cw
+        _assert_close(gw, ref)
+
+
+MESH_WINDOW_SCRIPT = textwrap.dedent("""
+    import os
+    import numpy as np
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2")
+    import jax
+    assert len(jax.local_devices()) == 2, jax.local_devices()
+    from repro.core import (KiB, WorkloadSpec, ZnsDevice, ZNSDeviceSpec,
+                            compile_fleet_program, solve_program,
+                            solve_program_sharded, solve_program_windowed)
+    wl = WorkloadSpec()
+    for t in range(3):
+        wl = wl.appends(n=40, size=8 * KiB, qd=2, zone=t * 4, nzones=4)
+    wls = [wl, WorkloadSpec().writes(n=120, qd=4, zone=7)]
+    traces = [w.build() for w in wls]
+    devs = [ZnsDevice(ZNSDeviceSpec()) for _ in traces]
+    prog = compile_fleet_program(traces, [d.spec for d in devs],
+                                 [d.lat for d in devs], cache=False)
+    ref, _, cv = solve_program(prog, prog.svc0_flat, sweeps=512,
+                               fixpoint="loop")
+    assert cv
+    meshed, _, cm = solve_program_sharded(prog, prog.svc0_flat, sweeps=512,
+                                          executor="mesh")
+    assert cm
+    rel = np.max(np.abs(meshed - ref) / np.maximum(np.abs(ref), 1.0))
+    assert rel <= 1e-12, rel
+    gw, _, cw = solve_program_windowed(prog, prog.svc0_flat, sweeps=512,
+                                       n_windows=3)
+    assert cw
+    relw = np.max(np.abs(gw - ref) / np.maximum(np.abs(ref), 1.0))
+    assert relw <= 1e-12, relw
+    print("MESH_WINDOW_OK", rel, relw)
+""")
+
+
+def test_mesh_executor_and_windowed_agree_on_virtual_devices():
+    pytest.importorskip("jax")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), os.pardir, "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", MESH_WINDOW_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "MESH_WINDOW_OK" in proc.stdout
+
+
+def test_window_partition_is_exact_and_bounded():
+    prog, svc = _compile(_pool_wl(threads=5, n=100))
+    wp = window_program(prog, n_windows=4)
+    # every event lands in exactly one window
+    allp = np.concatenate([w.perm for w in wp.windows])
+    assert len(allp) == prog.n_flat
+    assert len(np.unique(allp)) == prog.n_flat
+    # cross-window chain edges only point forward (pipeline order)
+    for j, w in enumerate(wp.windows):
+        assert (w.bnd_pred < prog.n_flat).all()
+        for pred in w.bnd_pred:
+            upstream = next(i for i, ww in enumerate(wp.windows)
+                            if pred in set(ww.perm.tolist()))
+            assert upstream < j
+
+
+# -- satellite: unjustified_slots / verify_fixpoint oracle -------------------
+def test_unjustified_slots_flags_overshoot_only():
+    prog, svc = _compile(_pool_wl(threads=3, n=40))
+    comp, _, conv = solve_program(prog, svc, sweeps=512, fixpoint="loop")
+    assert conv
+    assert cp.verify_fixpoint(prog, svc, comp)
+    assert len(cp.unjustified_slots(prog, svc, comp)) == 0
+    # inflate one slot: it (and only it) becomes unjustified
+    bad = comp.copy()
+    k = prog.n_flat // 2
+    bad[k] += 1e3
+    slots = cp.unjustified_slots(prog, svc, bad)
+    assert k in slots
+    assert not cp.verify_fixpoint(prog, svc, bad)
+    # an under-approximation is justified everywhere (it is a lower
+    # bound, not an overshoot) but is not a fixpoint
+    lower = prog.issue_flat + svc
+    if not np.allclose(lower, comp):
+        assert not cp.verify_fixpoint(prog, svc, lower)
+
+
+# -- satellite: shard-plan LRU digest fallback key ---------------------------
+def test_shard_plan_cache_hits_on_equal_content_distinct_objects():
+    clear_shard_plans()
+    wl = _pool_wl(threads=3, n=40)
+    prog_a, _ = _compile(wl)
+    prog_b, _ = _compile(wl)
+    assert prog_a is not prog_b
+    assert shard_mod._program_digest(prog_a) == \
+        shard_mod._program_digest(prog_b)
+    plan_a = shard_mod._plan(prog_a, 2)
+    plan_b = shard_mod._plan(prog_b, 2)
+    # the digest fallback key resolves the same plan for an equal-content
+    # program that misses the object-identity fast path (a rebuilt
+    # capacity-ladder rung must not replan)
+    assert plan_b is plan_a
+    # identity fast path still hits for the same object
+    assert shard_mod._plan(prog_a, 2) is plan_a
+    # and the executors route through the cached plan
+    ref, _, _ = solve_program_sharded(prog_a, prog_a.svc0_flat, sweeps=64,
+                                      executor="host")
+    got, _, _ = solve_program_sharded(prog_b, prog_b.svc0_flat, sweeps=64,
+                                      executor="host")
+    np.testing.assert_array_equal(got, ref)
+    clear_shard_plans()
+
+
+# -- satellite: warm-started capacity ladders --------------------------------
+@pytest.mark.slow
+def test_warm_ladder_is_bit_identical_and_hits():
+    from repro.cluster import (ClusterConfig, ClusterSpec, ClusterWorkload,
+                               erasure, plan_capacity)
+    configs = [ClusterConfig(scheme=erasure(2, 1), placement="round-robin")]
+    spec = ClusterSpec(n_gateways=1, n_servers=4, scheme=erasure(2, 1))
+    wl = ClusterWorkload(n_users=6, ops_per_user=4,
+                         object_bytes=1 << 20, get_fraction=0.5)
+    kw = dict(base_spec=spec, workload=wl, degraded=False,
+              rate_ladder=[5000.0, 10000.0, 20000.0], sweeps=512)
+    cold = plan_capacity(configs, [6], warm_ladder=False, **kw)
+    warm = plan_capacity(configs, [6], warm_ladder=True, **kw)
+    assert warm.warm_attempts >= 1
+    assert warm.warm_hits == warm.warm_attempts        # all seeds verified
+    # identical curves: the warm start is an optimization, not a model
+    for cc, cw in zip(cold.curves, warm.curves):
+        assert cc.config.name == cw.config.name
+        assert len(cc.points) == len(cw.points)
+        for pc, pw in zip(cc.points, cw.points):
+            assert pc.lat.p99_us == pw.lat.p99_us
+            assert pc.slo_violation_rate == pw.slo_violation_rate
+        assert cc.load_at_slo == cw.load_at_slo

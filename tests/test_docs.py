@@ -102,3 +102,35 @@ def test_readme_quickstart_mentions_experiments_cli():
     text = (REPO / "README.md").read_text(encoding="utf-8")
     assert "python -m repro.experiments run --all" in text
     assert "docs/observations.md" in text
+
+
+def test_solver_docs_in_sync_with_solve_stats_and_knobs():
+    """docs/api.md must document every SolveStats field and the PR 10
+    solver knobs exactly as the code exposes them; architecture.md must
+    carry the matching solver-section narrative."""
+    import dataclasses
+    import inspect
+
+    from repro.core import SolveStats, solve_program_windowed
+    from repro.cluster.capacity import plan_capacity
+
+    api = (REPO / "docs" / "api.md").read_text(encoding="utf-8")
+    arch = (REPO / "docs" / "architecture.md").read_text(encoding="utf-8")
+
+    for f in dataclasses.fields(SolveStats):
+        assert f.name in api, f"docs/api.md is missing SolveStats.{f.name}"
+    for token in ("last_solve_stats", "solve_stats",
+                  'fixpoint="windowed"', "solve_program_windowed",
+                  "window_program", "n_windows", "window_events",
+                  "warm_ladder=True", "--warm-ladder", "warm_hits",
+                  "unjustified_slots"):
+        assert token in api, f"docs/api.md is missing {token}"
+    # the documented knobs exist with those exact names
+    sig = inspect.signature(solve_program_windowed)
+    assert {"n_windows", "window_events"} <= set(sig.parameters)
+    assert "warm_ladder" in inspect.signature(plan_capacity).parameters
+
+    for token in ("Active-set sweeps", "window_program",
+                  "solve_program_windowed", "warm_ladder=True",
+                  "SolveStats", "unjustified_slots", "warm_hits"):
+        assert token in arch, f"docs/architecture.md is missing {token}"

@@ -421,3 +421,94 @@ def test_fleet_run_with_explicit_seeds_matches_loop():
                                    rtol=1e-9, atol=1e-6)
     with pytest.raises(ValueError, match="seeds"):
         fleet.run(wl, policy="replicate", seeds=[1, 2])
+
+
+# -- fleet sweep-budget warning dedupe + SolveStats (PR 10 satellites) --------
+def _budget_msgs(caught):
+    return [str(w.message) for w in caught
+            if issubclass(w.category, RuntimeWarning)
+            and "sweep budget" in str(w.message)]
+
+
+def test_fleet_vectorized_budget_warning_fires_once_with_context():
+    fleet = DeviceFleet.homogeneous(3)
+    wl = (WorkloadSpec().writes(n=2000, qd=4, zone=7)
+          .resets(n=100, occupancy=1.0, nzones=50, io_ctx=OpType.WRITE))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fres = fleet.run(wl, policy="replicate", backend="vectorized",
+                         jitter=False, sweeps=1)
+    msgs = _budget_msgs(caught)
+    assert len(msgs) == 1                       # one per fleet call, not per device
+    assert "sweeps_used=1" in msgs[0] and "budget=1" in msgs[0]
+    assert not fres.converged
+
+
+def test_fleet_loop_path_dedupes_per_device_budget_warnings():
+    # break the registry-identity check so DeviceFleet.run takes the
+    # per-device loop: each device's solve warns, the fleet collapses
+    # them into one aggregated message naming the offending indices
+    import repro.core.device as device_mod
+    orig = device_mod._BACKENDS["vectorized"]
+    device_mod._BACKENDS["vectorized"] = \
+        lambda *a, **k: orig(*a, **k)
+    try:
+        fleet = DeviceFleet.homogeneous(3)
+        wl = (WorkloadSpec().writes(n=2000, qd=4, zone=7)
+              .resets(n=100, occupancy=1.0, nzones=50, io_ctx=OpType.WRITE))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            fres = fleet.run(wl, policy="replicate", backend="vectorized",
+                             jitter=False, sweeps=1)
+    finally:
+        device_mod._BACKENDS["vectorized"] = orig
+    msgs = _budget_msgs(caught)
+    assert len(msgs) == 1
+    assert "indices [0, 1, 2]" in msgs[0]
+    assert "sweeps_used=[1, 1, 1]" in msgs[0] and "budget=1" in msgs[0]
+    assert not fres.converged
+
+
+def test_fleet_budget_warning_names_moving_entries():
+    # a genuinely under-converged iterate (issue + svc lower bound) maps
+    # its moving slots back to fleet entry indices
+    from repro.core import chain_program as cp
+    from repro.core.fleet import _warn_fleet_budget
+    traces = [WorkloadSpec().writes(n=500, qd=4, zone=z).build()
+              for z in (0, 1)]
+    specs = [ZNSDeviceSpec()] * 2
+    lats = [LatencyModel()] * 2
+    program = cp.compile_fleet_program(
+        traces, specs, [l.params for l in lats], jitter=False,
+        seeds=[0, 1])
+    svc = program.svc0_flat
+    comp = program.issue_flat + svc             # one-sweep lower bound
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _warn_fleet_budget(program, svc, comp, 1, 1)
+    msgs = _budget_msgs(caught)
+    assert len(msgs) == 1
+    assert "entries (indices [0, 1])" in msgs[0]
+
+
+def test_solve_stats_on_run_results():
+    dev = ZnsDevice()
+    wl = WorkloadSpec().writes(n=9000, qd=4, zone=3)
+    res = dev.run(wl, backend="vectorized", jitter=False)
+    st = res.solve_stats
+    assert st is not None and st.converged and st.sweeps >= 1
+    assert st.driver == "loop"
+    assert len(st.active_blocks) == st.sweeps
+    assert len(st.residuals) == st.sweeps
+    # trajectory is monotone in work: final sweep is a verification pass
+    assert st.residuals[-1] == 0.0
+    assert st.to_json()["sweeps"] == st.sweeps
+    # the event engine has no solver
+    ev = dev.run(WorkloadSpec().writes(n=10), backend="event")
+    assert ev.solve_stats is None
+
+    fleet = DeviceFleet.homogeneous(2)
+    fres = fleet.run(wl, policy="replicate", backend="vectorized",
+                     jitter=False)
+    assert fres.solve_stats is not None and fres.solve_stats.converged
+    assert fres[0].solve_stats is fres.solve_stats
